@@ -1,0 +1,33 @@
+"""Beyond-paper ablation: error feedback + server momentum on FedComLoc-Com.
+
+The paper notes that biased TopK lacks convergence theory inside Scaffnew;
+EF14-style error feedback is the standard remedy for biased compressors —
+this benchmark measures whether it helps empirically at aggressive sparsity
+(K = 5/10%), and whether Polyak server momentum speeds up the rounds axis.
+"""
+
+from repro.core.compressors import TopK
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    data, model, loss_fn, eval_fn = common.mnist_setup()
+    rows = []
+    densities = (0.05, 0.1) if fast else (0.05, 0.1, 0.3)
+    for density in densities:
+        for tag, kw in [("plain", {}),
+                        ("ef", {"error_feedback": True}),
+                        ("mom", {"server_momentum": 0.6}),
+                        ("ef+mom", {"error_feedback": True,
+                                    "server_momentum": 0.6})]:
+            cfg = FedComLocConfig(gamma=0.1, p=0.1, n_clients=20,
+                                  clients_per_round=5, batch_size=32,
+                                  variant="com", **kw)
+            alg = FedComLoc(loss_fn, data, cfg, TopK(density=density))
+            rows.append(common.run_fl(
+                f"beyond_ef/k{int(density*100)}_{tag}", alg, model,
+                eval_fn, rounds, extra={"density": density, "mode": tag}))
+    return rows

@@ -1,0 +1,72 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Each benchmark module exposes ``run(fast: bool) -> list[dict]`` where every
+row carries at least {name, rounds, best_acc, total_mbits, us_per_round}.
+Scale: the paper's 100-client / 500-2500-round experiments are reduced to
+CPU-tractable sizes (same mechanics, same comparisons — absolute numbers
+differ; see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fed_data, server
+from repro.data import dirichlet, synthetic
+from repro.models import small
+
+FAST_ROUNDS = 12
+FULL_ROUNDS = 60
+
+
+@functools.lru_cache(maxsize=8)
+def mnist_setup(n_clients: int = 20, alpha: float = 0.7, seed: int = 0):
+    ds = synthetic.make_mnist_like(n_train=8000, n_test=1000, seed=seed)
+    parts = dirichlet.dirichlet_partition(ds.y_train, n_clients, alpha,
+                                          seed=seed)
+    data = fed_data.from_numpy_partition(ds.x_train, ds.y_train, parts)
+    model = small.MLP(784, 64, 10)
+    loss_fn = small.cross_entropy_loss(model.apply)
+    eval_fn = server.make_eval_fn(model.apply, jnp.asarray(ds.x_test),
+                                  jnp.asarray(ds.y_test))
+    return data, model, loss_fn, eval_fn
+
+
+@functools.lru_cache(maxsize=4)
+def cifar_setup(n_clients: int = 10, alpha: float = 0.7, seed: int = 1):
+    ds = synthetic.make_cifar_like(n_train=6000, n_test=1000, seed=seed)
+    parts = dirichlet.dirichlet_partition(ds.y_train, n_clients, alpha,
+                                          seed=seed)
+    data = fed_data.from_numpy_partition(ds.x_train, ds.y_train, parts)
+    model = small.CNN(3, 10, 32)
+    loss_fn = small.cross_entropy_loss(model.apply)
+    eval_fn = server.make_eval_fn(model.apply, jnp.asarray(ds.x_test),
+                                  jnp.asarray(ds.y_test))
+    return data, model, loss_fn, eval_fn
+
+
+def run_fl(name: str, alg, model, eval_fn, rounds: int, seed: int = 0,
+           extra: dict | None = None) -> dict:
+    t0 = time.time()
+    hist = server.run_federated(
+        alg, model.init(jax.random.PRNGKey(seed)), rounds,
+        jax.random.PRNGKey(seed + 1), eval_fn,
+        eval_every=max(1, rounds // 6))
+    wall = time.time() - t0
+    row = {
+        "name": name,
+        "rounds": rounds,
+        "best_acc": round(hist.best_acc, 4),
+        "final_loss": round(hist.train_loss[-1], 4),
+        "total_mbits": round(alg.meter.total_bits / 1e6, 2),
+        "uplink_mbits": round(alg.meter.uplink_bits / 1e6, 2),
+        "us_per_round": round(wall / rounds * 1e6, 1),
+        "acc_per_gbit": round(hist.best_acc
+                              / max(alg.meter.total_bits / 8e9, 1e-9), 2),
+    }
+    row.update(extra or {})
+    return row

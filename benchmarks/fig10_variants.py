@@ -1,0 +1,24 @@
+"""Paper Figure 10 — FedComLoc-Com vs -Local vs -Global across sparsity."""
+
+from repro.core.compressors import TopK
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    data, model, loss_fn, eval_fn = common.cifar_setup()
+    rows = []
+    densities = (0.1, 0.9) if fast else (0.1, 0.5, 0.9)
+    for density in densities:
+        for variant in ("com", "local", "global"):
+            cfg = FedComLocConfig(gamma=0.05, p=0.1, n_clients=10,
+                                  clients_per_round=5, batch_size=32,
+                                  variant=variant)
+            alg = FedComLoc(loss_fn, data, cfg, TopK(density=density))
+            rows.append(common.run_fl(
+                f"fig10/{variant}_k{int(density*100)}", alg, model,
+                eval_fn, rounds,
+                extra={"variant": variant, "density": density}))
+    return rows

@@ -1,0 +1,27 @@
+"""Paper Appendix B.3 Figure 16 — double compression (TopK then Q_r)."""
+
+from repro.core.compressors import Compose, QuantQr, TopK
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    data, model, loss_fn, eval_fn = common.mnist_setup()
+    rows = []
+    combos = [
+        ("k25_q4", Compose(TopK(0.25), QuantQr(4))),
+        ("k50_q16", Compose(TopK(0.5), QuantQr(16))),
+        ("k25_q32", TopK(density=0.25)),
+        ("k100_q4", QuantQr(r=4)),
+        ("k100_q32", TopK(density=1.0)),
+    ]
+    for name, comp in combos:
+        cfg = FedComLocConfig(gamma=0.1, p=0.1, n_clients=20,
+                              clients_per_round=5, batch_size=32,
+                              variant="com")
+        alg = FedComLoc(loss_fn, data, cfg, comp)
+        rows.append(common.run_fl(f"fig16/{name}", alg, model, eval_fn,
+                                  rounds))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Figure 3 — CNN on FedCIFAR10 (synthetic stand-in): sparsity ratios
+with tuned vs fixed stepsize."""
+
+from repro.core.compressors import Identity, TopK
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = (common.FAST_ROUNDS if fast else common.FULL_ROUNDS)
+    data, model, loss_fn, eval_fn = common.cifar_setup()
+    rows = []
+    # tuned-ish stepsize per density (paper: optimized per K); here a small
+    # grid mimicking the tuned column.
+    gammas = {0.1: 0.1, 0.5: 0.05, 1.0: 0.05}
+    for density in (0.1, 0.5, 1.0):
+        comp = Identity() if density >= 1.0 else TopK(density=density)
+        cfg = FedComLocConfig(gamma=gammas[density], p=0.1, n_clients=10,
+                              clients_per_round=5, batch_size=32,
+                              variant="com" if density < 1.0 else "none")
+        alg = FedComLoc(loss_fn, data, cfg, comp)
+        rows.append(common.run_fl(
+            f"fig3/tuned_k{int(density*100)}", alg, model, eval_fn, rounds,
+            extra={"density": density, "stepsize": "tuned"}))
+    # fixed stepsize column (paper: 0.01 — max feasible for all configs)
+    for density in (0.1, 1.0):
+        comp = Identity() if density >= 1.0 else TopK(density=density)
+        cfg = FedComLocConfig(gamma=0.01, p=0.1, n_clients=10,
+                              clients_per_round=5, batch_size=32,
+                              variant="com" if density < 1.0 else "none")
+        alg = FedComLoc(loss_fn, data, cfg, comp)
+        rows.append(common.run_fl(
+            f"fig3/fixed_k{int(density*100)}", alg, model, eval_fn, rounds,
+            extra={"density": density, "stepsize": "fixed"}))
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Figure 5 / B.2 — Q_r quantization, r in {4, 8, 16, 32}."""
+
+from repro.core.compressors import Identity, QuantQr
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    data, model, loss_fn, eval_fn = common.mnist_setup()
+    rows = []
+    for r_bits in (4, 8, 16, 32):
+        comp = QuantQr(r=r_bits)
+        cfg = FedComLocConfig(gamma=0.1, p=0.1, n_clients=20,
+                              clients_per_round=5, batch_size=32,
+                              variant="com")
+        alg = FedComLoc(loss_fn, data, cfg, comp)
+        rows.append(common.run_fl(f"fig5/quant_r{r_bits}", alg, model,
+                                  eval_fn, rounds, extra={"r": r_bits}))
+    # uncompressed reference
+    cfg = FedComLocConfig(gamma=0.1, p=0.1, n_clients=20,
+                          clients_per_round=5, batch_size=32,
+                          variant="none")
+    alg = FedComLoc(loss_fn, data, cfg, Identity())
+    rows.append(common.run_fl("fig5/dense", alg, model, eval_fn, rounds,
+                              extra={"r": 32}))
+    return rows

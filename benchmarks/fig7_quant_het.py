@@ -1,0 +1,23 @@
+"""Paper Figure 7 / 14 — quantization vs data heterogeneity."""
+
+from repro.core.compressors import QuantQr
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    alphas = (0.1, 0.9) if fast else (0.1, 0.3, 0.7, 0.9)
+    rows = []
+    for r_bits in (8, 16):
+        for alpha in alphas:
+            data, model, loss_fn, eval_fn = common.mnist_setup(alpha=alpha)
+            cfg = FedComLocConfig(gamma=0.1, p=0.1, n_clients=20,
+                                  clients_per_round=5, batch_size=32,
+                                  variant="com")
+            alg = FedComLoc(loss_fn, data, cfg, QuantQr(r=r_bits))
+            rows.append(common.run_fl(
+                f"fig7/r{r_bits}_alpha{alpha}", alg, model, eval_fn, rounds,
+                extra={"r": r_bits, "alpha": alpha}))
+    return rows

@@ -1,0 +1,26 @@
+"""Paper Figure 8 — number of local iterations (communication prob p).
+
+Total cost = rounds x (1 + tau / p) with tau = 0.01 (paper's cost model:
+a communication round costs 1, a local step costs tau)."""
+
+from repro.core.compressors import TopK
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    data, model, loss_fn, eval_fn = common.mnist_setup()
+    rows = []
+    tau = 0.01
+    for p in (0.05, 0.1, 0.2, 0.3, 0.5):
+        cfg = FedComLocConfig(gamma=0.1, p=p, n_clients=20,
+                              clients_per_round=5, batch_size=32,
+                              variant="com")
+        alg = FedComLoc(loss_fn, data, cfg, TopK(density=0.3))
+        row = common.run_fl(f"fig8/p{p}", alg, model, eval_fn, rounds,
+                            extra={"p": p})
+        row["total_cost"] = round(rounds * (1 + tau / p), 2)
+        rows.append(row)
+    return rows

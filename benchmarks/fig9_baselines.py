@@ -1,0 +1,38 @@
+"""Paper Figure 9 — FedComLoc vs FedAvg / sparseFedAvg / Scaffold / FedDyn."""
+
+from repro.core.baselines import FedAvg, FedConfig, FedDyn, Scaffold, \
+    SparseFedAvg
+from repro.core.compressors import Identity, TopK
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    data, model, loss_fn, eval_fn = common.cifar_setup()
+    rows = []
+
+    fed_cfg = FedConfig(gamma=0.1, local_steps=10, n_clients=10,
+                        clients_per_round=5, batch_size=32)
+    fcl_cfg = FedComLocConfig(gamma=0.05, p=0.1, n_clients=10,
+                              clients_per_round=5, batch_size=32,
+                              variant="com")
+
+    algs = {
+        "fig9/fedavg": FedAvg(loss_fn, data, fed_cfg),
+        "fig9/sparse_fedavg_k10": SparseFedAvg(loss_fn, data, fed_cfg,
+                                               density=0.1),
+        "fig9/scaffold": Scaffold(loss_fn, data, fed_cfg),
+        "fig9/feddyn": FedDyn(loss_fn, data, fed_cfg),
+        "fig9/fedcomloc_com_k10": FedComLoc(
+            loss_fn, data, fcl_cfg, TopK(density=0.1)),
+        "fig9/scaffnew": FedComLoc(
+            loss_fn, data,
+            FedComLocConfig(gamma=0.05, p=0.1, n_clients=10,
+                            clients_per_round=5, batch_size=32,
+                            variant="none"), Identity()),
+    }
+    for name, alg in algs.items():
+        rows.append(common.run_fl(name, alg, model, eval_fn, rounds))
+    return rows

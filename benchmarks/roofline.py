@@ -1,0 +1,109 @@
+"""Roofline analysis (deliverable (g)) — reads the dry-run artifacts.
+
+Per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs_total / (chips x 197e12 FLOP/s)
+  memory term     = HLO_bytes_total / (chips x 819e9 B/s)
+  collective term = collective_bytes_total / (chips x 50e9 B/s per link)
+
+HLO flops/bytes from ``compiled.cost_analysis()`` are per-partition; the
+collective bytes are parsed from the partitioned HLO (also per-partition),
+so each term is per-chip time directly.  MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) with D = tokens processed per step.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART_DIR = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+_COLL_KEYS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token x batch
+    "long_500k": 1,
+}
+SHAPE_MULT = {"train_4k": 3.0}   # fwd+bwd ~ 3x fwd FLOPs
+
+
+def analyze(rec: dict) -> dict:
+    if rec.get("status") != "ok":
+        return dict(rec)
+    coll = sum(rec["collective_bytes"].get(k, 0) for k in _COLL_KEYS)
+    flops = rec["flops"]                    # per partition
+    bytes_ = rec["bytes_accessed"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    tokens = SHAPE_TOKENS.get(rec["shape"], 1)
+    mult = SHAPE_MULT.get(rec["shape"], 1.0)
+    model_flops = (mult * 2.0 * rec["model"]["active_params"] * tokens
+                   / rec["n_devices"])
+    useful = model_flops / flops if flops else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": "ok",
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": model_flops,
+        "useful_flops_ratio": useful,
+        "hbm_gib_per_dev": (rec["per_device_memory"]["argument_bytes"]
+                            + rec["per_device_memory"]["output_bytes"]
+                            + rec["per_device_memory"]["temp_bytes"]
+                            - rec["per_device_memory"]["alias_bytes"])
+        / 2**30,
+        "collective_gb": coll / 1e9,
+    }
+
+
+def load_all(mesh_tag: str = "singlepod") -> list[dict]:
+    rows = []
+    for f in sorted(ART_DIR.glob(f"*__{mesh_tag}.json")):
+        rows.append(analyze(json.loads(f.read_text())))
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    out = [f"{'arch':28s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'coll':>9s} {'bound':>8s} {'useful':>7s} {'HBM GiB':>8s}"]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"{r['arch']:28s} {r['shape']:12s} "
+                       f"-- {r.get('status')}: {r.get('reason', r.get('error', ''))[:40]}")
+            continue
+        out.append(
+            f"{r['arch']:28s} {r['shape']:12s} "
+            f"{r['t_compute_s']*1e3:8.2f}m {r['t_memory_s']*1e3:8.2f}m "
+            f"{r['t_collective_s']*1e3:8.2f}m {r['bottleneck']:>8s} "
+            f"{r['useful_flops_ratio']:7.2f} {r['hbm_gib_per_dev']:8.2f}")
+    return "\n".join(out)
+
+
+def run(fast: bool = False):
+    rows = load_all()
+    print(format_table(rows))
+    return [
+        {"name": f"roofline/{r['arch']}__{r['shape']}",
+         "us_per_round": round(max(r["t_compute_s"], r["t_memory_s"],
+                                   r["t_collective_s"]) * 1e6, 1),
+         "best_acc": "", "total_mbits": "",
+         "bottleneck": r["bottleneck"],
+         "useful": round(r["useful_flops_ratio"], 3)}
+        for r in rows if r.get("status") == "ok"
+    ]
+
+
+if __name__ == "__main__":
+    print(format_table(load_all()))

@@ -1,0 +1,67 @@
+"""Benchmark runner — one module per paper table/figure (deliverable (d)).
+
+  PYTHONPATH=src python -m benchmarks.run            # default scale
+  PYTHONPATH=src python -m benchmarks.run --fast     # quick pass
+  PYTHONPATH=src python -m benchmarks.run --only table1_topk fig5_quant
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = wall-time per FL
+round; derived = best test accuracy or the benchmark's headline metric) and
+writes the full rows to benchmarks/artifacts/results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import time
+import traceback
+from pathlib import Path
+
+MODULES = [
+    "table1_topk",
+    "table2_dirichlet",
+    "fig3_cifar",
+    "fig5_quant",
+    "fig7_quant_het",
+    "fig8_local_iters",
+    "fig9_baselines",
+    "fig10_variants",
+    "fig16_double",
+    "beyond_ef",
+    "roofline",
+]
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    mods = args.only if args.only else MODULES
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name in mods:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=args.fast)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name},ERROR,")
+            continue
+        for r in rows:
+            derived = r.get("best_acc", r.get("useful", ""))
+            print(f"{r['name']},{r.get('us_per_round', '')},{derived}")
+            all_rows.append(r)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "results.json").write_text(json.dumps(all_rows, indent=2))
+
+
+if __name__ == "__main__":
+    main()

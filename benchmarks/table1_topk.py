@@ -1,0 +1,26 @@
+"""Paper Table 1 / Figure 1 — test accuracy across TopK density ratios on
+FedMNIST (synthetic stand-in), FedComLoc-Com."""
+
+from repro.core.compressors import Identity, TopK
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    data, model, loss_fn, eval_fn = common.mnist_setup()
+    rows = []
+    for density in (1.0, 0.1, 0.3, 0.5, 0.7, 0.9):
+        comp = Identity() if density >= 1.0 else TopK(density=density)
+        cfg = FedComLocConfig(gamma=0.1, p=0.1, n_clients=20,
+                              clients_per_round=5, batch_size=32,
+                              variant="com" if density < 1.0 else "none")
+        alg = FedComLoc(loss_fn, data, cfg, comp)
+        rows.append(common.run_fl(f"table1/topk_{int(density*100)}pct",
+                                  alg, model, eval_fn, rounds,
+                                  extra={"density": density}))
+    base = next(r for r in rows if r["density"] == 1.0)["best_acc"]
+    for r in rows:
+        r["acc_drop_pct"] = round(100 * (base - r["best_acc"]), 2)
+    return rows

@@ -1,0 +1,26 @@
+"""Paper Table 2 / Figure 2 — heterogeneity (Dirichlet alpha) x sparsity."""
+
+from repro.core.compressors import Identity, TopK
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    alphas = (0.1, 0.7) if fast else (0.1, 0.3, 0.7, 1.0)
+    rows = []
+    for alpha in alphas:
+        data, model, loss_fn, eval_fn = common.mnist_setup(alpha=alpha)
+        for density in (0.1, 0.5, 1.0):
+            comp = Identity() if density >= 1.0 else TopK(density=density)
+            cfg = FedComLocConfig(
+                gamma=0.1, p=0.1, n_clients=20, clients_per_round=5,
+                batch_size=32,
+                variant="com" if density < 1.0 else "none")
+            alg = FedComLoc(loss_fn, data, cfg, comp)
+            rows.append(common.run_fl(
+                f"table2/alpha{alpha}_k{int(density*100)}",
+                alg, model, eval_fn, rounds,
+                extra={"alpha": alpha, "density": density}))
+    return rows

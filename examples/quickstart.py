@@ -1,0 +1,51 @@
+"""Quickstart — FedComLoc in ~40 lines.
+
+Trains the paper's 3-layer MLP on synthetic FedMNIST with TopK-compressed
+uplinks (FedComLoc-Com, the paper's default), printing accuracy and the
+communicated bits after every few rounds.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fed_data, server
+from repro.core.compressors import TopK
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+from repro.data import dirichlet, synthetic
+from repro.models import small
+
+
+def main() -> None:
+    # 1. federated data: Dirichlet(0.7)-heterogeneous shards over 20 clients
+    ds = synthetic.make_mnist_like(n_train=8000, n_test=1000)
+    parts = dirichlet.dirichlet_partition(ds.y_train, n_clients=20,
+                                          alpha=0.7, seed=0)
+    data = fed_data.from_numpy_partition(ds.x_train, ds.y_train, parts)
+
+    # 2. the paper's FedMNIST model + loss
+    model = small.MLP(784, 64, 10)
+    loss_fn = small.cross_entropy_loss(model.apply)
+
+    # 3. FedComLoc-Com: TopK(30%) uplink compression, p = 0.1
+    #    (expected 10 local steps per communication round)
+    cfg = FedComLocConfig(gamma=0.1, p=0.1, n_clients=20,
+                          clients_per_round=5, batch_size=32,
+                          variant="com")
+    alg = FedComLoc(loss_fn, data, cfg, TopK(density=0.3))
+
+    # 4. run 40 rounds with centralized eval
+    eval_fn = server.make_eval_fn(model.apply, jnp.asarray(ds.x_test),
+                                  jnp.asarray(ds.y_test))
+    hist = server.run_federated(alg, model.init(jax.random.PRNGKey(0)),
+                                num_rounds=40, key=jax.random.PRNGKey(1),
+                                eval_fn=eval_fn, eval_every=5, log_every=5)
+    print(f"\nbest accuracy {hist.best_acc:.4f} "
+          f"after {alg.meter.total_bits / 1e6:.0f} Mbits "
+          f"({alg.meter.uplink_bits / 1e6:.0f} up / "
+          f"{alg.meter.downlink_bits / 1e6:.0f} down)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Pytree checkpointing without external deps (.npz + JSON treedef).
+
+Round-resumable: ``save(path, tree, meta)`` / ``load(path)`` round-trips any
+nested dict/tuple/NamedTuple-free pytree of arrays (FL states are plain
+dicts + arrays).  Writes atomically (tmp + rename).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Tuple[dict, list]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    return arrays, treedef
+
+
+def save(path: str | Path, tree: PyTree, meta: Optional[dict] = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays, treedef = _flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "meta": meta or {},
+        "n_leaves": len(arrays),
+    }
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __manifest__=json.dumps(payload), **arrays)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp,
+                   path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+
+
+def load(path: str | Path, like: Optional[PyTree] = None
+         ) -> Tuple[PyTree, dict]:
+    """Load a checkpoint.  ``like`` supplies the treedef (required unless the
+    tree is reconstructed by caller from the flat leaves)."""
+    with np.load(Path(path), allow_pickle=False) as z:
+        manifest = json.loads(str(z["__manifest__"]))
+        leaves = [jnp.asarray(z[f"leaf_{i}"])
+                  for i in range(manifest["n_leaves"])]
+    if like is not None:
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest["meta"]
+    return leaves, manifest["meta"]

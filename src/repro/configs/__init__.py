@@ -1,0 +1,34 @@
+"""Architecture registry: ``get_spec("mixtral-8x7b")`` / ``--arch`` ids."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ALL_SHAPES, SHAPES, ArchSpec, InputShape, reduced
+
+_MODULES = {
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "rwkv6-3b": "rwkv6_3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "gemma2-9b": "gemma2_9b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "qwen2-7b": "qwen2_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "gemma3-4b": "gemma3_4b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_spec(arch_id: str) -> ArchSpec:
+    try:
+        mod = _MODULES[arch_id]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{mod}").SPEC
+
+
+def all_specs() -> dict[str, ArchSpec]:
+    return {a: get_spec(a) for a in ARCH_IDS}

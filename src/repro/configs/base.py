@@ -1,0 +1,88 @@
+"""Architecture spec plumbing: full configs + reduced smoke variants.
+
+Every assigned architecture gets a module defining ``SPEC`` (exact published
+dimensions, cited) — selectable via ``--arch <id>`` in the launchers.
+``reduced()`` derives the family-preserving small variant used by the CPU
+smoke tests (<= 2 layers, d_model <= 512, <= 4 experts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.encdec import EncDecConfig
+from repro.models.moe import MoEConfig
+from repro.models.transformer import ModelConfig
+
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    citation: str
+    model: Any                     # ModelConfig | EncDecConfig
+    modality: str = "text"         # text | audio | vlm
+    skip_shapes: Tuple[str, ...] = ()
+    skip_reason: str = ""
+    n_prefix_tokens: int = 0       # vision/audio stub tokens prepended
+
+    @property
+    def is_encdec(self) -> bool:
+        return isinstance(self.model, EncDecConfig)
+
+    def runs(self, shape: str) -> bool:
+        return shape not in self.skip_shapes
+
+
+def reduced(spec: ArchSpec) -> ArchSpec:
+    """Family-preserving smoke-test variant (2 layers, d<=512, <=4 experts)."""
+    m = spec.model
+    if isinstance(m, EncDecConfig):
+        small = dataclasses.replace(
+            m, n_enc_layers=1, n_dec_layers=1, d_model=128, n_heads=4,
+            n_kv_heads=4, head_dim=32, d_ff=256, vocab=512,
+            dtype=jnp.float32)
+    else:
+        # keep pattern + feature flags, shrink dims; head_dim kept modest
+        moe_cfg = None
+        if m.moe is not None:
+            moe_cfg = dataclasses.replace(
+                m.moe, n_experts=min(4, m.moe.n_experts),
+                topk=min(m.moe.topk, 2), group_size=64,
+                capacity_factor=2.0)
+        n_layers = max(2, min(len(m.block_pattern), 4)) \
+            if len(m.block_pattern) > 1 else 2
+        d_model = 256 if m.block_type(0) != "rwkv" else 128
+        small = dataclasses.replace(
+            m, n_layers=n_layers, d_model=d_model, n_heads=4,
+            n_kv_heads=max(1, min(m.n_kv_heads, 2)),
+            head_dim=64, d_ff=512, vocab=512,
+            window=(16 if m.window else None),
+            long_context_cap=(16 if m.long_context_cap else None),
+            moe=moe_cfg, dtype=jnp.float32)
+        if m.mrope_sections is not None:
+            small = dataclasses.replace(small, mrope_sections=(16, 8, 8))
+    return dataclasses.replace(
+        spec, model=small,
+        n_prefix_tokens=min(16, spec.n_prefix_tokens))

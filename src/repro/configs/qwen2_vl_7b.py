@@ -1,0 +1,39 @@
+"""Qwen2-VL-7B [arXiv:2409.12191] — VLM backbone with M-RoPE.
+
+Language decoder identical to Qwen2-7B (28L, d 3584, 28H GQA kv=4,
+d_ff 18944, vocab 152064) plus multimodal rotary embeddings with
+(temporal, height, width) = (16, 24, 24) frequency sections.  The ViT
+vision encoder + projector are a stub per the carve-out: ``input_specs``
+provides 256 precomputed patch embeddings prepended to the text tokens.
+long_500k skipped (pure full attention; DESIGN.md §4).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models.transformer import ModelConfig
+
+SPEC = ArchSpec(
+    arch_id="qwen2-vl-7b",
+    family="vlm",
+    modality="vlm",
+    citation="arXiv:2409.12191",
+    skip_shapes=("long_500k",),
+    skip_reason="pure full attention; no native sub-quadratic variant",
+    n_prefix_tokens=256,
+    model=ModelConfig(
+        name="qwen2-vl-7b",
+        n_layers=28,
+        d_model=3584,
+        n_heads=28,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=18_944,
+        vocab=152_064,
+        qkv_bias=True,
+        tie_embeddings=False,
+        rope_theta=1e6,
+        mrope_sections=(16, 24, 24),
+        dtype=jnp.bfloat16,
+    ),
+)

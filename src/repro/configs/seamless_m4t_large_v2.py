@@ -1,0 +1,38 @@
+"""SeamlessM4T-large-v2 [arXiv:2308.11596] — multimodal encoder-decoder
+backbone (12 encoder + 12 decoder layers = 24L total).
+
+d_model 1024, 16 heads (MHA, kv=16, head_dim 64), d_ff 8192, vocab 256206.
+The speech frontend (mel + conv feature extractor) is a stub per the
+assignment carve-out: the encoder consumes precomputed frame embeddings.
+Decode shapes exercise the decoder with a seq_len self-attention cache;
+long_500k skipped (full-attention enc-dec; speech segments never reach
+500k tokens; DESIGN.md §4).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models.encdec import EncDecConfig
+
+SPEC = ArchSpec(
+    arch_id="seamless-m4t-large-v2",
+    family="audio",
+    modality="audio",
+    citation="arXiv:2308.11596",
+    skip_shapes=("long_500k",),
+    skip_reason="full-attention encoder-decoder; 500k decode inapplicable",
+    n_prefix_tokens=0,
+    model=EncDecConfig(
+        name="seamless-m4t-large-v2",
+        n_enc_layers=12,
+        n_dec_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=8192,
+        vocab=256_206,
+        act="relu",
+        dtype=jnp.bfloat16,
+    ),
+)

@@ -1,0 +1,254 @@
+"""Baseline FL algorithms the paper compares against (§4.7, Fig. 9).
+
+* ``FedAvg``       (McMahan et al., 2016) — plain local SGD + averaging.
+* ``SparseFedAvg`` — FedAvg with TopK-compressed uplink weights.
+* ``Scaffold``     (Karimireddy et al., 2020) — control variates c, c_i
+  (option II update), server stepsize 1.
+* ``FedDyn``       (Acar et al., 2021; the Fed-Dyn curve in Fig. 9) —
+  dynamic regularisation with server-side correction h.
+
+All share the jitted local-SGD scaffolding and the CommMeter accounting so
+bits-axes are comparable with FedComLoc.  Scaffnew is FedComLoc with
+variant="none" and the Identity compressor (see fedcomloc.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm
+from repro.core.compressors import Compressor, Identity
+from repro.core.fed_data import FederatedData
+
+PyTree = Any
+LossFn = Callable[[PyTree, jax.Array, jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    gamma: float = 0.1            # local stepsize
+    local_steps: int = 10
+    n_clients: int = 100
+    clients_per_round: int = 10
+    batch_size: int = 32
+    alpha: float = 0.1            # FedDyn regularisation strength
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def _local_sgd(loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
+               x0_stacked: PyTree, clients: jax.Array, key: jax.Array,
+               grad_adjust: Callable[[PyTree, int], PyTree] | None = None):
+    """Run cfg.local_steps of minibatch SGD on each sampled client.
+
+    grad_adjust(g, client_slot) -> adjusted gradient (vmapped per client).
+    Returns (x_final stacked, mean train loss).
+    """
+    s = cfg.clients_per_round
+
+    def step(carry, k_step):
+        x_i, loss_acc = carry
+
+        def one_client(x_c, client, kc, slot):
+            xb, yb = data.sample_batch(kc, client, cfg.batch_size)
+            loss, g = jax.value_and_grad(loss_fn)(x_c, xb, yb)
+            if grad_adjust is not None:
+                g = grad_adjust(g, slot, x_c)
+            x_new = _tmap(lambda xc, gc: xc - cfg.gamma * gc, x_c, g)
+            return x_new, loss
+
+        keys = jax.random.split(k_step, s)
+        x_i, losses = jax.vmap(one_client)(
+            x_i, clients, keys, jnp.arange(s))
+        return (x_i, loss_acc + losses.mean()), None
+
+    step_keys = jax.random.split(key, cfg.local_steps)
+    (x_fin, loss_sum), _ = jax.lax.scan(step, (x0_stacked, jnp.zeros(())),
+                                        step_keys)
+    return x_fin, loss_sum / cfg.local_steps
+
+
+def _broadcast(x: PyTree, s: int) -> PyTree:
+    return _tmap(lambda p: jnp.broadcast_to(p, (s,) + p.shape), x)
+
+
+# --------------------------------------------------------------------------- #
+# FedAvg / SparseFedAvg
+# --------------------------------------------------------------------------- #
+
+class FedAvgState(NamedTuple):
+    x: PyTree
+    round: jax.Array
+
+
+class FedAvg:
+    def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
+                 compressor: Compressor | None = None):
+        self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
+        self.comp = compressor if compressor is not None else Identity()
+        self.meter = comm.CommMeter()
+        self._round = jax.jit(self._round_impl)
+
+    def init(self, params0: PyTree) -> FedAvgState:
+        return FedAvgState(x=params0, round=jnp.zeros((), jnp.int32))
+
+    def _round_impl(self, state: FedAvgState, key: jax.Array):
+        cfg = self.cfg
+        k_sample, k_local, k_comp = jax.random.split(key, 3)
+        clients = jax.random.choice(k_sample, cfg.n_clients,
+                                    (cfg.clients_per_round,), replace=False)
+        x0 = _broadcast(state.x, cfg.clients_per_round)
+        x_fin, loss = _local_sgd(self.loss_fn, self.data, cfg, x0, clients,
+                                 k_local)
+        comp_keys = jax.random.split(k_comp, cfg.clients_per_round)
+        x_fin = jax.vmap(self.comp.compress)(x_fin, comp_keys)
+        x_new = _tmap(lambda t: t.mean(axis=0), x_fin)
+        return (FedAvgState(x=x_new, round=state.round + 1),
+                {"train_loss": loss})
+
+    def round(self, state, key):
+        state, metrics = self._round(state, key)
+        dense = Identity().bits(state.x)
+        s = self.cfg.clients_per_round
+        self.meter.record_round(uplink_bits=s * self.comp.bits(state.x),
+                                downlink_bits=s * dense)
+        return state, {k: float(v) for k, v in metrics.items()}
+
+
+def SparseFedAvg(loss_fn, data, cfg, density: float = 0.1):
+    from repro.core.compressors import TopK
+    return FedAvg(loss_fn, data, cfg, compressor=TopK(density=density))
+
+
+# --------------------------------------------------------------------------- #
+# Scaffold (option II)
+# --------------------------------------------------------------------------- #
+
+class ScaffoldState(NamedTuple):
+    x: PyTree
+    c: PyTree        # server control variate
+    ci: PyTree       # per-client control variates, stacked
+    round: jax.Array
+
+
+class Scaffold:
+    def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig):
+        self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
+        self.meter = comm.CommMeter()
+        self._round = jax.jit(self._round_impl)
+
+    def init(self, params0: PyTree) -> ScaffoldState:
+        zeros = _tmap(jnp.zeros_like, params0)
+        ci = _tmap(lambda p: jnp.zeros((self.cfg.n_clients,) + p.shape,
+                                       p.dtype), params0)
+        return ScaffoldState(x=params0, c=zeros, ci=ci,
+                             round=jnp.zeros((), jnp.int32))
+
+    def _round_impl(self, state: ScaffoldState, key: jax.Array):
+        cfg = self.cfg
+        k_sample, k_local = jax.random.split(key)
+        s = cfg.clients_per_round
+        clients = jax.random.choice(k_sample, cfg.n_clients, (s,),
+                                    replace=False)
+        ci_s = _tmap(lambda c: c[clients], state.ci)
+        x0 = _broadcast(state.x, s)
+
+        def adjust(g, slot, x_c):
+            return _tmap(lambda gc, cic, cc: gc - cic + cc,
+                         g, _tmap(lambda c: c[slot], ci_s), state.c)
+
+        x_fin, loss = _local_sgd(self.loss_fn, self.data, cfg, x0, clients,
+                                 k_local, grad_adjust=adjust)
+
+        # option II: ci+ = ci - c + (x - y_i) / (K * gamma)
+        coef = 1.0 / (cfg.local_steps * cfg.gamma)
+        ci_new = _tmap(
+            lambda cic, cc, xs, yf: cic - cc[None] + coef * (xs - yf),
+            ci_s, state.c, x0, x_fin)
+        dx = _tmap(lambda yf, xs: (yf - xs).mean(axis=0), x_fin, x0)
+        dc = _tmap(lambda cn, co: (cn - co).mean(axis=0), ci_new, ci_s)
+        x_new = _tmap(lambda x_, d: x_ + d, state.x, dx)
+        c_new = _tmap(lambda c_, d: c_ + (s / cfg.n_clients) * d,
+                      state.c, dc)
+        ci_all = _tmap(lambda all_, upd: all_.at[clients].set(upd),
+                       state.ci, ci_new)
+        return (ScaffoldState(x=x_new, c=c_new, ci=ci_all,
+                              round=state.round + 1),
+                {"train_loss": loss})
+
+    def round(self, state, key):
+        state, metrics = self._round(state, key)
+        # Scaffold communicates both the model and the control variate.
+        dense = Identity().bits(state.x)
+        s = self.cfg.clients_per_round
+        self.meter.record_round(uplink_bits=2 * s * dense,
+                                downlink_bits=2 * s * dense)
+        return state, {k: float(v) for k, v in metrics.items()}
+
+
+# --------------------------------------------------------------------------- #
+# FedDyn
+# --------------------------------------------------------------------------- #
+
+class FedDynState(NamedTuple):
+    x: PyTree
+    h: PyTree        # server correction
+    grads: PyTree    # per-client dual variables, stacked
+    round: jax.Array
+
+
+class FedDyn:
+    def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig):
+        self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
+        self.meter = comm.CommMeter()
+        self._round = jax.jit(self._round_impl)
+
+    def init(self, params0: PyTree) -> FedDynState:
+        zeros = _tmap(jnp.zeros_like, params0)
+        g = _tmap(lambda p: jnp.zeros((self.cfg.n_clients,) + p.shape,
+                                      p.dtype), params0)
+        return FedDynState(x=params0, h=zeros, grads=g,
+                           round=jnp.zeros((), jnp.int32))
+
+    def _round_impl(self, state: FedDynState, key: jax.Array):
+        cfg = self.cfg
+        k_sample, k_local = jax.random.split(key)
+        s = cfg.clients_per_round
+        clients = jax.random.choice(k_sample, cfg.n_clients, (s,),
+                                    replace=False)
+        g_s = _tmap(lambda g: g[clients], state.grads)
+        x0 = _broadcast(state.x, s)
+
+        def adjust(g, slot, x_c):
+            gp = _tmap(lambda gg: gg[slot], g_s)
+            return _tmap(
+                lambda gc, gpc, xc, xs: gc - gpc + cfg.alpha * (xc - xs),
+                g, gp, x_c, state.x)
+
+        x_fin, loss = _local_sgd(self.loss_fn, self.data, cfg, x0, clients,
+                                 k_local, grad_adjust=adjust)
+        g_new = _tmap(lambda gp, yf, xs: gp - cfg.alpha * (yf - xs),
+                      g_s, x_fin, x0)
+        grads_all = _tmap(lambda all_, upd: all_.at[clients].set(upd),
+                          state.grads, g_new)
+        h_new = _tmap(
+            lambda h_, yf, xs: h_ - cfg.alpha * (1.0 / cfg.n_clients)
+            * (yf - xs).sum(axis=0), state.h, x_fin, x0)
+        x_new = _tmap(lambda yf, h_: yf.mean(axis=0) - h_ / cfg.alpha,
+                      x_fin, h_new)
+        return (FedDynState(x=x_new, h=h_new, grads=grads_all,
+                            round=state.round + 1),
+                {"train_loss": loss})
+
+    def round(self, state, key):
+        state, metrics = self._round(state, key)
+        dense = Identity().bits(state.x)
+        s = self.cfg.clients_per_round
+        self.meter.record_round(uplink_bits=s * dense, downlink_bits=s * dense)
+        return state, {k: float(v) for k, v in metrics.items()}

@@ -1,0 +1,46 @@
+"""Communication accounting (the paper's "communicated bits" x-axes).
+
+The FL simulator does dense arithmetic (compression zeroes / quantizes
+values in place); the *bits actually on the wire* are what the paper plots,
+so we account them exactly:
+
+* uncompressed tensor: 32 bits / scalar;
+* TopK: (32 + 32) bits per kept coordinate (value + index);
+* Q_r: (1 + r) bits per scalar (sign + level) + 32 bits per-tensor norm;
+* TopK + Q_r: (32 + 1 + r) per kept coordinate + norm.
+
+Uplink (client -> server) and downlink (server -> client) are tracked
+separately — FedComLoc-Com compresses only uplink, FedComLoc-Global only
+downlink, FedComLoc-Local neither.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class CommMeter:
+    uplink_bits: float = 0.0
+    downlink_bits: float = 0.0
+    rounds: int = 0
+
+    @property
+    def total_bits(self) -> float:
+        return self.uplink_bits + self.downlink_bits
+
+    def record_round(self, *, uplink_bits: float, downlink_bits: float) -> None:
+        self.uplink_bits += uplink_bits
+        self.downlink_bits += downlink_bits
+        self.rounds += 1
+
+    def snapshot(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "uplink_bits": self.uplink_bits,
+            "downlink_bits": self.downlink_bits,
+            "total_bits": self.total_bits,
+        }

@@ -1,0 +1,204 @@
+"""Compression operators (paper §3.1).
+
+All compressors operate on pytrees of arrays. Semantics follow the paper:
+
+* ``TopK`` (Definition 3.1) — keep the K largest-magnitude entries, zero the
+  rest.  The paper parameterises by the *density ratio* (fraction of nonzeros
+  kept), so we expose ``density`` in (0, 1].  Biased compressor.
+* ``QuantQr`` (Definition 3.2) — QSGD-style binary quantization with ``r``
+  bits: x -> ||x||_2 * sgn(x_i) * xi_i where xi_i stochastically rounds
+  |x_i|/||x||_2 onto the uniform 2^r-level grid.  Unbiased.
+* ``Compose`` (Appendix B.3) — TopK followed by quantization of the
+  survivors ("double compression").
+* ``Identity`` — no-op; FedComLoc with Identity is exactly Scaffnew.
+
+Each compressor reports the number of bits needed to transmit its output
+(``bits(tree)``), which drives the paper's communicated-bits x-axes.
+
+Two granularities are supported:
+
+* ``scope="tensor"`` (default) — TopK / norm computed per leaf tensor. This is
+  what practical FL systems (and FedLab-style implementations) do.
+* ``scope="global"`` — the pytree is flattened into one vector first, matching
+  the mathematical Definition 3.1 over x in R^d exactly.
+
+The hot inner ops are routed through :mod:`repro.kernels.ops` which dispatches
+to Pallas TPU kernels on TPU and to the jnp reference elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+PyTree = Any
+
+FLOAT_BITS = 32  # uncompressed scalar payload, as accounted in the paper
+INDEX_BITS = 32  # index payload for sparse (value, index) encoding
+
+
+def _tree_size(tree: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+class Compressor:
+    """Base class. Subclasses implement ``compress`` and ``bits``."""
+
+    #: True if E[C(x)] = x.
+    unbiased: bool = False
+
+    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None) -> PyTree:
+        raise NotImplementedError
+
+    def bits(self, tree: PyTree) -> float:
+        """Bits to transmit C(tree) (values + any indices / norms)."""
+        raise NotImplementedError
+
+    def __call__(self, tree: PyTree, rng: Optional[jax.Array] = None) -> PyTree:
+        return self.compress(tree, rng)
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    unbiased = True
+
+    def compress(self, tree: PyTree, rng=None) -> PyTree:
+        return tree
+
+    def bits(self, tree: PyTree) -> float:
+        return float(_tree_size(tree)) * FLOAT_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Keep the ``density`` fraction of largest-|.| entries (Def. 3.1)."""
+
+    density: float = 0.1
+    scope: str = "tensor"  # "tensor" | "global"
+
+    def __post_init__(self):
+        if not (0.0 < self.density <= 1.0):
+            raise ValueError(f"density must be in (0, 1], got {self.density}")
+        if self.scope not in ("tensor", "global"):
+            raise ValueError(f"unknown scope {self.scope!r}")
+
+    def _k(self, size: int) -> int:
+        return max(1, min(size, int(round(self.density * size))))
+
+    def compress(self, tree: PyTree, rng=None) -> PyTree:
+        if self.density >= 1.0:
+            return tree
+        if self.scope == "global":
+            leaves, treedef = jax.tree_util.tree_flatten(tree)
+            flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+            out = kops.topk_mask(flat, self._k(flat.size))
+            parts, off = [], 0
+            for l in leaves:
+                parts.append(out[off:off + l.size].reshape(l.shape).astype(l.dtype))
+                off += l.size
+            return jax.tree_util.tree_unflatten(treedef, parts)
+        return jax.tree_util.tree_map(
+            lambda x: kops.topk_mask(x.reshape(-1), self._k(x.size))
+            .reshape(x.shape).astype(x.dtype),
+            tree,
+        )
+
+    def bits(self, tree: PyTree) -> float:
+        # (value, index) pairs for the kept coordinates.
+        if self.scope == "global":
+            k = self._k(_tree_size(tree))
+            return float(k) * (FLOAT_BITS + INDEX_BITS)
+        total = 0.0
+        for x in jax.tree_util.tree_leaves(tree):
+            total += self._k(x.size) * (FLOAT_BITS + INDEX_BITS)
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantQr(Compressor):
+    """QSGD binary quantization with ``r`` bits (Def. 3.2). Unbiased."""
+
+    r: int = 8
+    scope: str = "tensor"
+
+    unbiased = True
+
+    def __post_init__(self):
+        if self.r <= 0:
+            raise ValueError("r must be positive")
+
+    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None) -> PyTree:
+        if rng is None:
+            raise ValueError("QuantQr requires an rng key (stochastic rounding)")
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(rng, len(leaves))
+        if self.scope == "global":
+            flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+            out = kops.quantize_qr(flat, self.r, keys[0])
+            parts, off = [], 0
+            for l in leaves:
+                parts.append(out[off:off + l.size].reshape(l.shape).astype(l.dtype))
+                off += l.size
+            return jax.tree_util.tree_unflatten(treedef, parts)
+        new = [
+            kops.quantize_qr(l.reshape(-1), self.r, k).reshape(l.shape).astype(l.dtype)
+            for l, k in zip(leaves, keys)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, new)
+
+    def bits(self, tree: PyTree) -> float:
+        # sign + r-bit level per scalar, + one fp32 norm per tensor (or global).
+        n_tensors = 1 if self.scope == "global" else len(jax.tree_util.tree_leaves(tree))
+        return float(_tree_size(tree)) * (1 + self.r) + n_tensors * FLOAT_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class Compose(Compressor):
+    """Apply ``first`` then ``second`` (paper Appendix B.3: TopK -> Q_r)."""
+
+    first: Compressor = dataclasses.field(default_factory=lambda: TopK(0.25))
+    second: Compressor = dataclasses.field(default_factory=lambda: QuantQr(4))
+
+    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None) -> PyTree:
+        if rng is not None:
+            k1, k2 = jax.random.split(rng)
+        else:
+            k1 = k2 = None
+        return self.second.compress(self.first.compress(tree, k1), k2)
+
+    def bits(self, tree: PyTree) -> float:
+        # TopK -> Q_r: transmit k indices + k quantized values.
+        if isinstance(self.first, TopK) and isinstance(self.second, QuantQr):
+            if self.first.scope == "global":
+                k = self.first._k(_tree_size(tree))
+                return float(k) * (INDEX_BITS + 1 + self.second.r) + FLOAT_BITS
+            total = 0.0
+            for x in jax.tree_util.tree_leaves(tree):
+                k = self.first._k(x.size)
+                total += k * (INDEX_BITS + 1 + self.second.r) + FLOAT_BITS
+            return total
+        return min(self.first.bits(tree), self.second.bits(tree))
+
+
+_REGISTRY: dict[str, Callable[..., Compressor]] = {
+    "identity": Identity,
+    "none": Identity,
+    "topk": TopK,
+    "quant": QuantQr,
+    "qr": QuantQr,
+    "topk+quant": Compose,
+}
+
+
+def make_compressor(name: str, **kwargs) -> Compressor:
+    """Factory: ``make_compressor("topk", density=0.3)``."""
+    try:
+        ctor = _REGISTRY[name.lower()]
+    except KeyError:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return ctor(**kwargs)

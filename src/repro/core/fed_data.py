@@ -1,0 +1,49 @@
+"""Federated dataset container used by all FL algorithms.
+
+Holds the global arrays plus per-client index tables (ragged sizes padded to
+the max; batch sampling draws uniformly in [0, size_i) so padding never
+biases).  Produced by :mod:`repro.data.dirichlet`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedData:
+    x: jax.Array               # (N, ...) global inputs
+    y: jax.Array               # (N,) global labels
+    client_indices: jax.Array  # (n_clients, max_size) int32, padded
+    client_sizes: jax.Array    # (n_clients,) int32
+
+    @property
+    def n_clients(self) -> int:
+        return self.client_indices.shape[0]
+
+    def sample_batch(self, key: jax.Array, client: jax.Array, batch: int):
+        """Uniform-with-replacement minibatch from one client's shard."""
+        size = self.client_sizes[client]
+        pos = jax.random.randint(key, (batch,), 0, jnp.maximum(size, 1))
+        idx = self.client_indices[client, pos]
+        return self.x[idx], self.y[idx]
+
+
+def from_numpy_partition(x: np.ndarray, y: np.ndarray,
+                         parts: list[np.ndarray]) -> FederatedData:
+    """parts[i] = global indices owned by client i (ragged)."""
+    n = len(parts)
+    max_sz = max(max(len(p) for p in parts), 1)
+    idx = np.zeros((n, max_sz), dtype=np.int32)
+    sizes = np.zeros((n,), dtype=np.int32)
+    for i, p in enumerate(parts):
+        sizes[i] = len(p)
+        if len(p):
+            idx[i, :len(p)] = p
+    return FederatedData(
+        x=jnp.asarray(x), y=jnp.asarray(y),
+        client_indices=jnp.asarray(idx), client_sizes=jnp.asarray(sizes))

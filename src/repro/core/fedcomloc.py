@@ -1,0 +1,246 @@
+"""FedComLoc (paper Algorithm 1) — Scaffnew + compression, three variants.
+
+Faithful mapping of Algorithm 1:
+
+* server pre-decides communication iterations via Bernoulli(p) coins; the
+  run between two heads of the coin is one *local phase* whose length is
+  Geometric(p) — we draw that length directly (``local_steps="geometric"``),
+  or fix it to round(1/p) (``local_steps="fixed"``, the deterministic setting
+  used for the headline experiments, matching the paper's "average of 10
+  local iterations per round" with p = 0.1);
+* line 7  (FedComLoc-Local):  g_i evaluated at C(x_i);
+* line 8  (FedComLoc-Com):    uplink iterate compressed, x^_i <- C(x^_i);
+* line 11 (FedComLoc-Global): averaged iterate compressed before broadcast;
+* line 16: h_i <- h_i + (p/gamma)(x_{t+1} - x^_{i,t+1}) — only communication
+  iterations change h_i (otherwise x_{t+1} = x^_{i,t+1});
+* client sampling: S resampled at every communication round (the paper's
+  experimental setting: 10 of 100 clients per global round).  Non-sampled
+  clients keep their control variates; they re-enter from the current server
+  model.  With full participation and C = Identity this is exactly Scaffnew.
+
+State layout: the server model ``x`` is stored once (all clients restart a
+round from the broadcast model); control variates ``h`` are stacked with a
+leading client axis.  All per-round compute is one jitted function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm
+from repro.core.compressors import Compressor, Identity
+from repro.core.fed_data import FederatedData
+
+PyTree = Any
+LossFn = Callable[[PyTree, jax.Array, jax.Array], jax.Array]
+
+VARIANTS = ("none", "com", "local", "global")
+
+
+class FedComLocState(NamedTuple):
+    x: PyTree          # server model (broadcast value)
+    h: PyTree          # control variates, stacked (n_clients, ...)
+    round: jax.Array   # communication rounds completed
+    e: PyTree = ()     # per-client error-feedback memory (beyond-paper)
+    mom: PyTree = ()   # server momentum buffer (beyond-paper)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedComLocConfig:
+    gamma: float = 0.1                 # local stepsize
+    p: float = 0.1                     # communication probability
+    n_clients: int = 100
+    clients_per_round: int = 10
+    batch_size: int = 32
+    variant: str = "com"               # none | com | local | global
+    local_steps: str = "fixed"         # fixed | geometric
+    max_local_steps: Optional[int] = None  # cap (geometric); default 4/p
+    # ---- beyond-paper extensions (EXPERIMENTS.md §Beyond) ---------------- #
+    error_feedback: bool = False       # leaky delta-EF on the Com uplink
+    ef_decay: float = 0.7              # EF memory leak (1.0 diverges here)
+    server_momentum: float = 0.0       # Polyak momentum on the server mean
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(f"variant must be one of {VARIANTS}")
+        if not (0 < self.p <= 1):
+            raise ValueError("p must be in (0, 1]")
+        if self.error_feedback and self.variant != "com":
+            raise ValueError("error_feedback applies to the Com variant")
+        if not (0.0 <= self.server_momentum < 1.0):
+            raise ValueError("server_momentum must be in [0, 1)")
+
+    @property
+    def steps_cap(self) -> int:
+        if self.max_local_steps is not None:
+            return self.max_local_steps
+        if self.local_steps == "fixed":
+            return max(1, round(1.0 / self.p))
+        return max(1, round(4.0 / self.p))
+
+
+class FedComLoc:
+    """Algorithm 1.  ``variant="none"`` with Identity compression = Scaffnew."""
+
+    def __init__(self, loss_fn: LossFn, data: FederatedData,
+                 config: FedComLocConfig,
+                 compressor: Compressor | None = None):
+        self.loss_fn = loss_fn
+        self.data = data
+        self.cfg = config
+        self.comp = compressor if compressor is not None else Identity()
+        if config.variant == "none" and not isinstance(self.comp, Identity):
+            raise ValueError('variant="none" requires the Identity compressor')
+        self.meter = comm.CommMeter()
+        self._round = jax.jit(self._round_impl)
+
+    # ------------------------------------------------------------------ #
+
+    def init(self, params0: PyTree) -> FedComLocState:
+        stacked_zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros((self.cfg.n_clients,) + p.shape, p.dtype),
+            params0)
+        e = stacked_zeros() if self.cfg.error_feedback else ()
+        mom = (jax.tree_util.tree_map(jnp.zeros_like, params0)
+               if self.cfg.server_momentum > 0 else ())
+        return FedComLocState(x=params0, h=stacked_zeros(),
+                              round=jnp.zeros((), jnp.int32), e=e, mom=mom)
+
+    # ------------------------------------------------------------------ #
+
+    def _num_local_steps(self, key: jax.Array) -> jax.Array:
+        cap = self.cfg.steps_cap
+        if self.cfg.local_steps == "fixed":
+            return jnp.asarray(cap, jnp.int32)
+        # Geometric(p) truncated at cap: #iterations until the coin lands 1.
+        u = jax.random.uniform(key)
+        g = jnp.floor(jnp.log1p(-u) / jnp.log1p(-self.cfg.p)).astype(jnp.int32) + 1
+        return jnp.clip(g, 1, cap)
+
+    def _compress(self, tree: PyTree, key: jax.Array) -> PyTree:
+        return self.comp.compress(tree, key)
+
+    def _round_impl(self, state: FedComLocState, key: jax.Array):
+        cfg = self.cfg
+        k_sample, k_steps, k_local, k_up, k_down = jax.random.split(key, 5)
+        s = cfg.clients_per_round
+        clients = jax.random.choice(
+            k_sample, cfg.n_clients, (s,), replace=False)
+        num_steps = self._num_local_steps(k_steps)
+
+        h_s = jax.tree_util.tree_map(lambda h: h[clients], state.h)
+        x0 = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p, (s,) + p.shape), state.x)
+
+        grad_fn = jax.grad(self.loss_fn)
+
+        def local_step(carry, inp):
+            x_i, loss_acc = carry
+            step_idx, k_step = inp
+            active = step_idx < num_steps
+
+            def one_client(x_c, h_c, client, kc):
+                kb, kcomp = jax.random.split(kc)
+                xb, yb = self.data.sample_batch(kb, client, cfg.batch_size)
+                x_eval = (self._compress(x_c, kcomp)
+                          if cfg.variant == "local" else x_c)
+                loss, g = jax.value_and_grad(self.loss_fn)(x_eval, xb, yb)
+                x_new = jax.tree_util.tree_map(
+                    lambda xc, gc, hc: xc - cfg.gamma * (gc - hc),
+                    x_c, g, h_c)
+                return x_new, loss
+
+            keys = jax.random.split(k_step, s)
+            x_new, losses = jax.vmap(one_client)(x_i, h_s, clients, keys)
+            x_i = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(
+                    jnp.reshape(active, (1,) * new.ndim), new, old),
+                x_new, x_i)
+            loss_acc = jnp.where(active, loss_acc + losses.mean(), loss_acc)
+            return (x_i, loss_acc), None
+
+        cap = cfg.steps_cap
+        step_keys = jax.random.split(k_local, cap)
+        (x_hat, loss_sum), _ = jax.lax.scan(
+            local_step, (x0, jnp.zeros(())),
+            (jnp.arange(cap), step_keys))
+
+        # --- communication (theta_t = 1) --------------------------------- #
+        e_new = state.e
+        if cfg.variant == "com":
+            up_keys = jax.random.split(k_up, s)
+            if cfg.error_feedback:
+                # EF on the uplink *innovation*: transmit
+                # C(x^_i - x_prev + e_i); the server reconstructs
+                # x_prev + mean(sent).  Deltas after a local phase are small
+                # in magnitude, so TopK keeps far more of their energy than
+                # it keeps of the raw iterates; the residual stays in e_i.
+                e_s = jax.tree_util.tree_map(lambda e: e[clients], state.e)
+                innov = jax.tree_util.tree_map(
+                    lambda xh, x0, e: xh - x0[None] + e,
+                    x_hat, state.x, e_s)
+                sent = jax.vmap(self._compress)(innov, up_keys)
+                # leaky memory: undecayed EF diverges inside Scaffnew (the
+                # residual integrates against the control variates — see the
+                # EXPERIMENTS.md §Beyond decay study); 0.7 is the sweet spot.
+                e_s_new = jax.tree_util.tree_map(
+                    lambda c, snt: cfg.ef_decay * (c - snt), innov, sent)
+                e_new = jax.tree_util.tree_map(
+                    lambda all_, upd: all_.at[clients].set(upd),
+                    state.e, e_s_new)
+                x_hat = jax.tree_util.tree_map(
+                    lambda x0, snt: x0[None] + snt, state.x, sent)
+            else:
+                x_hat = jax.vmap(self._compress)(x_hat, up_keys)
+        x_bar = jax.tree_util.tree_map(lambda t: t.mean(axis=0), x_hat)
+        if cfg.variant == "global":
+            x_bar = self._compress(x_bar, k_down)
+
+        # line 16: h_i += (p/gamma) (x_{t+1} - x^_{i,t+1}) for i in S —
+        # uses the pre-momentum mean: the extrapolation below must not leak
+        # into the control variates (it destabilises them; see tests).
+        h_s_new = jax.tree_util.tree_map(
+            lambda h, xh, xb_: h + (cfg.p / cfg.gamma) * (xb_[None] - xh),
+            h_s, x_hat, x_bar)
+        h_new = jax.tree_util.tree_map(
+            lambda h_all, h_upd: h_all.at[clients].set(h_upd),
+            state.h, h_s_new)
+
+        # beyond-paper: Polyak momentum on the broadcast point only
+        mom_new = state.mom
+        if cfg.server_momentum > 0:
+            delta = jax.tree_util.tree_map(
+                lambda xb_, x0_: xb_ - x0_, x_bar, state.x)
+            mom_new = jax.tree_util.tree_map(
+                lambda m, d_: cfg.server_momentum * m
+                + (1 - cfg.server_momentum) * d_, state.mom, delta)
+            x_bar = jax.tree_util.tree_map(
+                lambda x0_, m: x0_ + m, state.x, mom_new)
+
+        metrics = {
+            "train_loss": loss_sum / jnp.maximum(num_steps, 1),
+            "num_local_steps": num_steps,
+        }
+        return (FedComLocState(x=x_bar, h=h_new, round=state.round + 1,
+                               e=e_new, mom=mom_new), metrics)
+
+    # ------------------------------------------------------------------ #
+
+    def round(self, state: FedComLocState, key: jax.Array):
+        """Run one communication round; returns (state, metrics dict)."""
+        state, metrics = self._round(state, key)
+        self._account_bits(state.x)
+        return state, {k: float(v) for k, v in metrics.items()}
+
+    def _account_bits(self, x: PyTree) -> None:
+        cfg = self.cfg
+        dense = Identity().bits(x)
+        s = cfg.clients_per_round
+        up = self.comp.bits(x) if cfg.variant == "com" else dense
+        down = self.comp.bits(x) if cfg.variant == "global" else dense
+        self.meter.record_round(uplink_bits=s * up, downlink_bits=s * down)

@@ -1,0 +1,133 @@
+"""Pallas TPU flash attention (forward) — the TPU compute hot-spot kernel.
+
+Canonical blockwise online-softmax attention, adapted for the TPU memory
+hierarchy:
+
+* grid = (batch, q_heads, Tq/bq, Tk/bk); the last axis is sequential on TPU,
+  so the running max / denominator / output accumulator live in VMEM scratch
+  and persist across k-blocks;
+* BlockSpec tiles: q (1,1,bq,dh), k/v (1,1,bk,dh) — dh and block sizes are
+  multiples of 128 where the head dim allows, keeping MXU matmuls aligned;
+* GQA folds the kv-head index in the BlockSpec index_map (kv = qh // group),
+  so no repeated KV materialisation in HBM;
+* causal masking, sliding-window masking and gemma-style logit softcap are
+  applied on the logits tile in VMEM.
+
+Oracle: :func:`repro.kernels.ref.mha_attention`.  Forward-only by design —
+training paths use the differentiable jnp scan in
+:mod:`repro.models.attention`; this kernel is the serving/prefill TPU target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  q_offset: int, softcap: float | None,
+                  bq: int, bk: int, num_kb: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = (q_offset + qi * bq
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                             # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                          # (bq, bk)
+    correction = jnp.exp(m_prev - m_new)            # (bq, 1)
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * correction
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_kb - 1)
+    def _finalize():
+        denom = jnp.where(l_ref[...] > 0, l_ref[...], 1.0)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "softcap",
+                     "bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array,            # (B, Hq, Tq, Dh)
+    k: jax.Array,            # (B, Hkv, Tk, Dh)
+    v: jax.Array,            # (B, Hkv, Tk, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    softcap: float | None = None,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, tq, dh = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    bq = min(bq, tq)
+    bk = min(bk, tk)
+    if tq % bq or tk % bk:
+        raise ValueError(f"Tq={tq} / Tk={tk} must be divisible by bq={bq}/bk={bk}")
+    num_qb, num_kb = tq // bq, tk // bk
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, softcap=softcap, bq=bq, bk=bk, num_kb=num_kb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, num_qb, num_kb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, tq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

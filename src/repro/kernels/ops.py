@@ -1,0 +1,88 @@
+"""Backend dispatcher for the kernels package.
+
+Every hot op has three executable forms:
+
+* Pallas TPU kernel (``<name>.py``) — the production target, compiled with
+  explicit BlockSpec VMEM tiling on TPU;
+* the same kernel under ``interpret=True`` — used by the correctness tests on
+  CPU (executes the kernel body with jnp semantics);
+* the pure-jnp oracle (``ref.py``) — used on non-TPU backends for real runs
+  (FL simulation, smoke tests, dry-run lowering) where compiling Mosaic is
+  impossible, and as the allclose ground truth everywhere.
+
+``set_backend`` overrides dispatch globally (tests use it to force
+``interpret``).
+"""
+
+from __future__ import annotations
+
+from typing import Literal, Optional
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize as _quant
+from repro.kernels import ref as _ref
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import topk_compress as _topk
+from repro.kernels import wkv6 as _wkv
+
+Backend = Literal["auto", "pallas", "interpret", "ref"]
+_BACKEND: Backend = "auto"
+
+
+def set_backend(backend: Backend) -> None:
+    global _BACKEND
+    if backend not in ("auto", "pallas", "interpret", "ref"):
+        raise ValueError(f"unknown backend {backend!r}")
+    _BACKEND = backend
+
+
+def get_backend() -> Backend:
+    return _BACKEND
+
+
+def _resolve() -> str:
+    if _BACKEND != "auto":
+        return _BACKEND
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def topk_mask(x: jax.Array, k: int) -> jax.Array:
+    mode = _resolve()
+    if mode == "ref":
+        return _ref.topk_mask(x, k)
+    return _topk.topk_mask(x, int(k), interpret=(mode == "interpret"))
+
+
+def quantize_qr(x: jax.Array, r: int, key: jax.Array) -> jax.Array:
+    mode = _resolve()
+    if mode == "ref":
+        return _ref.quantize_qr(x, r, key)
+    return _quant.quantize_qr(x, int(r), key, interpret=(mode == "interpret"))
+
+
+def mha_attention(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None, q_offset: int = 0,
+                  softcap: Optional[float] = None) -> jax.Array:
+    mode = _resolve()
+    if mode == "ref":
+        return _ref.mha_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, softcap=softcap)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, softcap=softcap,
+                               interpret=(mode == "interpret"))
+
+
+def rglru_scan(x, a):
+    mode = _resolve()
+    if mode == "ref":
+        return _ref.rglru_scan(x, a)
+    return _rg.rglru_scan(x, a, interpret=(mode == "interpret"))
+
+
+def wkv6_scan(r, k, v, w, u):
+    mode = _resolve()
+    if mode == "ref":
+        return _ref.wkv6_scan(r, k, v, w, u)
+    return _wkv.wkv6_scan(r, k, v, w, u, interpret=(mode == "interpret"))

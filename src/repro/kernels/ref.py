@@ -1,0 +1,211 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel allclose tests, and the
+implementations actually executed on non-TPU backends (see :mod:`ops`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- #
+# TopK masking (paper Definition 3.1, threshold semantics)
+# --------------------------------------------------------------------------- #
+
+def topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Zero all but the k largest-magnitude entries of the 1-D vector ``x``.
+
+    Threshold semantics: every entry with |x_i| >= t is kept, where t is the
+    k-th largest magnitude.  Ties at t are all kept (Def. 3.1 allows an
+    arbitrary minimiser; threshold semantics is the one implementable without
+    a data-dependent output shape, and the one the Pallas radix-select kernel
+    produces).
+    """
+    if x.ndim != 1:
+        raise ValueError(f"topk_mask expects 1-D input, got shape {x.shape}")
+    k = int(k)
+    if k >= x.size:
+        return x
+    mag = jnp.abs(x)
+    kth = jax.lax.top_k(mag, k)[0][k - 1]
+    return jnp.where(mag >= kth, x, jnp.zeros_like(x))
+
+
+# --------------------------------------------------------------------------- #
+# QSGD binary quantization (paper Definition 3.2)
+# --------------------------------------------------------------------------- #
+
+def quantize_qr_with_uniforms(x: jax.Array, r: int, u: jax.Array) -> jax.Array:
+    """Q_r(x) with externally supplied uniforms ``u`` in [0, 1) (same shape).
+
+    Splitting randomness from arithmetic keeps kernel and oracle bit-identical
+    for the same ``u``.
+    """
+    levels = jnp.asarray(2 ** r, dtype=jnp.float32)
+    xf = x.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(xf * xf))
+    y = jnp.abs(xf) / jnp.where(norm > 0, norm, 1.0)
+    scaled = levels * y
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    xi = (lo + (u < frac).astype(jnp.float32)) / levels
+    out = norm * jnp.sign(xf) * xi
+    return jnp.where(norm > 0, out, jnp.zeros_like(out)).astype(x.dtype)
+
+
+def quantize_qr(x: jax.Array, r: int, key: jax.Array) -> jax.Array:
+    """Q_r(x) (Def. 3.2) on a 1-D vector, stochastic rounding via ``key``."""
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    return quantize_qr_with_uniforms(x, r, u)
+
+
+# --------------------------------------------------------------------------- #
+# Flash attention (naive oracle)
+# --------------------------------------------------------------------------- #
+
+def mha_attention(
+    q: jax.Array,           # (B, Hq, Tq, Dh)
+    k: jax.Array,           # (B, Hkv, Tk, Dh)
+    v: jax.Array,           # (B, Hkv, Tk, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    softcap: float | None = None,
+) -> jax.Array:
+    """Naive O(Tq*Tk) softmax attention with GQA, causal & sliding window.
+
+    ``q_offset`` is the absolute position of q[0] (for decode: cache length).
+    ``window``: attend only to keys within ``window`` positions behind the
+    query (sliding-window attention).  ``softcap``: gemma2-style logit
+    soft-capping ``softcap * tanh(logits / softcap)``.
+    """
+    b, hq, tq, dh = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / jnp.sqrt(dh).astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = q_offset + jnp.arange(tq)[:, None]
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vr).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU scan (RecurrentGemma, arXiv:2402.19427)
+# --------------------------------------------------------------------------- #
+
+def rglru_scan(x: jax.Array, a: jax.Array, h0: jax.Array | None = None,
+               chunk: int = 64):
+    """Real-gated linear recurrent unit scan.
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t,  elementwise over channels.
+
+    Two-level scan (outer over T/chunk time blocks, remat'd inner): the
+    outer carry holds only chunk-boundary states, which (a) bounds autodiff
+    residuals and (b) keeps the loop trip count low — XLA's cost model
+    charges a dynamic-slice a full-operand read per trip, so flat T-step
+    scans inflate the HLO bytes ~T/chunk-fold (EXPERIMENTS.md §Perf H1).
+
+    x, a: (B, T, D) with a in (0, 1).  Returns (ys (B, T, D), h_T (B, D)).
+    """
+    b, t, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d), dtype=jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a.astype(jnp.float32) ** 2, 0.0))
+    gx = beta * x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, gx_t = inp
+        h = a_t * h + gx_t
+        return h, h
+
+    chunk = min(chunk, t)
+    if t % chunk:
+        chunk = t
+    nchunks = t // chunk
+
+    def tm(z):  # (B, T, D) -> (nchunks, chunk, B, D)
+        z = z.swapaxes(0, 1)
+        return z.reshape(nchunks, chunk, b, d)
+
+    @jax.checkpoint
+    def run_chunk(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    hT, ys = jax.lax.scan(run_chunk, h0, (tm(af), tm(gx)))
+    ys = ys.reshape(t, b, d)
+    return ys.swapaxes(0, 1).astype(x.dtype), hT
+
+
+# --------------------------------------------------------------------------- #
+# RWKV6 "Finch" WKV recurrence (arXiv:2404.05892)
+# --------------------------------------------------------------------------- #
+
+def wkv6_scan(
+    r: jax.Array,   # (B, H, T, K)
+    k: jax.Array,   # (B, H, T, K)
+    v: jax.Array,   # (B, H, T, V)
+    w: jax.Array,   # (B, H, T, K)   per-step decay in (0, 1) (already exp'ed)
+    u: jax.Array,   # (H, K)         bonus for the current token
+    s0: jax.Array | None = None,     # (B, H, K, V)
+    chunk: int = 64,
+):
+    """Data-dependent-decay linear attention recurrence.
+
+    y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+    Two-level scan: the outer scan carries only chunk-boundary states (T/chunk
+    of them) and the remat'd inner scan recomputes within-chunk states in the
+    backward pass — a flat scan would store the (T, B, H, K, V) state history
+    as autodiff residuals (~2.7 GiB/device at train_4k for rwkv6-3b).
+
+    Returns (y (B, H, T, V), S_T (B, H, K, V)).
+    """
+    b, h, t, kd = r.shape
+    vd = v.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kd, vd), dtype=jnp.float32)
+    rf, kf, vf, wf = (z.astype(jnp.float32) for z in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + uf[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    chunk = min(chunk, t)
+    if t % chunk:
+        chunk = t  # fall back to a single chunk for ragged lengths
+    nchunks = t // chunk
+
+    # (T, B, H, *) time-major, then (nchunks, chunk, B, H, *)
+    def tm(z):
+        z = z.transpose(2, 0, 1, 3)
+        return z.reshape(nchunks, chunk, *z.shape[1:])
+
+    @jax.checkpoint
+    def run_chunk(S, inp):
+        return jax.lax.scan(step, S, inp)
+
+    sT, ys = jax.lax.scan(run_chunk, s0, (tm(rf), tm(kf), tm(vf), tm(wf)))
+    ys = ys.reshape(t, b, h, vd)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), sT

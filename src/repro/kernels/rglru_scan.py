@@ -1,0 +1,89 @@
+"""Pallas TPU kernel for the RG-LRU recurrence (RecurrentGemma).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t      (elementwise over D)
+
+Sequential scans are latency-bound on TPU; the kernel keeps the hidden state
+resident in VMEM scratch and streams (x, a) time-blocks through VMEM:
+
+* grid = (B, D/bd, T/bt) — the time axis is the last (sequential) grid axis,
+  so the carried state h persists in scratch between time blocks;
+* inside a block the bt-step recurrence runs as an unrolled fori_loop on
+  VMEM-resident rows (bt x bd), amortising HBM traffic over bt steps;
+* channel blocks bd are lane-aligned (multiples of 128).
+
+Oracle: :func:`repro.kernels.ref.rglru_scan`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BT = 8
+DEFAULT_BD = 128
+
+
+def _rglru_kernel(x_ref, a_ref, y_ref, hout_ref, h_scratch, *,
+                  bt: int, num_tb: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0].astype(jnp.float32)      # (bt, bd)
+    a = a_ref[0].astype(jnp.float32)      # (bt, bd)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * x
+
+    def step(t, carry):
+        h, ys = carry
+        h = a[t] * h + gx[t]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, h, t, 0)
+        return h, ys
+
+    h0 = h_scratch[0]
+    h, ys = jax.lax.fori_loop(0, bt, step, (h0, jnp.zeros_like(x)))
+    y_ref[0] = ys.astype(y_ref.dtype)
+    h_scratch[0] = h
+
+    @pl.when(ti == num_tb - 1)
+    def _final():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bt", "bd", "interpret"))
+def rglru_scan(x: jax.Array, a: jax.Array, *,
+               bt: int = DEFAULT_BT, bd: int = DEFAULT_BD,
+               interpret: bool = False):
+    """x, a: (B, T, D), a in (0,1). Returns (y (B,T,D), h_T (B,D))."""
+    b, t, d = x.shape
+    bt = min(bt, t)
+    bd = min(bd, d)
+    if t % bt or d % bd:
+        raise ValueError(f"T={t}, D={d} must divide bt={bt}, bd={bd}")
+    num_tb = t // bt
+
+    y, h = pl.pallas_call(
+        functools.partial(_rglru_kernel, bt=bt, num_tb=num_tb),
+        grid=(b, d // bd, num_tb),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda b_, di, ti: (b_, ti, di)),
+            pl.BlockSpec((1, bt, bd), lambda b_, di, ti: (b_, ti, di)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bd), lambda b_, di, ti: (b_, ti, di)),
+            pl.BlockSpec((1, bd), lambda b_, di, ti: (b_, di)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, d), x.dtype),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(x, a)
+    return y, h

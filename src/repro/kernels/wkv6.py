@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the RWKV6 "Finch" WKV recurrence (arXiv:2404.05892).
+
+Per head, with state S in R^{K x V}:
+
+    y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (w_t: data-dependent decay)
+
+TPU mapping: grid = (B, H, T/bt) with the time axis sequential; the K x V
+state matrix stays resident in VMEM scratch (64x64 fp32 = 16 KiB for a
+standard head), and (r, k, v, w) stream through VMEM in bt-step tiles.  The
+inner rank-1 updates are VPU outer products; y_t is a (1 x K)(K x V) matvec.
+
+Oracle: :func:`repro.kernels.ref.wkv6_scan`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BT = 16
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref,
+                 s_scratch, *, bt: int, num_tb: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_scratch[...] = jnp.zeros_like(s_scratch)
+
+    r = r_ref[0, 0].astype(jnp.float32)   # (bt, K)
+    k = k_ref[0, 0].astype(jnp.float32)   # (bt, K)
+    v = v_ref[0, 0].astype(jnp.float32)   # (bt, V)
+    w = w_ref[0, 0].astype(jnp.float32)   # (bt, K)
+    u = u_ref[0].astype(jnp.float32)      # (K,)
+
+    def step(t, carry):
+        S, ys = carry
+        kv = k[t][:, None] * v[t][None, :]                  # (K, V)
+        y = jnp.sum((S + u[:, None] * kv) * r[t][:, None], axis=0)  # (V,)
+        S = w[t][:, None] * S + kv
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, 0)
+        return S, ys
+
+    S0 = s_scratch[...]
+    S, ys = jax.lax.fori_loop(
+        0, bt, step, (S0, jnp.zeros((bt, v.shape[-1]), jnp.float32)))
+    y_ref[0, 0] = ys.astype(y_ref.dtype)
+    s_scratch[...] = S
+
+    @pl.when(ti == num_tb - 1)
+    def _final():
+        sout_ref[0, 0] = S.astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def wkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, *, bt: int = DEFAULT_BT,
+              interpret: bool = False):
+    """r,k,w: (B,H,T,K); v: (B,H,T,V); u: (H,K).
+
+    Returns (y (B,H,T,V), S_T (B,H,K,V)).
+    """
+    b, h, t, kd = r.shape
+    vd = v.shape[-1]
+    bt = min(bt, t)
+    if t % bt:
+        raise ValueError(f"T={t} must divide bt={bt}")
+    num_tb = t // bt
+
+    y, s = pl.pallas_call(
+        functools.partial(_wkv6_kernel, bt=bt, num_tb=num_tb),
+        grid=(b, h, num_tb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, kd), lambda b_, h_, ti: (b_, h_, ti, 0)),
+            pl.BlockSpec((1, 1, bt, kd), lambda b_, h_, ti: (b_, h_, ti, 0)),
+            pl.BlockSpec((1, 1, bt, vd), lambda b_, h_, ti: (b_, h_, ti, 0)),
+            pl.BlockSpec((1, 1, bt, kd), lambda b_, h_, ti: (b_, h_, ti, 0)),
+            pl.BlockSpec((1, kd), lambda b_, h_, ti: (h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bt, vd), lambda b_, h_, ti: (b_, h_, ti, 0)),
+            pl.BlockSpec((1, 1, kd, vd), lambda b_, h_, ti: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, vd), r.dtype),
+            jax.ShapeDtypeStruct((b, h, kd, vd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kd, vd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s

@@ -1,0 +1,23 @@
+"""Production mesh construction (deliverable (e)).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import to obtain placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """v5e production mesh: 16x16 per pod; 2 pods when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1x1 mesh for CPU smoke runs of the pjit code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))

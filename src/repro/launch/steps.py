@@ -1,0 +1,266 @@
+"""Step functions + ShapeDtypeStruct input specs per (arch x input shape).
+
+This is the bridge between the model zoo and the launchers: for every
+assigned architecture and input shape it builds
+
+* the jit-able step function (``train_step`` / ``prefill_step`` /
+  ``serve_step``),
+* weak-type-correct ``ShapeDtypeStruct`` stand-ins for every input (the
+  dry-run lowers against these; nothing is allocated),
+* the matching in/out shardings for the production meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, InputShape, SHAPES
+from repro.models import attention as attn_mod
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tfm
+from repro.optim import optimizers
+from repro.sharding import specs as sh
+
+PyTree = Any
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the launchers need for one (arch, shape) combination."""
+    fn: Callable                 # the step function
+    args: tuple                  # ShapeDtypeStruct pytree per argument
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+# --------------------------------------------------------------------------- #
+# helpers
+# --------------------------------------------------------------------------- #
+
+def _optimizer_for(spec: ArchSpec) -> tuple[str, float]:
+    # the 400B MoE cannot afford fp32 adam state on 16 GB chips
+    if spec.arch_id.startswith("llama4"):
+        return "sgd", 1e-3
+    return "adam", 1e-4
+
+def adjust_for_shape(spec: ArchSpec, shape_name: str) -> ArchSpec:
+    """``long_context_cap`` (global layers capped to a sliding window) only
+    applies in long-context mode; every other shape gets true full attention
+    on the global layers."""
+    if spec.is_encdec or shape_name == "long_500k":
+        return spec
+    m = spec.model
+    if m.long_context_cap is None:
+        return spec
+    return dataclasses.replace(
+        spec, model=dataclasses.replace(m, long_context_cap=None))
+
+
+def _params_struct(spec: ArchSpec) -> PyTree:
+    m = spec.model
+    if spec.is_encdec:
+        return jax.eval_shape(
+            lambda k: encdec_mod.init_params(k, m), jax.random.PRNGKey(0))
+    return jax.eval_shape(
+        lambda k: tfm.init_params(k, m), jax.random.PRNGKey(0))
+
+
+def _replicated(mesh: Mesh, tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _n_experts(spec: ArchSpec) -> Optional[int]:
+    m = spec.model
+    return m.moe.n_experts if (not spec.is_encdec and m.moe is not None) \
+        else None
+
+
+# --------------------------------------------------------------------------- #
+# step builders
+# --------------------------------------------------------------------------- #
+
+def build_train_step(spec: ArchSpec, shape: InputShape, mesh: Mesh,
+                     optimizer: Optional[str] = None,
+                     loss_chunk: int = 256) -> StepBundle:
+    m = spec.model
+    opt_name, lr = _optimizer_for(spec)
+    if optimizer is not None:
+        opt_name = optimizer
+    opt_init, opt_update = optimizers.make(opt_name, lr)
+    b, t = shape.global_batch, shape.seq_len
+    fsdp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    bspec = NamedSharding(mesh, P(fsdp))
+
+    params_struct = _params_struct(spec)
+    pshard = sh.param_shardings(params_struct, mesh,
+                                n_experts=_n_experts(spec))
+    opt_struct = jax.eval_shape(opt_init, params_struct)
+    oshard = sh.param_shardings(opt_struct, mesh,
+                                n_experts=_n_experts(spec)) \
+        if jax.tree_util.tree_leaves(opt_struct) else ()
+
+    if spec.is_encdec:
+        t_src = t // 2
+        t_tgt = t - t_src
+        batch = {
+            "src_embeds": S((b, t_src, m.d_model), jnp.bfloat16),
+            "tgt_tokens": S((b, t_tgt), jnp.int32),
+        }
+        bshard = {"src_embeds": NamedSharding(mesh, P(fsdp, None, None)),
+                  "tgt_tokens": bspec}
+
+        def train_step(params, opt_state, batch_):
+            def loss_fn(p):
+                return encdec_mod.loss(p, m, batch_["src_embeds"],
+                                       batch_["tgt_tokens"],
+                                       loss_chunk=loss_chunk)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = opt_update(grads, opt_state, params)
+            return params, opt_state, loss
+    else:
+        npre = spec.n_prefix_tokens
+        batch = {"tokens": S((b, t - npre), jnp.int32)}
+        bshard = {"tokens": bspec}
+        if npre:
+            batch["prefix_embeds"] = S((b, npre, m.d_model), jnp.bfloat16)
+            bshard["prefix_embeds"] = NamedSharding(mesh, P(fsdp, None, None))
+
+        def train_step(params, opt_state, batch_):
+            def loss_fn(p):
+                return tfm.loss(p, m, batch_["tokens"],
+                                prefix_embeds=batch_.get("prefix_embeds"),
+                                loss_chunk=loss_chunk)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = opt_update(grads, opt_state, params)
+            return params, opt_state, loss
+
+    return StepBundle(
+        fn=train_step,
+        args=(params_struct, opt_struct, batch),
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+
+
+def build_prefill_step(spec: ArchSpec, shape: InputShape, mesh: Mesh,
+                       seq_parallel: bool = False) -> StepBundle:
+    m = spec.model
+    b, t = shape.global_batch, shape.seq_len
+    fsdp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    bspec = NamedSharding(mesh, P(fsdp))
+    params_struct = _params_struct(spec)
+    pshard = sh.param_shardings(params_struct, mesh,
+                                n_experts=_n_experts(spec),
+                                seq_parallel=seq_parallel)
+    logits_shard = NamedSharding(
+        mesh, sh._sanitize(P(fsdp, "model"), (b, m.vocab), mesh))
+
+    if spec.is_encdec:
+        t_src, t_tgt = t // 2, t - t // 2
+        args = ({"src_embeds": S((b, t_src, m.d_model), jnp.bfloat16),
+                 "tgt_tokens": S((b, t_tgt), jnp.int32)},)
+        bshard = ({"src_embeds": NamedSharding(mesh, P(fsdp, None, None)),
+                   "tgt_tokens": bspec},)
+
+        def prefill_step(params, batch_):
+            return encdec_mod.prefill(params, m, batch_["src_embeds"],
+                                      batch_["tgt_tokens"], max_len=t_tgt)
+
+        state_struct = jax.eval_shape(prefill_step, params_struct, args[0])[1]
+        sshard = sh.state_sharding(state_struct, mesh)
+        return StepBundle(fn=prefill_step, args=(params_struct,) + args,
+                          in_shardings=(pshard,) + bshard,
+                          out_shardings=(logits_shard, sshard))
+
+    npre = spec.n_prefix_tokens
+    batch = {"tokens": S((b, t - npre), jnp.int32)}
+    bshard = {"tokens": bspec}
+    if npre:
+        batch["prefix_embeds"] = S((b, npre, m.d_model), jnp.bfloat16)
+        bshard["prefix_embeds"] = NamedSharding(mesh, P(fsdp, None, None))
+
+    def prefill_step(params, batch_):
+        return tfm.prefill(params, m, batch_["tokens"], max_len=t,
+                           prefix_embeds=batch_.get("prefix_embeds"))
+
+    state_struct = jax.eval_shape(prefill_step, params_struct, batch)[1]
+    sshard = sh.state_sharding(state_struct, mesh)
+    return StepBundle(fn=prefill_step, args=(params_struct, batch),
+                      in_shardings=(pshard, bshard),
+                      out_shardings=(logits_shard, sshard))
+
+
+def build_serve_step(spec: ArchSpec, shape: InputShape,
+                     mesh: Mesh) -> StepBundle:
+    """Decode: ONE new token against a cache of ``shape.seq_len``."""
+    m = spec.model
+    b, t = shape.global_batch, shape.seq_len
+    fsdp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    params_struct = _params_struct(spec)
+    pshard = sh.param_shardings(params_struct, mesh,
+                                n_experts=_n_experts(spec))
+    tok = S((b,), jnp.int32)
+    baxis = sh.batch_axis(mesh, b)
+    tok_shard = NamedSharding(mesh, P(baxis))
+    logits_shard = NamedSharding(
+        mesh, sh._sanitize(P(baxis, "model"), (b, m.vocab), mesh))
+
+    if spec.is_encdec:
+        # decoder self-cache of seq_len; encoder output of seq_len/8 frames
+        enc_len = max(1, t // 8)
+
+        def serve_step(params, token, state):
+            return encdec_mod.decode_step(params, m, token, state)
+
+        def make_state():
+            caches = {
+                f"layer_{i}": attn_mod.KVCache(
+                    k=jnp.zeros((b, m.n_kv_heads, t, m.hd), jnp.bfloat16),
+                    v=jnp.zeros((b, m.n_kv_heads, t, m.hd), jnp.bfloat16),
+                    length=jnp.asarray(t - 1, jnp.int32))
+                for i in range(m.n_dec_layers)}
+            cross = {
+                f"layer_{i}": (
+                    jnp.zeros((b, m.n_kv_heads, enc_len, m.hd), jnp.bfloat16),
+                    jnp.zeros((b, m.n_kv_heads, enc_len, m.hd), jnp.bfloat16))
+                for i in range(m.n_dec_layers)}
+            return encdec_mod.EncDecState(
+                self_caches=caches, cross_kv=cross,
+                enc_len=jnp.asarray(enc_len, jnp.int32))
+
+        state_struct = jax.eval_shape(make_state)
+    else:
+        def serve_step(params, token, state):
+            return tfm.decode_step(params, m, token, state)
+
+        state_struct = jax.eval_shape(
+            functools.partial(tfm.init_decode_state, m, b, t))
+        # mark caches as partially filled for realism (length traces anyway)
+    sshard = sh.state_sharding(state_struct, mesh)
+    return StepBundle(fn=serve_step,
+                      args=(params_struct, tok, state_struct),
+                      in_shardings=(pshard, tok_shard, sshard),
+                      out_shardings=(logits_shard, sshard),
+                      donate_argnums=(2,))
+
+
+def build_step(spec: ArchSpec, shape_name: str, mesh: Mesh,
+               **kw) -> StepBundle:
+    shape = SHAPES[shape_name]
+    spec = adjust_for_shape(spec, shape_name)
+    if shape.kind == "train":
+        return build_train_step(spec, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(spec, shape, mesh)
+    return build_serve_step(spec, shape, mesh)

@@ -1,0 +1,98 @@
+"""Single-program LM trainer (plain, non-federated baseline runtime).
+
+Runs real steps on whatever devices exist (CPU smoke: reduced configs;
+TPU: full configs) using the same build_train_step the dry-run lowers.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --steps 20 --batch 4 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_spec
+from repro.configs.base import InputShape, reduced as make_reduced
+from repro.data import synthetic
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tfm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    spec = get_spec(args.arch)
+    if args.reduced:
+        spec = make_reduced(spec)
+    m = spec.model
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    shape = InputShape("custom", args.seq, args.batch, "train")
+    bundle = steps_mod.build_train_step(spec, shape, mesh,
+                                        optimizer=args.optimizer)
+
+    key = jax.random.PRNGKey(0)
+    if spec.is_encdec:
+        params = encdec_mod.init_params(key, m)
+    else:
+        params = tfm.init_params(key, m)
+    from repro.optim import optimizers
+    opt_name, lr = steps_mod._optimizer_for(spec)
+    if args.optimizer:
+        opt_name = args.optimizer
+    opt_init, _ = optimizers.make(opt_name, lr)
+    opt_state = opt_init(params)
+
+    toks = synthetic.make_lm_tokens(min(m.vocab, 4096),
+                                    args.batch * 2, args.seq, seed=0)
+
+    with mesh:
+        step = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                       out_shardings=bundle.out_shardings,
+                       donate_argnums=bundle.donate_argnums)
+        t0 = time.time()
+        for i in range(args.steps):
+            sl = np.random.default_rng(i).integers(0, toks.shape[0],
+                                                   args.batch)
+            if spec.is_encdec:
+                t_src = args.seq // 2
+                batch = {
+                    "src_embeds": jnp.asarray(
+                        np.random.default_rng(i).normal(
+                            size=(args.batch, t_src, m.d_model)),
+                        jnp.bfloat16),
+                    "tgt_tokens": jnp.asarray(
+                        toks[sl][:, :args.seq - t_src]),
+                }
+            else:
+                batch = {"tokens": jnp.asarray(
+                    toks[sl][:, :args.seq - spec.n_prefix_tokens])}
+                if spec.n_prefix_tokens:
+                    batch["prefix_embeds"] = jnp.zeros(
+                        (args.batch, spec.n_prefix_tokens, m.d_model),
+                        jnp.bfloat16)
+            params, opt_state, loss = step(params, opt_state, batch)
+            if i % args.log_every == 0:
+                print(f"step {i:4d}  loss {float(loss):.4f}  "
+                      f"({time.time() - t0:.1f}s)")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Shared building blocks for the architecture zoo.
+
+Functional style throughout: ``init_*(key, ...) -> params`` (nested dicts of
+arrays) and pure apply functions.  Parameter *names* are load-bearing: the
+sharding rules in :mod:`repro.sharding.specs` match on dict paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------- #
+# initialisers
+# --------------------------------------------------------------------------- #
+
+def dense_init(key, n_in, n_out, dtype=jnp.float32, bias=False, scale=None):
+    if scale is None:
+        scale = (1.0 / n_in) ** 0.5
+    p = {"kernel": (scale * jax.random.normal(key, (n_in, n_out))).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((n_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["kernel"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return {"embedding": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens):
+    return p["embedding"][tokens]
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE (standard + multimodal M-RoPE)
+# --------------------------------------------------------------------------- #
+
+def rope_freqs(dh: int, theta: float = 10_000.0):
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (B, H, T, Dh); positions: (B, T) absolute positions."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,T,dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                sections=(16, 24, 24), theta: float = 10_000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE (arXiv:2409.12191).
+
+    x: (B, H, T, Dh); positions3: (B, 3, T) — temporal / height / width
+    position ids.  ``sections`` partitions the dh/2 rotary frequencies among
+    the three axes (t, h, w); text tokens carry identical t/h/w ids, reducing
+    M-RoPE to standard RoPE for them.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(dh, theta)                       # (half,)
+    # per-frequency axis selector: 0,1,2 over the sections
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)       # (half,)
+    pos = positions3.astype(jnp.float32)[:, sec_id, :]  # (B, half, T)
+    ang = pos.transpose(0, 2, 1)[:, None] * freqs       # (B,1,T,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Feed-forward blocks
+# --------------------------------------------------------------------------- #
+
+def mlp_init(key, d, d_ff, dtype=jnp.float32, gated=True,
+             act: str = "silu"):
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d, d_ff, dtype),
+         "wo": dense_init(ks[1], d_ff, d, dtype)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+         "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+         "sqrelu": lambda x: jnp.square(jax.nn.relu(x))}
+
+
+def mlp(p, x, act: str = "silu"):
+    a = _ACTS[act]
+    h = dense(p["wi"], x)
+    if "wg" in p:
+        h = a(dense(p["wg"], x)) * h
+    else:
+        h = a(h)
+    return dense(p["wo"], h)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

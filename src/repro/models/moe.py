@@ -1,0 +1,126 @@
+"""Mixture-of-Experts feed-forward (Mixtral 8x7B top-2, Llama-4 128e top-1).
+
+GShard-style capacity-based token-choice routing, chosen for SPMD
+shardability: every einsum has static shapes, experts shard over the
+``model`` mesh axis (expert parallelism), tokens over ``data``; the combine
+contraction over the expert axis is what XLA turns into the expert
+all-to-all / reduce pattern.
+
+Tokens are processed in groups of ``group_size`` (default 256); per group
+each expert has capacity C = ceil(group_size * topk * capacity_factor /
+n_experts).  Overflowing tokens are dropped (standard dropped-token MoE);
+the router carries an auxiliary load-balance loss (Switch/Mixtral style).
+
+The dispatch tensors cost O(tokens * group_size * topk) memory/FLOPs —
+kept ~0.1% of model FLOPs by the small group size (see EXPERIMENTS.md
+§Roofline "useful-FLOPs ratio").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.constrain import constrain, constrain_moe
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    topk: int = 2
+    group_size: int = 256
+    capacity_factor: float = 1.25
+
+    def capacity(self) -> int:
+        c = self.group_size * self.topk * self.capacity_factor / self.n_experts
+        return max(4, int(-(-c // 1)))  # ceil, floor of 4
+
+
+def moe_init(key, d: int, d_ff: int, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    scale = (1.0 / d) ** 0.5
+    e = cfg.n_experts
+    return {
+        "router": layers.dense_init(ks[0], d, e, jnp.float32),
+        "wi": {"kernel": (scale * jax.random.normal(
+            ks[1], (e, d, d_ff))).astype(dtype)},
+        "wg": {"kernel": (scale * jax.random.normal(
+            ks[2], (e, d, d_ff))).astype(dtype)},
+        "wo": {"kernel": ((1.0 / d_ff) ** 0.5 * jax.random.normal(
+            ks[3], (e, d_ff, d))).astype(dtype)},
+    }
+
+
+def moe_apply(params, x: jax.Array, cfg: MoEConfig, act: str = "silu"):
+    """x: (B, T, D) -> (out (B, T, D), aux_loss scalar)."""
+    b, t, d = x.shape
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    gs = min(cfg.group_size, n_tok)
+    pad = (-n_tok) % gs
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    g = tokens.shape[0] // gs
+    xt = constrain(tokens.reshape(g, gs, d), {0: "batch", 1: "seq"})
+    e, cap = cfg.n_experts, cfg.capacity()
+
+    # router matmul in model dtype (the f32 upcast of the full token tensor
+    # dominated HLO temps); softmax/top-k stay in f32.
+    logits = (xt @ params["router"]["kernel"].astype(x.dtype)
+              ).astype(jnp.float32)                      # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- top-k selection ------------------------------------------------- #
+    topw, topi = jax.lax.top_k(probs, cfg.topk)          # (G,S,k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # --- capacity assignment (position of each token in its expert queue) - #
+    sel = jax.nn.one_hot(topi, e, dtype=jnp.float32)     # (G,S,k,E)
+    # priority: earlier tokens first; rank within expert across (S, k).
+    # These (G, S*k, E) rank tensors are the largest routing intermediates —
+    # pin groups to (pod, data) and the slot dim to model.
+    selk = constrain(sel.reshape(g, gs * cfg.topk, e),
+                     {0: "batch", 1: "seq"})
+    pos_in_expert = constrain(jnp.cumsum(selk, axis=1) - selk,
+                              {0: "batch", 1: "seq"})   # (G,S*k,E)
+    pos = (pos_in_expert * selk).sum(-1).reshape(g, gs, cfg.topk)
+    keep = pos < cap
+    topw = topw * keep
+
+    # --- dispatch / combine one-hots -------------------------------------- #
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    # (G,S,k,E) x (G,S,k,C) -> (G,S,E,C)
+    combine = constrain_moe(
+        jnp.einsum("gske,gskc,gsk->gsec", sel, pos_oh, topw), 0, 2)
+    dispatch = constrain_moe(
+        jnp.einsum("gske,gskc,gsk->gsec", sel, pos_oh,
+                   keep.astype(jnp.float32)), 0, 2)
+
+    # --- expert compute (groups over data, experts/d_ff over model) ------- #
+    # (capacity-dim sharding was tried and REGRESSED: resharding between the
+    # C-sharded dispatch and F-sharded FFN einsums materialises replicated
+    # copies — see EXPERIMENTS.md §Perf iteration log)
+    xe = constrain_moe(
+        jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xt), 0, 1)
+    a = layers._ACTS[act]
+    hi = constrain_moe(
+        jnp.einsum("gecd,edf->gecf", xe, params["wi"]["kernel"]), 0, 1, 3)
+    hg = constrain_moe(
+        jnp.einsum("gecd,edf->gecf", xe, params["wg"]["kernel"]), 0, 1, 3)
+    h = a(hg) * hi
+    ye = constrain_moe(
+        jnp.einsum("gecf,efd->gecd", h, params["wo"]["kernel"]), 0, 1)
+    yt = constrain(
+        jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye),
+        {0: "batch"})
+
+    out = yt.reshape(-1, d)[:n_tok].reshape(b, t, d)
+
+    # --- Switch-style load-balance auxiliary loss -------------------------- #
+    frac_tokens = sel.sum(2).mean(axis=1)                # (G,E) fraction routed
+    frac_probs = probs.mean(axis=1)                      # (G,E)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return out, aux

@@ -1,0 +1,110 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427).
+
+Block: two parallel linear branches — a GeLU gate branch and a
+conv1d(width 4, causal, depthwise) -> RG-LRU branch — multiplied and
+projected back.  The RG-LRU recurrence:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The time scan is the TPU hot-spot -> kernels.ops.rglru_scan
+(Pallas kernel on TPU, lax.scan oracle elsewhere).  Decode carries
+(conv buffer (B, 3, D_rnn), h (B, D_rnn)) — O(1) in context length.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import layers
+
+_C = 8.0
+_CONV_W = 4
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array   # (B, CONV_W-1, D_rnn) last inputs
+    h: jax.Array      # (B, D_rnn)
+
+
+def rglru_init(key, d: int, d_rnn: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a in (0.9, 0.999) at r = 1 (Griffin appendix)
+    lam = jax.random.uniform(ks[0], (d_rnn,), minval=jnp.log(
+        jnp.expm1(-jnp.log(0.999) / _C)), maxval=jnp.log(
+        jnp.expm1(-jnp.log(0.9) / _C)))
+    return {
+        "wx": layers.dense_init(ks[1], d, d_rnn, dtype),     # rnn branch in
+        "wy": layers.dense_init(ks[2], d, d_rnn, dtype),     # gate branch in
+        "conv": {"kernel": (jax.random.normal(ks[3], (_CONV_W, d_rnn))
+                            * (1.0 / _CONV_W) ** 0.5).astype(dtype)},
+        "gate_a": layers.dense_init(ks[4], d_rnn, d_rnn, dtype, bias=True),
+        "gate_x": layers.dense_init(ks[5], d_rnn, d_rnn, dtype, bias=True),
+        "lam": lam.astype(jnp.float32),
+        "wo": layers.dense_init(ks[6], d_rnn, d, dtype),
+    }
+
+
+def _causal_depthwise_conv(kernel, x, state=None):
+    """x: (B, T, D); kernel (W, D); causal depthwise conv.
+
+    Kept as shifted-slice-and-add: a grouped lax.conv was tried for H1 and
+    REGRESSED the HLO byte count on the CPU cost model (64.5 vs 45.1
+    GB/device for the block gradient — EXPERIMENTS.md §Perf H1); on TPU the
+    Pallas rglru path fuses the conv anyway.
+
+    state: (B, W-1, D) previous inputs for decode; returns (y, new_state).
+    """
+    w = kernel.shape[0]
+    if state is None:
+        hist = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(hist[:, i:i + x.shape[1]] * kernel[i] for i in range(w))
+    new_state = hist[:, -(w - 1):]
+    return y, new_state
+
+
+def _rglru_gates(params, xc):
+    r = jax.nn.sigmoid(layers.dense(params["gate_a"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(params["gate_x"], xc).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    return a, i
+
+
+def rglru_block(params, x: jax.Array):
+    """Training/prefill forward. x: (B, T, D) -> (B, T, D)."""
+    gate = jax.nn.gelu(layers.dense(params["wy"], x))
+    xr = layers.dense(params["wx"], x)
+    xc, _ = _causal_depthwise_conv(params["conv"]["kernel"], xr)
+    a, i = _rglru_gates(params, xc)
+    ys, _ = kops.rglru_scan(i * xc.astype(jnp.float32), a)
+    out = ys.astype(x.dtype) * gate
+    return layers.dense(params["wo"], out)
+
+
+def rglru_block_decode(params, x: jax.Array, state: RGLRUState):
+    """One-token step. x: (B, 1, D) -> ((B, 1, D), new state)."""
+    gate = jax.nn.gelu(layers.dense(params["wy"], x))
+    xr = layers.dense(params["wx"], x)
+    xc, conv_state = _causal_depthwise_conv(
+        params["conv"]["kernel"], xr, state.conv)
+    a, i = _rglru_gates(params, xc)            # (B, 1, D_rnn)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a ** 2, 0.0)) * (
+        i * xc.astype(jnp.float32))
+    h = a[:, 0] * state.h + gx[:, 0]           # (B, D_rnn)
+    out = h[:, None].astype(x.dtype) * gate
+    return layers.dense(params["wo"], out), RGLRUState(conv=conv_state, h=h)
+
+
+def rglru_init_state(batch: int, d_rnn: int, dtype=jnp.bfloat16) -> RGLRUState:
+    return RGLRUState(
+        conv=jnp.zeros((batch, _CONV_W - 1, d_rnn), dtype),
+        h=jnp.zeros((batch, d_rnn), jnp.float32))

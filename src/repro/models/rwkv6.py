@@ -1,0 +1,138 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892) — attention-free SSM.
+
+Time-mix with *data-dependent decay* (the defining RWKV6 feature):
+
+    xx_t   = x_{t-1} - x_t                       (token shift)
+    z_q    = x_t + xx_t * mu_q,   q in {r, k, v, w, g}
+    w_t    = exp(-exp(w0 + tanh(z_w A_w) B_w))   (low-rank data-dep decay)
+    y_t    = WKV6(r, k, v, w, u)                 (kernels.ops.wkv6_scan)
+    out    = W_o (groupnorm(y) * silu(g))
+
+Channel-mix (replaces the FFN):
+
+    r = sigmoid(W_r z_r);  k = relu(W_k z_k)^2;  out = r * (W_v k)
+
+Decode state per block: (shift_tm, shift_cm (B, D), S (B, H, K, V)) —
+O(1) in context length, which is why rwkv6 runs the 500k decode shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import layers
+
+
+class RWKVState(NamedTuple):
+    shift_tm: jax.Array   # (B, D)  last input to time-mix
+    shift_cm: jax.Array   # (B, D)  last input to channel-mix
+    s: jax.Array          # (B, H, K, V) wkv state
+
+
+def rwkv6_init(key, d: int, d_ff: int, head_dim: int = 64,
+               decay_rank: int = 64, dtype=jnp.float32):
+    h = d // head_dim
+    ks = jax.random.split(key, 12)
+    mu = lambda k_: (jax.random.uniform(k_, (5, d)) * 0.5).astype(dtype)
+    return {
+        "mu": mu(ks[0]),                                   # r,k,v,w,g shifts
+        "wr": layers.dense_init(ks[1], d, d, dtype),
+        "wk": layers.dense_init(ks[2], d, d, dtype),
+        "wv": layers.dense_init(ks[3], d, d, dtype),
+        "wg": layers.dense_init(ks[4], d, d, dtype),
+        "w0": (jax.random.normal(ks[5], (d,)) * 0.5 - 6.0).astype(jnp.float32),
+        "wa": layers.dense_init(ks[6], d, decay_rank, dtype),
+        "wb": layers.dense_init(ks[7], decay_rank, d, dtype),
+        "u": (jax.random.normal(ks[8], (h, head_dim)) * 0.1).astype(jnp.float32),
+        "gn": layers.layernorm_init(d, dtype),             # per-head groupnorm
+        "wo": layers.dense_init(ks[9], d, d, dtype),
+        # channel mix
+        "cm_mu": (jax.random.uniform(ks[10], (2, d)) * 0.5).astype(dtype),
+        "cm_r": layers.dense_init(ks[11], d, d, dtype),
+        "cm_k": layers.dense_init(jax.random.fold_in(key, 101), d, d_ff, dtype),
+        "cm_v": layers.dense_init(jax.random.fold_in(key, 102), d_ff, d, dtype),
+    }
+
+
+def _shift(x, prev=None):
+    """x_{t-1} with zero (or carried) initial token. x: (B, T, D)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _tm_inputs(params, x, prev=None):
+    xx = _shift(x, prev) - x
+    mu = params["mu"]
+    zr, zk, zv, zw, zg = (x + xx * mu[i] for i in range(5))
+    r = layers.dense(params["wr"], zr)
+    k = layers.dense(params["wk"], zk)
+    v = layers.dense(params["wv"], zv)
+    g = layers.dense(params["wg"], zg)
+    dd = layers.dense(params["wb"], jnp.tanh(layers.dense(params["wa"], zw)))
+    w = jnp.exp(-jnp.exp(params["w0"] + dd.astype(jnp.float32)))  # in (0,1)
+    return r, k, v, g, w
+
+
+def _heads(x, head_dim):
+    b, t, d = x.shape
+    return x.reshape(b, t, d // head_dim, head_dim).transpose(0, 2, 1, 3)
+
+
+def _unheads(x):
+    b, h, t, k = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * k)
+
+
+def _gn_gate(params, y, g):
+    y = layers.layernorm(params["gn"], y)
+    return layers.dense(params["wo"], y * jax.nn.silu(g))
+
+
+def time_mix(params, x: jax.Array, head_dim: int = 64):
+    """x: (B, T, D) -> (B, T, D)."""
+    r, k, v, g, w = _tm_inputs(params, x)
+    rh, kh, vh, wh = (_heads(z, head_dim) for z in (r, k, v, w))
+    y, _ = kops.wkv6_scan(rh, kh, vh, wh, params["u"])
+    return _gn_gate(params, _unheads(y).astype(x.dtype), g)
+
+
+def time_mix_decode(params, x: jax.Array, shift_prev, s_prev,
+                    head_dim: int = 64):
+    """x: (B, 1, D); one recurrence step."""
+    r, k, v, g, w = _tm_inputs(params, x, prev=shift_prev)
+    b, _, d = x.shape
+    h = d // head_dim
+    rh = r.reshape(b, h, head_dim).astype(jnp.float32)
+    kh = k.reshape(b, h, head_dim).astype(jnp.float32)
+    vh = v.reshape(b, h, head_dim).astype(jnp.float32)
+    wh = w.reshape(b, h, head_dim)
+    u = params["u"]
+    kv = kh[..., :, None] * vh[..., None, :]                  # (B,H,K,V)
+    y = jnp.einsum("bhk,bhkv->bhv", rh,
+                   s_prev + u[None, :, :, None] * kv)
+    s_new = wh[..., :, None] * s_prev + kv
+    out = _gn_gate(params, y.reshape(b, 1, d).astype(x.dtype), g)
+    return out, x[:, -1], s_new
+
+
+def channel_mix(params, x: jax.Array, prev=None):
+    xx = _shift(x, prev) - x
+    mu = params["cm_mu"]
+    zr, zk = x + xx * mu[0], x + xx * mu[1]
+    r = jax.nn.sigmoid(layers.dense(params["cm_r"], zr))
+    k = jnp.square(jax.nn.relu(layers.dense(params["cm_k"], zk)))
+    return r * layers.dense(params["cm_v"], k)
+
+
+def rwkv_init_state(batch: int, d: int, head_dim: int = 64,
+                    dtype=jnp.bfloat16) -> RWKVState:
+    h = d // head_dim
+    return RWKVState(
+        shift_tm=jnp.zeros((batch, d), dtype),
+        shift_cm=jnp.zeros((batch, d), dtype),
+        s=jnp.zeros((batch, h, head_dim, head_dim), jnp.float32))

@@ -1,0 +1,107 @@
+"""Paper-faithful small models (Appendix A.1).
+
+* ``MLP`` — three fully-connected layers with ReLU (FedMNIST model).
+* ``CNN`` — two conv layers + three FC layers (FedCIFAR10 model, FedLab
+  architecture: LeNet-style 5x5 convs with max-pooling).
+
+Pure-jax functional modules: ``init(key) -> params``, ``apply(params, x)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, n_in, n_out):
+    k1, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / n_in)
+    return {"w": scale * jax.random.normal(k1, (n_in, n_out), jnp.float32),
+            "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+class MLP:
+    """784 -> hidden -> hidden -> 10, ReLU (paper's FedMNIST model)."""
+
+    def __init__(self, in_dim: int = 784, hidden: int = 128,
+                 n_classes: int = 10):
+        self.dims = (in_dim, hidden, hidden, n_classes)
+
+    def init(self, key: jax.Array):
+        keys = jax.random.split(key, 3)
+        d = self.dims
+        return {f"fc{i}": _dense_init(keys[i], d[i], d[i + 1])
+                for i in range(3)}
+
+    def apply(self, params, x):
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(_dense(params["fc0"], x))
+        x = jax.nn.relu(_dense(params["fc1"], x))
+        return _dense(params["fc2"], x)
+
+
+def _conv_init(key, h, w, cin, cout):
+    scale = jnp.sqrt(2.0 / (h * w * cin))
+    return {"w": scale * jax.random.normal(key, (h, w, cin, cout),
+                                           jnp.float32),
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv(p, x):  # NHWC, VALID
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+class CNN:
+    """LeNet-style: conv5x5(6) -> pool -> conv5x5(16) -> pool -> 120-84-C.
+
+    Matches the FedLab CIFAR10 CNN (2 conv + 3 FC) the paper uses.
+    """
+
+    def __init__(self, in_channels: int = 3, n_classes: int = 10,
+                 image_hw: int = 32):
+        self.cin = in_channels
+        self.n_classes = n_classes
+        hw = (image_hw - 4) // 2      # after conv1+pool
+        hw = (hw - 4) // 2            # after conv2+pool
+        self.flat = hw * hw * 16
+
+    def init(self, key: jax.Array):
+        ks = jax.random.split(key, 5)
+        return {
+            "conv0": _conv_init(ks[0], 5, 5, self.cin, 6),
+            "conv1": _conv_init(ks[1], 5, 5, 6, 16),
+            "fc0": _dense_init(ks[2], self.flat, 120),
+            "fc1": _dense_init(ks[3], 120, 84),
+            "fc2": _dense_init(ks[4], 84, self.n_classes),
+        }
+
+    def apply(self, params, x):
+        x = _maxpool2(jax.nn.relu(_conv(params["conv0"], x)))
+        x = _maxpool2(jax.nn.relu(_conv(params["conv1"], x)))
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(_dense(params["fc0"], x))
+        x = jax.nn.relu(_dense(params["fc1"], x))
+        return _dense(params["fc2"], x)
+
+
+def cross_entropy_loss(apply_fn):
+    """Build loss_fn(params, xb, yb) for the FL algorithms."""
+
+    def loss_fn(params, xb, yb):
+        logits = apply_fn(params, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
+
+    return loss_fn

@@ -1,0 +1,553 @@
+"""Unified decoder stack covering the assigned architecture families.
+
+One configurable stack handles dense GQA (llama/qwen/gemma), MoE (mixtral /
+llama4), hybrid recurrent (recurrentgemma), attention-free (rwkv6), VLM
+backbones (qwen2-vl M-RoPE), plus an encoder-decoder wrapper (seamless).
+
+Per-layer block types (``ModelConfig.block_pattern``, cycled over layers):
+
+  "attn"   — full-attention transformer layer
+  "swa"    — sliding-window attention layer (window = cfg.window)
+  "rglru"  — RecurrentGemma recurrent layer
+  "rwkv"   — RWKV6 layer (time-mix + channel-mix; replaces attn+FFN)
+
+Execution modes:
+
+  * ``loss(params, tokens, ...)``     — next-token CE (chunked over the
+    sequence so the (tokens, vocab) logits are never materialised at once);
+  * ``prefill(params, tokens, ...)``  — returns last-position logits + caches;
+  * ``decode_step(params, token, state)`` — one token against the caches.
+
+Parameter names are matched by :mod:`repro.sharding.specs` for pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import attention as attn
+from repro.models import layers, moe, rglru, rwkv6
+from repro.sharding.constrain import constrain, constrain_btd
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: Optional[int] = None
+    d_ff: int = 512
+    vocab: int = 1024
+    block_pattern: tuple = ("attn",)
+    window: Optional[int] = None           # for "swa" blocks
+    softcap_attn: Optional[float] = None   # gemma2 attn logit cap
+    softcap_final: Optional[float] = None  # gemma2 final logit cap
+    qkv_bias: bool = False                 # qwen2
+    qk_norm: bool = False                  # gemma3
+    post_norm: bool = False                # gemma2 extra post-norms
+    act: str = "silu"
+    rope_theta: float = 10_000.0
+    mrope_sections: Optional[tuple] = None  # qwen2-vl
+    moe: Optional[moe.MoEConfig] = None
+    moe_period: int = 1                    # every k-th layer is MoE
+    n_shared_experts: int = 0              # llama4 shared expert
+    embed_scale: bool = False              # gemma: x *= sqrt(d)
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.float32
+    # long-context mode: cap "attn" layers to a sliding window (documented
+    # deviation enabling long_500k for gemma2/gemma3/llama4)
+    long_context_cap: Optional[int] = None
+    # lax.scan over repeated layer-cycles (compile-time); False unrolls
+    scan_layers: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def block_type(self, i: int) -> str:
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.moe is not None and (i % self.moe_period
+                                         == self.moe_period - 1)
+
+    def layer_window(self, i: int) -> Optional[int]:
+        bt = self.block_type(i)
+        if bt == "swa":
+            return self.window
+        if bt == "attn":
+            return self.long_context_cap
+        return None
+
+    def num_params(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        d, f, v, hd = self.d_model, self.d_ff, self.vocab, self.hd
+        total = v * d  # embed
+        if not self.tie_embeddings:
+            total += v * d
+        for i in range(self.n_layers):
+            bt = self.block_type(i)
+            if bt in ("attn", "swa"):
+                total += d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                total += self.n_heads * hd * d
+            elif bt == "rglru":
+                total += 2 * d * d + 3 * d * d + d  # in/gates/out approx
+            elif bt == "rwkv":
+                total += 4 * d * d + d * 64 * 2 + d * d  # time-mix
+                total += d * d + 2 * d * f               # channel-mix
+            if bt != "rwkv":
+                if self.is_moe_layer(i):
+                    total += self.moe.n_experts * 3 * d * f + d * self.moe.n_experts
+                    total += self.n_shared_experts * 3 * d * f
+                else:
+                    total += 3 * d * f
+        return total
+
+    def active_params(self) -> int:
+        """Active (per-token) parameters — MoE counts topk experts."""
+        if self.moe is None:
+            return self.num_params()
+        d, f = self.d_model, self.d_ff
+        inactive = (self.moe.n_experts - self.moe.topk) * 3 * d * f
+        n_moe = sum(self.is_moe_layer(i) for i in range(self.n_layers))
+        return self.num_params() - n_moe * inactive
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: dict = {
+        "embed": layers.embed_init(keys[0], cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "layers": {},
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.dense_init(
+            keys[1], cfg.d_model, cfg.vocab, cfg.dtype)
+    for i in range(cfg.n_layers):
+        params["layers"][f"layer_{i}"] = _layer_init(keys[i + 2], cfg, i)
+    return params
+
+
+def _layer_init(key, cfg: ModelConfig, i: int) -> dict:
+    bt = cfg.block_type(i)
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 8)
+    p: dict = {}
+    if bt in ("attn", "swa"):
+        p["ln_attn"] = layers.rmsnorm_init(d, cfg.dtype)
+        p["q"] = layers.dense_init(ks[0], d, cfg.n_heads * hd, cfg.dtype,
+                                   bias=cfg.qkv_bias)
+        p["k"] = layers.dense_init(ks[1], d, cfg.n_kv_heads * hd, cfg.dtype,
+                                   bias=cfg.qkv_bias)
+        p["v"] = layers.dense_init(ks[2], d, cfg.n_kv_heads * hd, cfg.dtype,
+                                   bias=cfg.qkv_bias)
+        p["o"] = layers.dense_init(ks[3], cfg.n_heads * hd, d, cfg.dtype)
+        if cfg.qk_norm:
+            p["q_norm"] = layers.rmsnorm_init(hd, cfg.dtype)
+            p["k_norm"] = layers.rmsnorm_init(hd, cfg.dtype)
+        if cfg.post_norm:
+            p["ln_attn_post"] = layers.rmsnorm_init(d, cfg.dtype)
+    elif bt == "rglru":
+        p["ln_attn"] = layers.rmsnorm_init(d, cfg.dtype)
+        p["rglru"] = rglru.rglru_init(ks[0], d, d, cfg.dtype)
+    elif bt == "rwkv":
+        p["ln_tm"] = layers.layernorm_init(d, cfg.dtype)
+        p["ln_cm"] = layers.layernorm_init(d, cfg.dtype)
+        p["rwkv"] = rwkv6.rwkv6_init(ks[0], d, cfg.d_ff, dtype=cfg.dtype)
+        return p
+    else:
+        raise ValueError(f"unknown block type {bt!r}")
+
+    p["ln_mlp"] = layers.rmsnorm_init(d, cfg.dtype)
+    if cfg.is_moe_layer(i):
+        p["moe"] = moe.moe_init(ks[4], d, cfg.d_ff, cfg.moe, cfg.dtype)
+        if cfg.n_shared_experts:
+            p["shared_mlp"] = layers.mlp_init(
+                ks[5], d, cfg.n_shared_experts * cfg.d_ff, cfg.dtype)
+    else:
+        p["mlp"] = layers.mlp_init(ks[4], d, cfg.d_ff, cfg.dtype)
+    if cfg.post_norm:
+        p["ln_mlp_post"] = layers.rmsnorm_init(d, cfg.dtype)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+
+def _split_heads(x, n, hd):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n, hd).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+
+
+def _qkv(p, cfg: ModelConfig, x, positions, positions3=None):
+    hd = cfg.hd
+    q = _split_heads(layers.dense(p["q"], x), cfg.n_heads, hd)
+    k = _split_heads(layers.dense(p["k"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(layers.dense(p["v"], x), cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(p["q_norm"], q)
+        k = layers.rmsnorm(p["k_norm"], k)
+    if cfg.mrope_sections is not None and positions3 is not None:
+        q = layers.apply_mrope(q, positions3, cfg.mrope_sections,
+                               cfg.rope_theta)
+        k = layers.apply_mrope(k, positions3, cfg.mrope_sections,
+                               cfg.rope_theta)
+    else:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(p, cfg: ModelConfig, i: int, x):
+    """Feed-forward (dense or MoE); returns (out, aux_loss)."""
+    if cfg.is_moe_layer(i):
+        out, aux = moe.moe_apply(p["moe"], x, cfg.moe, cfg.act)
+        if cfg.n_shared_experts:
+            out = out + layers.mlp(p["shared_mlp"], x, cfg.act)
+        return out, aux
+    return layers.mlp(p["mlp"], x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _layer_fwd(p, cfg: ModelConfig, i: int, x, positions, positions3,
+               causal: bool = True):
+    """Full-sequence layer forward (train / prefill). Returns (x, aux)."""
+    bt = cfg.block_type(i)
+    x = constrain_btd(x)
+    if bt == "rwkv":
+        x = x + rwkv6.time_mix(p["rwkv"], layers.layernorm(p["ln_tm"], x))
+        x = constrain_btd(x)
+        x = x + rwkv6.channel_mix(p["rwkv"], layers.layernorm(p["ln_cm"], x))
+        return constrain_btd(x), jnp.zeros((), jnp.float32)
+
+    h = layers.rmsnorm(p["ln_attn"], x)
+    if bt == "rglru":
+        y = rglru.rglru_block(p["rglru"], h)
+    else:
+        q, k, v = _qkv(p, cfg, h, positions, positions3)
+        y = attn.chunked_attention(
+            q, k, v, causal=causal, window=cfg.layer_window(i),
+            softcap=cfg.softcap_attn)
+        y = layers.dense(p["o"], _merge_heads(y))
+    if cfg.post_norm:
+        y = layers.rmsnorm(p["ln_attn_post"], y)
+    x = constrain_btd(x + y)
+
+    h = layers.rmsnorm(p["ln_mlp"], x)
+    y, aux = _ffn(p, cfg, i, h)
+    if cfg.post_norm:
+        y = layers.rmsnorm(p["ln_mlp_post"], y)
+    return constrain_btd(x + y), aux
+
+
+def _embed_in(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    x = layers.embed(params["embed"], tokens).astype(cfg.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    return x
+
+
+def _unembed(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        logits = h.astype(jnp.float32) @ params["embed"][
+            "embedding"].T.astype(jnp.float32)
+    else:
+        logits = layers.dense(params["unembed"], h).astype(jnp.float32)
+    return layers.softcap(logits, cfg.softcap_final)
+
+
+def _effective_cycle(cfg: ModelConfig) -> int:
+    """Layer-cycle length after which the layer *function* repeats exactly
+    (lcm of the block pattern and the MoE period)."""
+    import math
+    cyc = len(cfg.block_pattern)
+    if cfg.moe is not None:
+        cyc = math.lcm(cyc, cfg.moe_period)
+    return cyc
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *,
+                   prefix_embeds=None, positions3=None, causal=True,
+                   remat: bool = True, scan_layers: bool = True):
+    """Token ids (+ optional prefix embeddings) -> final hidden states.
+
+    ``scan_layers``: stack the parameters of repeated layer-cycles and run
+    them under ``lax.scan`` — the layer body is compiled ONCE per cycle
+    position instead of once per layer (MaxText-style; ~n_layers/cycle x
+    faster XLA compiles for the deep stacks).  Numerics are identical to the
+    unrolled loop (tested).  Remat is per cycle under scan, per layer when
+    unrolled.
+    """
+    x = _embed_in(params, cfg, tokens, prefix_embeds)
+    t = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t), (x.shape[0], t))
+    if positions3 is None and cfg.mrope_sections is not None:
+        # text-only default: t/h/w ids all equal the linear position
+        positions3 = jnp.broadcast_to(positions[:, None], (x.shape[0], 3, t))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    cyc = _effective_cycle(cfg)
+    n_rep = cfg.n_layers // cyc
+    first_unstacked = n_rep * cyc
+    use_scan = scan_layers and cfg.scan_layers and n_rep >= 2
+
+    if use_scan:
+        # stack each cycle position's params across repeats: (n_rep, ...)
+        stacked = tuple(
+            jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls),
+                *(params["layers"][f"layer_{r * cyc + pos}"]
+                  for r in range(n_rep)))
+            for pos in range(cyc))
+
+        def cycle_body(x_, cycle_params):
+            aux_c = jnp.zeros((), jnp.float32)
+            for pos in range(cyc):
+                x_, aux = _layer_fwd(cycle_params[pos], cfg, pos, x_,
+                                     positions, positions3, causal)
+                aux_c = aux_c + aux
+            return x_, aux_c
+
+        body = jax.checkpoint(cycle_body) if remat else cycle_body
+
+        def scan_fn(carry, cycle_params):
+            x_, aux_t = carry
+            x_, aux = body(x_, cycle_params)
+            return (x_, aux_t + aux), None
+
+        (x, aux_total), _ = jax.lax.scan(scan_fn, (x, aux_total), stacked)
+
+    for i in range(first_unstacked if use_scan else 0, cfg.n_layers):
+        p = params["layers"][f"layer_{i}"]
+        fwd = lambda p_, x_, i_=i: _layer_fwd(
+            p_, cfg, i_, x_, positions, positions3, causal)
+        if remat:
+            fwd = jax.checkpoint(fwd)
+        x, aux = fwd(p, x)
+        aux_total = aux_total + aux
+    return layers.rmsnorm(params["final_norm"], x), aux_total
+
+
+def loss(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+         positions3=None, loss_chunk: int = 1024, aux_weight: float = 0.01,
+         remat: bool = True):
+    """Next-token chunked cross-entropy over the token positions."""
+    h, aux = forward_hidden(params, cfg, tokens, prefix_embeds=prefix_embeds,
+                            positions3=positions3, remat=remat)
+    npre = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    h = h[:, npre:]
+    b, t, d = h.shape
+    inputs = h[:, :-1]
+    targets = tokens[:, 1:]
+    tm1 = t - 1
+    chunk = min(loss_chunk, tm1)
+    nchunk = -(-tm1 // chunk)
+    pad = nchunk * chunk - tm1
+    inputs = jnp.pad(inputs, ((0, 0), (0, pad), (0, 0)))
+    targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    wmask = jnp.pad(jnp.ones((b, tm1), jnp.float32), ((0, 0), (0, pad)))
+
+    # remat per chunk: the (B, chunk, vocab) logits are recomputed in the
+    # backward pass instead of being stored as scan residuals.
+    @jax.checkpoint
+    def _chunk_nll(hs, ys, ws):
+        logits = constrain(_unembed(params, cfg, hs),
+                           {0: "batch", 1: "seq"})
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, ys[..., None], axis=-1)[..., 0]
+        return (nll * ws).sum()
+
+    def chunk_loss(carry, idx):
+        hs = jax.lax.dynamic_slice_in_dim(inputs, idx * chunk, chunk, axis=1)
+        ys = jax.lax.dynamic_slice_in_dim(targets, idx * chunk, chunk, axis=1)
+        ws = jax.lax.dynamic_slice_in_dim(wmask, idx * chunk, chunk, axis=1)
+        return carry + _chunk_nll(hs, ys, ws), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros(()), jnp.arange(nchunk))
+    return total / (b * tm1) + aux_weight * aux
+
+
+# --------------------------------------------------------------------------- #
+# inference: prefill + decode
+# --------------------------------------------------------------------------- #
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Per-layer cache pytree sized for ``max_len`` context."""
+    state = {}
+    for i in range(cfg.n_layers):
+        bt = cfg.block_type(i)
+        if bt in ("attn", "swa"):
+            w = cfg.layer_window(i)
+            size = min(max_len, w) if w is not None else max_len
+            state[f"layer_{i}"] = attn.init_cache(
+                batch, cfg.n_kv_heads, size, cfg.hd, dtype)
+        elif bt == "rglru":
+            state[f"layer_{i}"] = rglru.rglru_init_state(
+                batch, cfg.d_model, dtype)
+        elif bt == "rwkv":
+            state[f"layer_{i}"] = rwkv6.rwkv_init_state(
+                batch, cfg.d_model, dtype=dtype)
+    return state
+
+
+def decode_step(params, cfg: ModelConfig, token, state: dict,
+                positions3=None):
+    """One-token step.  token: (B,) int32.  Returns (logits, new_state)."""
+    b = token.shape[0]
+    x = _embed_in(params, cfg, token[:, None])
+    new_state = {}
+    # absolute position: every layer state tracks the same length; use the
+    # first layer's counter.
+    first = state[f"layer_{_first_attn_layer(cfg)}"] \
+        if _first_attn_layer(cfg) is not None else None
+    pos_scalar = (first.length if isinstance(first, attn.KVCache)
+                  else jnp.zeros((), jnp.int32))
+    positions = jnp.broadcast_to(pos_scalar, (b, 1))
+    if positions3 is None and cfg.mrope_sections is not None:
+        positions3 = jnp.broadcast_to(positions[:, None], (b, 3, 1))
+    for i in range(cfg.n_layers):
+        p = params["layers"][f"layer_{i}"]
+        bt = cfg.block_type(i)
+        st = state[f"layer_{i}"]
+        if bt == "rwkv":
+            h = layers.layernorm(p["ln_tm"], x)
+            y, shift_tm, s_new = rwkv6.time_mix_decode(
+                p["rwkv"], h, st.shift_tm, st.s)
+            x = x + y
+            h = layers.layernorm(p["ln_cm"], x)
+            x = x + rwkv6.channel_mix(p["rwkv"], h, prev=st.shift_cm)
+            new_state[f"layer_{i}"] = rwkv6.RWKVState(
+                shift_tm=shift_tm, shift_cm=h[:, -1], s=s_new)
+            continue
+        h = layers.rmsnorm(p["ln_attn"], x)
+        if bt == "rglru":
+            y, st_new = rglru.rglru_block_decode(p["rglru"], h, st)
+        else:
+            q, k, v = _qkv(p, cfg, h, positions, positions3)
+            w = cfg.layer_window(i)
+            ring = w is not None and st.k.shape[2] == w
+            if ring:
+                st_new = attn.update_ring_cache(st, k, v)
+                y = attn.ring_decode_attention(q, st_new,
+                                               softcap=cfg.softcap_attn)
+            else:
+                st_new = attn.update_cache(st, k, v)
+                y = attn.decode_attention(q, st_new, window=w,
+                                          softcap=cfg.softcap_attn)
+            y = layers.dense(p["o"], _merge_heads(y))
+        if cfg.post_norm:
+            y = layers.rmsnorm(p["ln_attn_post"], y)
+        x = x + y
+        h = layers.rmsnorm(p["ln_mlp"], x)
+        y, _ = _ffn(p, cfg, i, h)
+        if cfg.post_norm:
+            y = layers.rmsnorm(p["ln_mlp_post"], y)
+        x = x + y
+        new_state[f"layer_{i}"] = st_new
+    h = layers.rmsnorm(params["final_norm"], x)
+    return _unembed(params, cfg, h)[:, 0], new_state
+
+
+def _first_attn_layer(cfg: ModelConfig):
+    for i in range(cfg.n_layers):
+        if cfg.block_type(i) in ("attn", "swa"):
+            return i
+    return None
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
+            prefix_embeds=None, positions3=None, dtype=jnp.bfloat16):
+    """Process a prompt; returns (last-position logits, decode state).
+
+    Caches are produced by the full-sequence forward (recomputing k/v per
+    layer), sized for ``max_len``.
+    """
+    b, t = tokens.shape
+    npre = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    x = _embed_in(params, cfg, tokens, prefix_embeds)
+    ttot = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(ttot), (b, ttot))
+    if positions3 is None and cfg.mrope_sections is not None:
+        positions3 = jnp.broadcast_to(positions[:, None], (b, 3, ttot))
+    state = init_decode_state(cfg, b, max_len, dtype)
+    new_state = {}
+    for i in range(cfg.n_layers):
+        p = params["layers"][f"layer_{i}"]
+        bt = cfg.block_type(i)
+        if bt == "rwkv":
+            h = layers.layernorm(p["ln_tm"], x)
+            r, k, v, g, w = rwkv6._tm_inputs(p["rwkv"], h)
+            hd = 64
+            y, s_fin = kops.wkv6_scan(
+                rwkv6._heads(r, hd), rwkv6._heads(k, hd),
+                rwkv6._heads(v, hd), rwkv6._heads(w, hd), p["rwkv"]["u"])
+            x = x + rwkv6._gn_gate(p["rwkv"], rwkv6._unheads(y).astype(x.dtype), g)
+            hcm = layers.layernorm(p["ln_cm"], x)
+            x = x + rwkv6.channel_mix(p["rwkv"], hcm)
+            new_state[f"layer_{i}"] = rwkv6.RWKVState(
+                shift_tm=h[:, -1], shift_cm=hcm[:, -1], s=s_fin)
+            continue
+        h = layers.rmsnorm(p["ln_attn"], x)
+        if bt == "rglru":
+            gate = jax.nn.gelu(layers.dense(p["rglru"]["wy"], h))
+            xr = layers.dense(p["rglru"]["wx"], h)
+            xc, conv_st = rglru._causal_depthwise_conv(
+                p["rglru"]["conv"]["kernel"], xr)
+            a, gi = rglru._rglru_gates(p["rglru"], xc)
+            ys, h_fin = kops.rglru_scan(gi * xc.astype(jnp.float32), a)
+            y = layers.dense(p["rglru"]["wo"], ys.astype(x.dtype) * gate)
+            new_state[f"layer_{i}"] = rglru.RGLRUState(
+                conv=conv_st.astype(dtype), h=h_fin)
+        else:
+            q, k, v = _qkv(p, cfg, h, positions, positions3)
+            y = attn.chunked_attention(q, k, v, causal=True,
+                                       window=cfg.layer_window(i),
+                                       softcap=cfg.softcap_attn)
+            y = layers.dense(p["o"], _merge_heads(y))
+            st = state[f"layer_{i}"]
+            size = st.k.shape[2]
+            if size < ttot:
+                # ring cache: keep the last `size` positions, rotated so that
+                # slot s holds the token with absolute position p, p % size = s
+                # (matches update_ring_cache's slot = length % window).
+                ks_ = jnp.roll(k[:, :, -size:], ttot % size, axis=2)
+                vs_ = jnp.roll(v[:, :, -size:], ttot % size, axis=2)
+                st_new = attn.KVCache(
+                    k=ks_.astype(st.k.dtype), v=vs_.astype(st.v.dtype),
+                    length=jnp.asarray(ttot, jnp.int32))
+            else:
+                st_new = attn.update_cache(st, k, v)
+            new_state[f"layer_{i}"] = st_new
+        if cfg.post_norm:
+            y = layers.rmsnorm(p["ln_attn_post"], y)
+        x = x + y
+        h = layers.rmsnorm(p["ln_mlp"], x)
+        y, _ = _ffn(p, cfg, i, h)
+        if cfg.post_norm:
+            y = layers.rmsnorm(p["ln_mlp_post"], y)
+        x = x + y
+    h = layers.rmsnorm(params["final_norm"], x)
+    logits = _unembed(params, cfg, h[:, -1:])[:, 0]
+    return logits, new_state

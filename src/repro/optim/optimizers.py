@@ -1,0 +1,84 @@
+"""Minimal pure-pytree optimizers (no external deps).
+
+``make(name, lr, **kw) -> (init_fn, update_fn)`` with
+``update_fn(grads, opt_state, params) -> (new_params, new_opt_state)``.
+
+* ``sgd``      — stateless; the choice for the 400B MoE (no optimizer
+  memory; FedComLoc's local steps are plain SGD corrected by the control
+  variate anyway).
+* ``momentum`` — bf16 momentum buffer.
+* ``adam``     — fp32 m/v; for the <=10B architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+OptPair = Tuple[Callable, Callable]
+
+
+def _tmap(f, *ts):
+    return jax.tree_util.tree_map(f, *ts)
+
+
+def sgd(lr: float) -> OptPair:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = _tmap(lambda p, g: (p - lr * g.astype(jnp.float32)
+                                  ).astype(p.dtype), params, grads)
+        return new, state
+
+    return init, update
+
+
+def momentum(lr: float, beta: float = 0.9) -> OptPair:
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros_like(p), params)}
+
+    def update(grads, state, params):
+        m = _tmap(lambda m_, g: beta * m_ + g.astype(m_.dtype),
+                  state["m"], grads)
+        new = _tmap(lambda p, m_: (p - lr * m_.astype(jnp.float32)
+                                   ).astype(p.dtype), params, m)
+        return new, {"m": m}
+
+    return init, update
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> OptPair:
+    def init(params):
+        return {
+            "m": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2)
+                  * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = _tmap(
+            lambda p, m_, v_: (p - lr * (m_ / bc1)
+                               / (jnp.sqrt(v_ / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return init, update
+
+
+_REGISTRY = {"sgd": sgd, "momentum": momentum, "adam": adam}
+
+
+def make(name: str, lr: float, **kw) -> OptPair:
+    return _REGISTRY[name](lr, **kw)

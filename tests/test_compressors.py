@@ -1,0 +1,126 @@
+"""Unit + property tests for the compression operators (paper §3.1)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compressors import (
+    Compose, Identity, QuantQr, TopK, make_compressor)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tree_of(key, shapes):
+    keys = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(keys, shapes))}
+
+
+class TestTopK:
+    def test_keeps_exactly_k(self):
+        x = {"a": jax.random.normal(jax.random.PRNGKey(0), (1000,))}
+        out = TopK(density=0.1).compress(x)
+        assert int((out["a"] != 0).sum()) == 100
+
+    def test_keeps_largest(self):
+        x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+        out = TopK(density=0.4).compress({"a": x})["a"]
+        np.testing.assert_allclose(out, [0.0, -5.0, 0.0, 3.0, 0.0])
+
+    def test_density_one_identity(self):
+        x = tree_of(jax.random.PRNGKey(1), [(64,), (8, 8)])
+        out = TopK(density=1.0).compress(x)
+        for k in x:
+            np.testing.assert_array_equal(out[k], x[k])
+
+    def test_global_scope(self):
+        x = {"a": jnp.asarray([10.0, 0.1]), "b": jnp.asarray([5.0, 0.2])}
+        out = TopK(density=0.5, scope="global").compress(x)
+        np.testing.assert_allclose(out["a"], [10.0, 0.0])
+        np.testing.assert_allclose(out["b"], [5.0, 0.0])
+
+    @hypothesis.given(
+        st.integers(10, 300), st.floats(0.05, 1.0),
+        st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_best_k_approx_property(self, n, density, seed):
+        """TopK(x) is the best ||.||-approximation among k-sparse vectors:
+        the kept set has magnitudes >= every dropped one."""
+        x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+        out = np.asarray(TopK(density=density).compress(
+            {"a": jnp.asarray(x)})["a"])
+        kept = np.abs(x[out != 0])
+        dropped = np.abs(x[out == 0])
+        if kept.size and dropped.size:
+            assert kept.min() >= dropped.max() - 1e-7
+        # kept values pass through unchanged
+        np.testing.assert_allclose(out[out != 0], x[out != 0])
+
+    def test_bits(self):
+        x = {"a": jnp.zeros((1000,))}
+        assert TopK(density=0.1).bits(x) == 100 * 64
+        assert Identity().bits(x) == 1000 * 32
+
+
+class TestQuantQr:
+    def test_requires_rng(self):
+        with pytest.raises(ValueError):
+            QuantQr(r=4).compress({"a": jnp.ones((4,))})
+
+    def test_zero_input(self):
+        out = QuantQr(r=4).compress({"a": jnp.zeros((16,))},
+                                    jax.random.PRNGKey(0))
+        np.testing.assert_array_equal(out["a"], 0.0)
+
+    def test_values_on_grid(self):
+        x = {"a": jax.random.normal(jax.random.PRNGKey(0), (256,))}
+        r = 3
+        out = QuantQr(r=r).compress(x, jax.random.PRNGKey(1))["a"]
+        norm = float(jnp.linalg.norm(x["a"]))
+        levels = np.asarray(out) / norm * (2 ** r)
+        np.testing.assert_allclose(levels, np.round(levels), atol=1e-4)
+
+    def test_unbiased(self):
+        """E[Q_r(x)] = x (Def. 3.2)."""
+        x = {"a": jnp.asarray([0.3, -1.2, 2.0, 0.017])}
+        comp = QuantQr(r=2)
+        keys = jax.random.split(jax.random.PRNGKey(2), 3000)
+        acc = np.zeros(4)
+        for k in keys:
+            acc += np.asarray(comp.compress(x, k)["a"])
+        np.testing.assert_allclose(acc / len(keys), x["a"], atol=0.02)
+
+    @hypothesis.given(st.integers(1, 10), st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_error_bound(self, r, seed):
+        """|Q_r(x)_i - x_i| <= ||x|| / 2^r componentwise."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+        out = QuantQr(r=r).compress({"a": x}, jax.random.PRNGKey(seed + 1))
+        err = np.abs(np.asarray(out["a"]) - np.asarray(x))
+        bound = float(jnp.linalg.norm(x)) / 2 ** r + 1e-5
+        assert err.max() <= bound
+
+    def test_bits_fewer_than_dense(self):
+        x = {"a": jnp.zeros((1000,))}
+        assert QuantQr(r=8).bits(x) == 1000 * 9 + 32
+
+
+class TestCompose:
+    def test_topk_then_quant(self):
+        x = {"a": jax.random.normal(jax.random.PRNGKey(0), (512,))}
+        comp = Compose(TopK(0.25), QuantQr(4))
+        out = comp.compress(x, jax.random.PRNGKey(1))["a"]
+        assert int((out != 0).sum()) <= 128
+        # bits: 25% coords x (32 idx + 1 sign + 4 level) + norm
+        assert comp.bits(x) == 128 * 37 + 32
+
+
+def test_registry():
+    assert isinstance(make_compressor("topk", density=0.3), TopK)
+    assert isinstance(make_compressor("quant", r=4), QuantQr)
+    assert isinstance(make_compressor("none"), Identity)
+    with pytest.raises(ValueError):
+        make_compressor("nope")

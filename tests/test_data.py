@@ -1,0 +1,90 @@
+"""Data pipeline: Dirichlet partitioning properties + synthetic datasets."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import numpy as np
+
+from repro.core import fed_data
+from repro.data import dirichlet, synthetic
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestDirichlet:
+    @hypothesis.given(st.integers(2, 20), st.floats(0.05, 10.0),
+                      st.integers(0, 1000))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_partition_is_exact_cover(self, n_clients, alpha, seed):
+        labels = np.random.default_rng(seed).integers(0, 10, size=500)
+        parts = dirichlet.dirichlet_partition(labels, n_clients, alpha,
+                                              seed=seed)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == 500
+        assert len(np.unique(allidx)) == 500          # no dup, no loss
+        assert all(len(p) >= 1 for p in parts)
+
+    def test_alpha_controls_heterogeneity(self):
+        """Smaller alpha -> each client more concentrated on few classes."""
+        labels = np.random.default_rng(0).integers(0, 10, size=20_000)
+        shares = {}
+        for alpha in (0.1, 100.0):
+            parts = dirichlet.dirichlet_partition(labels, 20, alpha, seed=1)
+            stats = dirichlet.partition_stats(parts, labels)
+            shares[alpha] = stats["max_class_share"]
+        assert shares[0.1] > shares[100.0] + 0.2
+
+    def test_fed_data_batching(self):
+        labels = np.arange(100) % 10
+        x = np.random.default_rng(0).normal(size=(100, 4)).astype(np.float32)
+        parts = dirichlet.dirichlet_partition(labels, 5, 0.5, seed=0)
+        data = fed_data.from_numpy_partition(x, labels, parts)
+        xb, yb = data.sample_batch(jax.random.PRNGKey(0),
+                                   np.int32(2), batch=8)
+        assert xb.shape == (8, 4) and yb.shape == (8,)
+        # every drawn sample belongs to client 2's shard
+        client_set = set(parts[2].tolist())
+        flat = np.asarray(data.client_indices[2][:data.client_sizes[2]])
+        assert set(flat.tolist()) == client_set
+
+
+class TestSynthetic:
+    def test_shapes(self):
+        ds = synthetic.make_mnist_like(n_train=2000, n_test=500)
+        assert ds.x_train.shape == (2000, 784)
+        assert ds.x_test.shape == (500, 784)
+        assert ds.n_classes == 10
+        ds2 = synthetic.make_cifar_like(n_train=1000, n_test=200)
+        assert ds2.x_train.shape == (1000, 32, 32, 3)
+
+    def test_learnable(self):
+        """A linear probe must beat chance by a wide margin (the dataset has
+        class structure, unlike pure noise)."""
+        ds = synthetic.make_mnist_like(n_train=4000, n_test=1000)
+        # one-vs-rest least squares
+        Y = np.eye(10)[ds.y_train]
+        X = np.concatenate([ds.x_train, np.ones((len(ds.x_train), 1))], 1)
+        W, *_ = np.linalg.lstsq(X, Y, rcond=None)
+        Xt = np.concatenate([ds.x_test, np.ones((len(ds.x_test), 1))], 1)
+        acc = (np.argmax(Xt @ W, 1) == ds.y_test).mean()
+        assert acc > 0.6, acc
+
+    def test_cifar_like_harder(self):
+        easy = synthetic.make_mnist_like(n_train=3000, n_test=800)
+        hard = synthetic.make_cifar_like(n_train=3000, n_test=800)
+
+        def probe_acc(ds):
+            Xf = ds.x_train.reshape(len(ds.x_train), -1)
+            Y = np.eye(10)[ds.y_train]
+            X = np.concatenate([Xf, np.ones((len(Xf), 1))], 1)
+            W, *_ = np.linalg.lstsq(X, Y, rcond=None)
+            Xt = ds.x_test.reshape(len(ds.x_test), -1)
+            Xt = np.concatenate([Xt, np.ones((len(Xt), 1))], 1)
+            return (np.argmax(Xt @ W, 1) == ds.y_test).mean()
+
+        assert probe_acc(easy) > probe_acc(hard) + 0.1
+
+    def test_lm_tokens(self):
+        toks = synthetic.make_lm_tokens(vocab=256, n_seqs=8, seq_len=64)
+        assert toks.shape == (8, 64)
+        assert toks.min() >= 0 and toks.max() < 256

@@ -1,0 +1,213 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs the pure-jnp
+oracles in repro.kernels.ref, across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention as fa, quantize, ref,
+                           rglru_scan as rg, topk_compress, wkv6)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --------------------------------------------------------------------------- #
+# TopK radix select
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("n,k", [
+    (128, 1), (1000, 100), (1024, 1024 - 1), (4096, 2048),
+    (5000, 13), (333, 300),
+])
+def test_topk_matches_oracle(n, k):
+    x = jax.random.normal(jax.random.PRNGKey(n + k), (n,))
+    a = ref.topk_mask(x, k)
+    b = topk_compress.topk_mask(x, k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_topk_with_ties():
+    x = jnp.asarray([1.0, -1.0, 1.0, 0.5, 2.0] * 40)
+    a = ref.topk_mask(x, 3)
+    b = topk_compress.topk_mask(x, 3, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # threshold semantics: all ties at the kth value are kept
+    assert int((np.asarray(b) != 0).sum()) >= 3
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (777,)).astype(dtype)
+    a = ref.topk_mask(x.astype(jnp.float32), 77).astype(dtype)
+    b = topk_compress.topk_mask(x.astype(jnp.float32), 77,
+                                interpret=True).astype(dtype)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# QSGD quantization
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("n", [64, 1000, 4096])
+@pytest.mark.parametrize("r", [1, 4, 8])
+def test_quantize_matches_oracle(n, r):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    u = jax.random.uniform(jax.random.PRNGKey(n + 1), (n,))
+    a = ref.quantize_qr_with_uniforms(x, r, u)
+    b = quantize.quantize_qr_with_uniforms(x, r, u, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_quantize_zero_vector():
+    x = jnp.zeros((256,))
+    u = jnp.full((256,), 0.5)
+    b = quantize.quantize_qr_with_uniforms(x, 4, u, interpret=True)
+    np.testing.assert_array_equal(np.asarray(b), 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=64),
+    dict(causal=True, softcap=30.0),
+    dict(causal=True, window=32, softcap=50.0),
+])
+def test_flash_matches_oracle(kwargs):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 4, 128, 64))
+    k = jax.random.normal(ks[1], (2, 2, 128, 64))
+    v = jax.random.normal(ks[2], (2, 2, 128, 64))
+    a = ref.mha_attention(q, k, v, **kwargs)
+    b = fa.flash_attention(q, k, v, interpret=True, bq=64, bk=64, **kwargs)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("hq,hkv,dh", [(8, 8, 32), (8, 1, 64), (6, 2, 128)])
+def test_flash_gqa_shapes(hq, hkv, dh):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, hq, 128, dh))
+    k = jax.random.normal(ks[1], (1, hkv, 128, dh))
+    v = jax.random.normal(ks[2], (1, hkv, 128, dh))
+    a = ref.mha_attention(q, k, v, causal=True)
+    b = fa.flash_attention(q, k, v, interpret=True, bq=64, bk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_offset():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 4, 1, 64))
+    k = jax.random.normal(ks[1], (2, 2, 256, 64))
+    v = jax.random.normal(ks[2], (2, 2, 256, 64))
+    a = ref.mha_attention(q, k, v, causal=True, q_offset=255)
+    b = fa.flash_attention(q, k, v, causal=True, q_offset=255,
+                           interpret=True, bq=1, bk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dtype)
+    a = ref.mha_attention(q, k, v, causal=True)
+    b = fa.flash_attention(q, k, v, causal=True, interpret=True,
+                           bq=64, bk=64)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU scan
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("b,t,d,bt,bd", [
+    (1, 8, 128, 8, 128), (2, 64, 256, 8, 128), (3, 32, 384, 16, 128),
+])
+def test_rglru_matches_oracle(b, t, d, bt, bd):
+    ks = jax.random.split(jax.random.PRNGKey(t + d), 2)
+    x = jax.random.normal(ks[0], (b, t, d))
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (b, t, d)))
+    ya, ha = ref.rglru_scan(x, a)
+    yb, hb = rg.rglru_scan(x, a, interpret=True, bt=bt, bd=bd)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(ha), np.asarray(hb),
+                               rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------------------------------------- #
+# RWKV6 WKV scan
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("b,h,t,kd", [(1, 1, 16, 64), (2, 3, 64, 64)])
+def test_wkv6_matches_oracle(b, h, t, kd):
+    ks = jax.random.split(jax.random.PRNGKey(b * h + t), 5)
+    r = jax.random.normal(ks[0], (b, h, t, kd)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, t, kd)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, t, kd)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, t, kd)))
+    u = jax.random.normal(ks[4], (h, kd)) * 0.1
+    ya, sa = ref.wkv6_scan(r, k, v, w, u)
+    yb, sb = wkv6.wkv6_scan(r, k, v, w, u, interpret=True, bt=min(16, t))
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv6_chunked_equals_flat():
+    """The two-level remat scan is numerically identical to a flat scan."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    b, h, t, kd = 2, 2, 64, 32
+    r = jax.random.normal(ks[0], (b, h, t, kd)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, t, kd)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, t, kd)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, t, kd)))
+    u = jax.random.normal(ks[4], (h, kd)) * 0.1
+    ya, sa = ref.wkv6_scan(r, k, v, w, u, chunk=t)   # single chunk = flat
+    yb, sb = ref.wkv6_scan(r, k, v, w, u, chunk=8)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# custom-VJP flash gradient vs naive autodiff
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True),
+    dict(causal=True, window=16),
+    dict(causal=True, softcap=20.0),
+])
+def test_flash_custom_vjp_grads(kwargs):
+    from repro.models import attention as attn
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (2, 4, 64, 32))
+    k = jax.random.normal(ks[1], (2, 2, 64, 32))
+    v = jax.random.normal(ks[2], (2, 2, 64, 32))
+
+    def f_ref(q_, k_, v_):
+        return (ref.mha_attention(q_, k_, v_, **kwargs)
+                .astype(jnp.float32) ** 2).sum()
+
+    def f_new(q_, k_, v_):
+        return (attn.chunked_attention(q_, k_, v_, chunk=16, **kwargs)
+                .astype(jnp.float32) ** 2).sum()
+
+    ga = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    gb = jax.grad(f_new, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(ga, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)

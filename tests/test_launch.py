@@ -1,0 +1,164 @@
+"""Launch-layer units: dry-run HLO parsing, input specs, shape policies,
+roofline analysis math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_spec
+from repro.configs.base import SHAPES
+from repro.launch import steps as steps_mod
+from repro.launch.dryrun import _shape_bytes, collective_bytes
+from repro.sharding import specs as sh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestHLOParsing:
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32[16,1024]{1,0}") == 16 * 1024 * 4
+        assert _shape_bytes("bf16[2,8,256,256]{3,2,1,0}") == 2 * 8 * 256 * 256 * 2
+        assert _shape_bytes("(f32[128]{0}, f32[128,896]{1,0})") \
+            == 128 * 4 + 128 * 896 * 4
+        assert _shape_bytes("pred[64]") == 64
+
+    def test_collective_bytes(self):
+        hlo = """
+  %all-gather.99 = f32[256,4096,896]{2,1,0} all-gather(%x), channel_id=23
+  %all-reduce.1 = (f32[128]{0}, f32[896]{0}) all-reduce(%a, %b), replica_groups=[16,32]<=[512]
+  %add.5 = f32[16,16]{1,0} add(%p, %q)
+  ROOT %reduce-scatter.2 = bf16[64,64]{1,0} reduce-scatter(%y), channel_id=9
+"""
+        out = collective_bytes(hlo)
+        assert out["all-gather"] == 256 * 4096 * 896 * 4
+        assert out["all-reduce"] == (128 + 896) * 4
+        assert out["reduce-scatter"] == 64 * 64 * 2
+        assert out["all-to-all"] == 0
+        assert out["count"] == 3
+
+    def test_non_collective_ops_ignored(self):
+        out = collective_bytes("  %x = f32[8]{0} all_gather_start(%y)\n"
+                               "  %z = f32[8]{0} add(%x, %x)\n")
+        assert out["count"] <= 1  # start variants may or may not match
+
+
+class TestShardingHelpers:
+    def _mesh(self):
+        dev = np.array(jax.devices()[:1]).reshape(1, 1)
+        return Mesh(dev, ("data", "model"))
+
+    def test_sanitize_drops_uneven(self):
+        mesh = self._mesh()
+        spec = sh._sanitize(P("model", "data"), (256206, 1024), mesh)
+        # sizes are 1 on the host mesh so everything divides; fake a check
+        assert isinstance(spec, P)
+
+    def test_batch_axis(self):
+        mesh = self._mesh()
+        assert sh.batch_axis(mesh, 4) == "data"   # 4 % 1 == 0
+        # non-divisible case needs a >1 mesh; simulated via _axis_size
+        assert sh._axis_size(mesh, ("data", "model")) == 1
+        assert sh._axis_size(mesh, None) == 1
+
+
+class TestShapePolicies:
+    def test_adjust_for_shape_caps_only_long(self):
+        spec = get_spec("gemma2-9b")
+        assert spec.model.long_context_cap == 8192
+        adj = steps_mod.adjust_for_shape(spec, "train_4k")
+        assert adj.model.long_context_cap is None
+        adj = steps_mod.adjust_for_shape(spec, "long_500k")
+        assert adj.model.long_context_cap == 8192
+
+    def test_input_shapes_table(self):
+        assert SHAPES["train_4k"].global_batch == 256
+        assert SHAPES["train_4k"].seq_len == 4096
+        assert SHAPES["prefill_32k"].global_batch == 32
+        assert SHAPES["decode_32k"].global_batch == 128
+        assert SHAPES["long_500k"].seq_len == 524_288
+        assert SHAPES["long_500k"].global_batch == 1
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_optimizer_policy(self, arch):
+        spec = get_spec(arch)
+        name, lr = steps_mod._optimizer_for(spec)
+        if arch.startswith("llama4"):
+            assert name == "sgd"      # no fp32 adam state at 400B
+        else:
+            assert name == "adam"
+
+
+class TestRooflineMath:
+    def test_analyze_terms(self):
+        from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, analyze
+        rec = {
+            "status": "ok", "arch": "x", "shape": "train_4k",
+            "mesh": "16x16", "n_devices": 256,
+            "flops": PEAK_FLOPS,            # => exactly 1 s compute
+            "bytes_accessed": HBM_BW * 2,   # => 2 s memory
+            "collective_bytes": {"all-gather": LINK_BW * 3,
+                                 "all-reduce": 0, "reduce-scatter": 0,
+                                 "all-to-all": 0, "collective-permute": 0},
+            "per_device_memory": {"argument_bytes": 0, "output_bytes": 0,
+                                  "temp_bytes": 2**30, "alias_bytes": 0},
+            "model": {"num_params": 10**9, "active_params": 10**9},
+        }
+        out = analyze(rec)
+        assert abs(out["t_compute_s"] - 1.0) < 1e-9
+        assert abs(out["t_memory_s"] - 2.0) < 1e-9
+        assert abs(out["t_collective_s"] - 3.0) < 1e-9
+        assert out["bottleneck"] == "collective"
+        # 6ND: 3 (mult) * 2 * 1e9 * (4096*256) / 256 devices
+        assert abs(out["model_flops_per_dev"]
+                   - 3 * 2 * 1e9 * 4096 * 256 / 256) < 1
+        assert out["hbm_gib_per_dev"] == 1.0
+
+    def test_analyze_passthrough_skip(self):
+        from benchmarks.roofline import analyze
+        rec = {"status": "skipped", "arch": "a", "shape": "s", "reason": "r"}
+        assert analyze(rec)["status"] == "skipped"
+
+
+class TestFedInt8Sync:
+    def test_int8_round_runs_and_learns(self):
+        import dataclasses
+
+        from repro.configs.base import reduced
+        from repro.data import synthetic
+        from repro.launch import fed_train
+        from repro.models import transformer as tfm
+
+        spec = reduced(get_spec("qwen2-0.5b"))
+        m = dataclasses.replace(spec.model, n_layers=1, d_model=64,
+                                d_ff=128, vocab=64, n_heads=2,
+                                n_kv_heads=1, head_dim=32,
+                                dtype=jnp.float32)
+        spec = dataclasses.replace(spec, model=m)
+        dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+        mesh = Mesh(dev, ("pod", "data", "model"))
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                    global_batch=4)
+        fed = fed_train.FedTrainConfig(gamma=0.3, local_steps=4,
+                                       compressor="quant", quant_bits=7,
+                                       sync_mode="int8")
+        b = fed_train.build_fed_round(spec, shape, mesh, fed)
+        params = tfm.init_params(jax.random.PRNGKey(0), m)
+        stack = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (1,) + x.shape), t)
+        ps, hs = stack(params), stack(
+            jax.tree_util.tree_map(jnp.zeros_like, params))
+        toks = jnp.asarray(synthetic.make_lm_tokens(64, 4, 64, seed=0)
+                           ).reshape(1, 4, 64)
+        with mesh:
+            step = jax.jit(b.fn, in_shardings=b.in_shardings,
+                           out_shardings=b.out_shardings)
+            losses = []
+            key = jax.random.PRNGKey(1)
+            for _ in range(6):
+                key, sub = jax.random.split(key)
+                ps, hs, loss = step(ps, hs, {"tokens": toks}, sub)
+                losses.append(float(loss))
+        assert losses[-1] < losses[0]
+        assert np.isfinite(losses).all()

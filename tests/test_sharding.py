@@ -1,0 +1,153 @@
+"""Sharding rules + pjit lowering of the production step functions on the
+host mesh (1x1 / 1x1x1), plus the federated multi-pod round."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_spec
+from repro.configs.base import SHAPES, reduced
+from repro.launch import fed_train, steps as steps_mod
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tfm
+from repro.sharding import specs as sh
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def small_shape(kind):
+    base = {"train": SHAPES["train_4k"], "prefill": SHAPES["prefill_32k"],
+            "decode": SHAPES["decode_32k"]}[kind]
+    return dataclasses.replace(base, seq_len=256, global_batch=2)
+
+
+class TestParamSpecs:
+    def test_rules_cover_every_param(self):
+        mesh = make_host_mesh()
+        for arch in ("mixtral-8x7b", "recurrentgemma-2b", "rwkv6-3b",
+                     "gemma2-9b", "seamless-m4t-large-v2"):
+            spec = reduced(get_spec(arch))
+            pstruct = steps_mod._params_struct(spec)
+            shardings = sh.param_shardings(pstruct, mesh)
+            # every leaf got a NamedSharding with matching rank
+            flat_p = jax.tree_util.tree_leaves_with_path(pstruct)
+            flat_s = jax.tree_util.tree_leaves(shardings)
+            assert len(flat_p) == len(flat_s)
+            for (path, leaf), ns in zip(flat_p, flat_s):
+                assert len(ns.spec) <= len(leaf.shape), (path, ns.spec)
+
+    def test_big_tensors_are_sharded(self):
+        """On the production mesh no parameter > 64 MiB may be replicated."""
+        import os
+        mesh_devs = np.array(jax.devices()[:1]).reshape(1, 1)
+        mesh = Mesh(mesh_devs, ("data", "model"))
+        for arch in ("qwen2-7b", "mixtral-8x7b", "rwkv6-3b"):
+            spec = get_spec(arch)
+            pstruct = steps_mod._params_struct(spec)
+            shardings = sh.param_shardings(
+                pstruct, mesh,
+                n_experts=steps_mod._n_experts(spec))
+            for (path, leaf), ns in zip(
+                    jax.tree_util.tree_leaves_with_path(pstruct),
+                    jax.tree_util.tree_leaves(shardings)):
+                size = leaf.size * 2
+                if size > 64 * 2**20:
+                    assert any(s is not None for s in ns.spec), \
+                        (arch, jax.tree_util.keystr(path), leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mixtral-8x7b",
+                                  "recurrentgemma-2b", "rwkv6-3b",
+                                  "seamless-m4t-large-v2", "qwen2-vl-7b"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_steps_lower_on_host_mesh(arch, kind):
+    spec = reduced(get_spec(arch))
+    mesh = make_host_mesh()
+    shape = small_shape(kind)
+    if kind == "train":
+        b = steps_mod.build_train_step(spec, shape, mesh)
+    elif kind == "prefill":
+        b = steps_mod.build_prefill_step(spec, shape, mesh)
+    else:
+        b = steps_mod.build_serve_step(spec, shape, mesh)
+    with mesh:
+        lowered = jax.jit(b.fn, in_shardings=b.in_shardings,
+                          out_shardings=b.out_shardings,
+                          donate_argnums=b.donate_argnums).lower(*b.args)
+        lowered.compile()
+
+
+class TestFedRound:
+    def _mesh(self):
+        dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+        return Mesh(dev, ("pod", "data", "model"))
+
+    def test_fed_round_lowers(self):
+        spec = reduced(get_spec("qwen2-0.5b"))
+        mesh = self._mesh()
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=128,
+                                    global_batch=2)
+        fed = fed_train.FedTrainConfig(local_steps=2, compressor="topk",
+                                       density=0.25)
+        b = fed_train.build_fed_round(spec, shape, mesh, fed)
+        with mesh:
+            jax.jit(b.fn, in_shardings=b.in_shardings,
+                    out_shardings=b.out_shardings,
+                    donate_argnums=b.donate_argnums).lower(*b.args).compile()
+
+    def test_fed_round_executes_and_learns(self):
+        """Run real federated rounds of a tiny LM on the host multi-pod mesh
+        and check the loss drops."""
+        spec = reduced(get_spec("qwen2-0.5b"))
+        m = dataclasses.replace(spec.model, n_layers=1, d_model=64,
+                                d_ff=128, vocab=64, n_heads=2, n_kv_heads=1,
+                                head_dim=32, dtype=jnp.float32)
+        spec = dataclasses.replace(spec, model=m)
+        mesh = self._mesh()
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                    global_batch=4)
+        fed = fed_train.FedTrainConfig(gamma=0.3, local_steps=4,
+                                       compressor="quant", quant_bits=8)
+        b = fed_train.build_fed_round(spec, shape, mesh, fed)
+        params = tfm.init_params(jax.random.PRNGKey(0), m)
+        h = jax.tree_util.tree_map(jnp.zeros_like, params)
+        stackp = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (1,) + x.shape), params)
+        stackh = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (1,) + x.shape), h)
+        from repro.data import synthetic
+        toks = jnp.asarray(synthetic.make_lm_tokens(64, 4, 64, seed=0)
+                           ).reshape(1, 4, 64)
+        with mesh:
+            step = jax.jit(b.fn, in_shardings=b.in_shardings,
+                           out_shardings=b.out_shardings)
+            losses = []
+            key = jax.random.PRNGKey(1)
+            for r in range(8):
+                key, sub = jax.random.split(key)
+                stackp, stackh, loss = step(
+                    stackp, stackh, {"tokens": toks},
+                    jax.random.key_data(sub) if hasattr(
+                        jax.random, "key_data") else sub)
+                losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+        assert np.isfinite(losses).all()
+
+
+def test_compress_tree_ops():
+    tree = {"a": jnp.asarray(np.random.default_rng(0).normal(
+        size=(64,)).astype(np.float32))}
+    fed = fed_train.FedTrainConfig(compressor="topk", density=0.25)
+    out = fed_train.compress_tree(tree, fed, jax.random.PRNGKey(0))
+    nnz = int((out["a"] != 0).sum())
+    assert 10 <= nnz <= 22   # ~16 kept (threshold semantics)
+    bits = fed_train.compressed_bits(tree, fed)
+    assert bits == 0.25 * 64 * 64
+    fedq = fed_train.FedTrainConfig(compressor="quant", quant_bits=4)
+    outq = fed_train.compress_tree(tree, fedq, jax.random.PRNGKey(1))
+    assert outq["a"].shape == (64,)
+    assert fed_train.compressed_bits(tree, fedq) == 64 * 5

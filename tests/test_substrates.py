@@ -1,0 +1,65 @@
+"""Optimizers + checkpointing substrates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.optim import optimizers
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name,kw", [("sgd", {}), ("momentum", {}),
+                                     ("adam", {})])
+def test_optimizer_minimizes_quadratic(name, kw):
+    init, update = optimizers.make(name, lr=0.1, **kw)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - jnp.asarray([1.0, 1.0])) ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = update(g, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0],
+                               atol=1e-2)
+
+
+def test_sgd_stateless():
+    init, _ = optimizers.make("sgd", lr=0.1)
+    assert init({"w": jnp.ones(3)}) == ()
+
+
+def test_adam_fp32_state_for_bf16_params():
+    init, update = optimizers.make("adam", lr=0.1)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = init(params)
+    assert state["m"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new, state = update(g, state, params)
+    assert new["w"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                      "b": jnp.zeros(3)},
+            "step": jnp.asarray(7)}
+    path = tmp_path / "ckpt.npz"
+    checkpoint.save(path, tree, meta={"round": 7})
+    loaded, meta = checkpoint.load(path, like=tree)
+    assert meta["round"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_overwrite(tmp_path):
+    path = tmp_path / "c.npz"
+    checkpoint.save(path, {"a": jnp.zeros(2)}, meta={"v": 1})
+    checkpoint.save(path, {"a": jnp.ones(2)}, meta={"v": 2})
+    loaded, meta = checkpoint.load(path, like={"a": jnp.zeros(2)})
+    assert meta["v"] == 2
+    np.testing.assert_array_equal(np.asarray(loaded["a"]), 1.0)
