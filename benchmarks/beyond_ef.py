@@ -6,7 +6,7 @@ this benchmark measures whether it helps empirically at aggressive sparsity
 (K = 5/10%), and whether Polyak server momentum speeds up the rounds axis.
 """
 
-from repro.core.compressors import TopK
+from repro.compress import TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

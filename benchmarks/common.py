@@ -22,6 +22,10 @@ from repro.models import small
 FAST_ROUNDS = 12
 FULL_ROUNDS = 60
 
+# Prefer the fused run_rounds engine (one jit per eval chunk instead of one
+# per round); benchmarks/run.py --no-fuse flips this for A/B timing.
+FUSE_ROUNDS = True
+
 
 @functools.lru_cache(maxsize=8)
 def mnist_setup(n_clients: int = 20, alpha: float = 0.7, seed: int = 0):
@@ -55,7 +59,7 @@ def run_fl(name: str, alg, model, eval_fn, rounds: int, seed: int = 0,
     hist = server.run_federated(
         alg, model.init(jax.random.PRNGKey(seed)), rounds,
         jax.random.PRNGKey(seed + 1), eval_fn,
-        eval_every=max(1, rounds // 6))
+        eval_every=max(1, rounds // 6), fuse=FUSE_ROUNDS)
     wall = time.time() - t0
     row = {
         "name": name,

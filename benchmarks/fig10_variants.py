@@ -1,6 +1,6 @@
 """Paper Figure 10 — FedComLoc-Com vs -Local vs -Global across sparsity."""
 
-from repro.core.compressors import TopK
+from repro.compress import TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

@@ -1,6 +1,6 @@
 """Paper Appendix B.3 Figure 16 — double compression (TopK then Q_r)."""
 
-from repro.core.compressors import Compose, QuantQr, TopK
+from repro.compress import Compose, QuantQr, TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

@@ -1,7 +1,7 @@
 """Paper Figure 3 — CNN on FedCIFAR10 (synthetic stand-in): sparsity ratios
 with tuned vs fixed stepsize."""
 
-from repro.core.compressors import Identity, TopK
+from repro.compress import Identity, TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

@@ -1,6 +1,6 @@
 """Paper Figure 5 / B.2 — Q_r quantization, r in {4, 8, 16, 32}."""
 
-from repro.core.compressors import Identity, QuantQr
+from repro.compress import Identity, QuantQr
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

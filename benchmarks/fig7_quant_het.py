@@ -1,6 +1,6 @@
 """Paper Figure 7 / 14 — quantization vs data heterogeneity."""
 
-from repro.core.compressors import QuantQr
+from repro.compress import QuantQr
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

@@ -3,7 +3,7 @@
 Total cost = rounds x (1 + tau / p) with tau = 0.01 (paper's cost model:
 a communication round costs 1, a local step costs tau)."""
 
-from repro.core.compressors import TopK
+from repro.compress import TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

@@ -2,7 +2,7 @@
 
 from repro.core.baselines import FedAvg, FedConfig, FedDyn, Scaffold, \
     SparseFedAvg
-from repro.core.compressors import Identity, TopK
+from repro.compress import Identity, TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

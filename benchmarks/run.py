@@ -39,7 +39,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="drive FL rounds one jit call per round instead of "
+                         "the fused run_rounds engine (A/B timing)")
     args = ap.parse_args()
+
+    if args.no_fuse:
+        from benchmarks import common
+        common.FUSE_ROUNDS = False
 
     mods = args.only if args.only else MODULES
     all_rows = []

@@ -1,7 +1,7 @@
 """Paper Table 1 / Figure 1 — test accuracy across TopK density ratios on
 FedMNIST (synthetic stand-in), FedComLoc-Com."""
 
-from repro.core.compressors import Identity, TopK
+from repro.compress import Identity, TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

@@ -1,6 +1,6 @@
 """Paper Table 2 / Figure 2 — heterogeneity (Dirichlet alpha) x sparsity."""
 
-from repro.core.compressors import Identity, TopK
+from repro.compress import Identity, TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 from benchmarks import common

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import checkpoint
 from repro.core import fed_data, server
-from repro.core.compressors import Identity, QuantQr, TopK
+from repro.compress import Identity, QuantQr, TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 from repro.data import dirichlet, synthetic
 from repro.models import small

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fed_data, server
-from repro.core.compressors import TopK
+from repro.compress import TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 from repro.data import dirichlet, synthetic
 from repro.models import small

@@ -1,0 +1,25 @@
+"""Unified compression subsystem (DESIGN.md §3).
+
+The single home for every compression operator in the repo and for the
+exact, in-graph bit accounting behind the paper's communicated-bits axes:
+
+    comp = make_compressor("topk", density=0.1)
+    compressed, report = comp.compress(tree, rng)   # report: BitsReport
+    total = report.total_bits                       # jnp scalar, in-graph
+
+``core`` (FedComLoc / baselines), ``launch`` (multi-pod fed_train) and
+``benchmarks`` all import from here; kernels dispatch (Pallas on TPU, jnp
+reference elsewhere) happens underneath via :mod:`repro.kernels.ops`.
+"""
+
+from repro.compress.compressors import (
+    Compose, Compressor, Identity, Int8Sync, QuantQr, TopK)
+from repro.compress.registry import available, make_compressor, register
+from repro.compress.report import (
+    FLOAT_BITS, INDEX_BITS, BitsReport, dense_bits, dense_report, zero_report)
+
+__all__ = [
+    "BitsReport", "Compose", "Compressor", "FLOAT_BITS", "INDEX_BITS",
+    "Identity", "Int8Sync", "QuantQr", "TopK", "available", "dense_bits",
+    "dense_report", "make_compressor", "register", "zero_report",
+]

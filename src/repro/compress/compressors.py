@@ -1,0 +1,323 @@
+"""Compression operators (paper §3.1) with exact in-graph bit accounting.
+
+This is the single compression implementation in the repo (DESIGN.md §3);
+``core``, ``launch`` and ``benchmarks`` all consume it.  Semantics follow
+the paper:
+
+* ``TopK`` (Definition 3.1) — keep the ``density`` fraction of
+  largest-magnitude entries, zero the rest.  Biased.  Two threshold
+  finders: ``impl="select"`` (exact k-th magnitude via the radix-select /
+  ``lax.top_k`` path in :mod:`repro.kernels`) and ``impl="quantile"``
+  (``jnp.quantile`` on |x| — the billion-parameter launch path, identical
+  threshold semantics, approximate k).
+* ``QuantQr`` (Definition 3.2) — QSGD-style binary quantization with ``r``
+  bits: x -> ||x||_2 * sgn(x_i) * xi_i.  Unbiased.
+* ``Compose`` (Appendix B.3) — TopK then quantization of the survivors
+  ("double compression").
+* ``Identity`` — no-op; FedComLoc with Identity is exactly Scaffnew.
+* ``Int8Sync`` — the sharding-aware launch-layer entry: ``encode`` emits an
+  int8 level payload + per-tensor scales so a cross-pod collective moves
+  one byte per scalar on the wire (see launch/fed_train.py).
+
+``compress(tree, rng) -> (compressed_tree, BitsReport)``: the report is
+computed **from the payload actually produced** — nnz counted from the TopK
+mask (so error-feedback innovations and per-client-varying sparsity are
+accounted exactly), per-tensor norm/scale overheads for quantizers,
+composition-aware for double compression.  ``expected_bits`` gives the
+host-side planning estimate (the paper's closed-form formulas).
+
+Two granularities: ``scope="tensor"`` (default; per-leaf TopK / norms —
+what practical FL systems do) and ``scope="global"`` (flatten the pytree
+first, matching Definition 3.1 over x in R^d exactly).
+
+Hot inner ops route through :mod:`repro.kernels.ops`, which dispatches to
+the Pallas TPU kernels on TPU and the jnp reference elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.report import (
+    FLOAT_BITS, INDEX_BITS, BitsReport, dense_report)
+from repro.kernels import ops as kops
+
+PyTree = Any
+
+
+def _tree_size(tree: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def _nnz(tree: PyTree) -> jax.Array:
+    """In-graph nonzero count over all leaves (the transmitted support)."""
+    return sum(jnp.sum(x != 0).astype(jnp.float32)
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def _map_flat_global(tree: PyTree, fn) -> PyTree:
+    """Apply ``fn`` to the concatenation of all leaves, then re-split."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+    out = fn(flat)
+    parts, off = [], 0
+    for l in leaves:
+        parts.append(out[off:off + l.size].reshape(l.shape).astype(l.dtype))
+        off += l.size
+    return jax.tree_util.tree_unflatten(treedef, parts)
+
+
+class Compressor:
+    """Base class.  Subclasses implement ``compress`` and ``expected_bits``.
+
+    ``compress(tree, rng) -> (compressed_tree, BitsReport)`` with the report
+    computed in-graph from the actual payload; ``apply`` discards the report
+    (for call sites like FedComLoc-Local where nothing hits the wire).
+    """
+
+    #: True if E[C(x)] = x.
+    unbiased: bool = False
+
+    def compress(self, tree: PyTree,
+                 rng: Optional[jax.Array] = None
+                 ) -> Tuple[PyTree, BitsReport]:
+        raise NotImplementedError
+
+    def apply(self, tree: PyTree, rng: Optional[jax.Array] = None) -> PyTree:
+        return self.compress(tree, rng)[0]
+
+    def expected_bits(self, tree: PyTree) -> float:
+        """Host-side closed-form estimate of ``compress(tree)`` bits."""
+        raise NotImplementedError
+
+    def __call__(self, tree: PyTree,
+                 rng: Optional[jax.Array] = None
+                 ) -> Tuple[PyTree, BitsReport]:
+        return self.compress(tree, rng)
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    unbiased = True
+
+    def compress(self, tree: PyTree, rng=None):
+        return tree, dense_report(tree)
+
+    def expected_bits(self, tree: PyTree) -> float:
+        return float(_tree_size(tree)) * FLOAT_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Keep the ``density`` fraction of largest-|.| entries (Def. 3.1).
+
+    Bits: (FLOAT_BITS + INDEX_BITS) per coordinate of the *actual* support —
+    counted in-graph from the mask, so ties kept by threshold semantics and
+    already-zero inputs (error-feedback innovations) are accounted exactly.
+    At ``density >= 1`` the payload is dense and no indices are sent.
+    """
+
+    density: float = 0.1
+    scope: str = "tensor"      # "tensor" | "global"
+    impl: str = "select"       # "select" (exact k-th) | "quantile"
+
+    def __post_init__(self):
+        if not (0.0 < self.density <= 1.0):
+            raise ValueError(f"density must be in (0, 1], got {self.density}")
+        if self.scope not in ("tensor", "global"):
+            raise ValueError(f"unknown scope {self.scope!r}")
+        if self.impl not in ("select", "quantile"):
+            raise ValueError(f"unknown impl {self.impl!r}")
+
+    def _k(self, size: int) -> int:
+        return max(1, min(size, int(round(self.density * size))))
+
+    def _mask_one(self, x: jax.Array) -> jax.Array:
+        if self.impl == "quantile":
+            mag = jnp.abs(x.astype(jnp.float32))
+            thr = jnp.quantile(mag.reshape(-1), 1.0 - self.density)
+            return jnp.where(mag >= thr, x, jnp.zeros_like(x))
+        return (kops.topk_mask(x.reshape(-1), self._k(x.size))
+                .reshape(x.shape).astype(x.dtype))
+
+    def compress(self, tree: PyTree, rng=None):
+        if self.density >= 1.0:
+            return tree, dense_report(tree)
+        if self.scope == "global":
+            out = _map_flat_global(tree, self._mask_one)
+        else:
+            out = jax.tree_util.tree_map(self._mask_one, tree)
+        nnz = _nnz(out)
+        return out, BitsReport(value_bits=nnz * FLOAT_BITS,
+                               index_bits=nnz * INDEX_BITS)
+
+    def expected_bits(self, tree: PyTree) -> float:
+        if self.density >= 1.0:
+            return float(_tree_size(tree)) * FLOAT_BITS
+        if self.scope == "global":
+            return float(self._k(_tree_size(tree))) * (FLOAT_BITS + INDEX_BITS)
+        return float(sum(self._k(x.size) * (FLOAT_BITS + INDEX_BITS)
+                         for x in jax.tree_util.tree_leaves(tree)))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantQr(Compressor):
+    """QSGD binary quantization with ``r`` bits (Def. 3.2).  Unbiased.
+
+    Bits: sign + r-bit level per scalar, plus one fp32 norm per tensor
+    (``scope="tensor"``) or one overall (``scope="global"``).
+    """
+
+    r: int = 8
+    scope: str = "tensor"
+
+    unbiased = True
+
+    def __post_init__(self):
+        if self.r <= 0:
+            raise ValueError("r must be positive")
+
+    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None):
+        if rng is None:
+            raise ValueError("QuantQr requires an rng key (stochastic rounding)")
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(rng, len(leaves))
+        if self.scope == "global":
+            out = _map_flat_global(
+                tree, lambda flat: kops.quantize_qr(flat, self.r, keys[0]))
+            n_norms = 1
+        else:
+            new = [kops.quantize_qr(l.reshape(-1), self.r, k)
+                   .reshape(l.shape).astype(l.dtype)
+                   for l, k in zip(leaves, keys)]
+            out = jax.tree_util.tree_unflatten(treedef, new)
+            n_norms = len(leaves)
+        n = _tree_size(tree)
+        return out, BitsReport(
+            value_bits=jnp.asarray(float(n) * (1 + self.r)),
+            meta_bits=jnp.asarray(float(n_norms) * FLOAT_BITS))
+
+    def expected_bits(self, tree: PyTree) -> float:
+        n_norms = (1 if self.scope == "global"
+                   else len(jax.tree_util.tree_leaves(tree)))
+        return (float(_tree_size(tree)) * (1 + self.r)
+                + n_norms * FLOAT_BITS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Compose(Compressor):
+    """Apply ``first`` then ``second`` (paper Appendix B.3: TopK -> Q_r).
+
+    For the sparsifier -> quantizer composition the report is exact and
+    support-aware: nnz indices + (1 + r) bits per *kept* coordinate + the
+    quantizer's norm overhead.  Other compositions fall back to the second
+    stage's (dense-size) report plus any first-stage index bits — correct
+    but conservative.
+    """
+
+    first: Compressor = dataclasses.field(default_factory=lambda: TopK(0.25))
+    second: Compressor = dataclasses.field(default_factory=lambda: QuantQr(4))
+
+    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None):
+        if rng is not None:
+            k1, k2 = jax.random.split(rng)
+        else:
+            k1 = k2 = None
+        mid, rep1 = self.first.compress(tree, k1)
+        out, rep2 = self.second.compress(mid, k2)
+        if (isinstance(self.first, TopK) and isinstance(self.second, QuantQr)
+                and self.first.density < 1.0):
+            # The transmitted support is fixed by the sparsifier; count the
+            # quantized payload over that support only.
+            nnz = rep1.index_bits / INDEX_BITS
+            rep = BitsReport(value_bits=nnz * (1 + self.second.r),
+                             index_bits=rep1.index_bits,
+                             meta_bits=rep2.meta_bits)
+        else:
+            rep = BitsReport(value_bits=rep2.value_bits,
+                             index_bits=rep1.index_bits + rep2.index_bits,
+                             meta_bits=rep2.meta_bits)
+        return out, rep
+
+    def expected_bits(self, tree: PyTree) -> float:
+        if (isinstance(self.first, TopK) and isinstance(self.second, QuantQr)
+                and self.first.density < 1.0):
+            if self.first.scope == "global":
+                k = self.first._k(_tree_size(tree))
+                return float(k) * (INDEX_BITS + 1 + self.second.r) + FLOAT_BITS
+            total = 0.0
+            for x in jax.tree_util.tree_leaves(tree):
+                k = self.first._k(x.size)
+                total += k * (INDEX_BITS + 1 + self.second.r) + FLOAT_BITS
+            return total
+        return min(self.first.expected_bits(tree),
+                   self.second.expected_bits(tree))
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Sync(Compressor):
+    """Sharding-aware int8 payload codec (launch/fed_train sync_mode).
+
+    ``encode`` emits (int8 level*sign payload, per-tensor fp32 scale) so a
+    cross-pod collective moves one byte per scalar on the wire; ``decode``
+    dequantizes.  ``compress`` = decode(encode(.)) for simulator use.  The
+    rounding is the same unbiased Q_r scheme with ``magnitude_bits`` level
+    bits (<= 7 so level * sign fits int8).
+
+    Bits: 8 per scalar payload + one fp32 scale per tensor.
+    """
+
+    magnitude_bits: int = 7
+
+    unbiased = True
+
+    def __post_init__(self):
+        if not (0 < self.magnitude_bits <= 7):
+            raise ValueError("magnitude_bits must be in [1, 7] to fit int8")
+
+    def encode(self, tree: PyTree, rng: jax.Array):
+        levels = float(2 ** self.magnitude_bits)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(rng, len(leaves))
+        payload, scales = [], []
+        for leaf, k in zip(leaves, keys):
+            xf = leaf.astype(jnp.float32)
+            norm = jnp.sqrt(jnp.sum(xf * xf))
+            safe = jnp.where(norm > 0, norm, 1.0)
+            y = jnp.abs(xf) / safe
+            lo = jnp.floor(levels * y)
+            frac = levels * y - lo
+            u = jax.random.uniform(k, leaf.shape, jnp.float32)
+            q = (lo + (u < frac)) * jnp.sign(xf)
+            payload.append(jnp.clip(q, -127, 127).astype(jnp.int8))
+            scales.append(norm / levels)
+        return (jax.tree_util.tree_unflatten(treedef, payload),
+                jax.tree_util.tree_unflatten(treedef, scales))
+
+    def decode(self, payload: PyTree, scales: PyTree,
+               dtype_like: Optional[PyTree] = None) -> PyTree:
+        ref = dtype_like if dtype_like is not None else payload
+        return jax.tree_util.tree_map(
+            lambda q, s, r_: (q.astype(jnp.float32) * s).astype(
+                r_.dtype if hasattr(r_, "dtype") else jnp.float32),
+            payload, scales, ref)
+
+    def report(self, tree: PyTree) -> BitsReport:
+        n = _tree_size(tree)
+        n_scales = len(jax.tree_util.tree_leaves(tree))
+        return BitsReport(value_bits=jnp.asarray(float(n) * 8.0),
+                          meta_bits=jnp.asarray(float(n_scales) * FLOAT_BITS))
+
+    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None):
+        if rng is None:
+            raise ValueError("Int8Sync requires an rng key (stochastic rounding)")
+        payload, scales = self.encode(tree, rng)
+        return self.decode(payload, scales, tree), self.report(tree)
+
+    def expected_bits(self, tree: PyTree) -> float:
+        n_scales = len(jax.tree_util.tree_leaves(tree))
+        return float(_tree_size(tree)) * 8.0 + n_scales * FLOAT_BITS

@@ -1,0 +1,97 @@
+"""Exact wire-cost accounting for compressed payloads (DESIGN.md §3).
+
+A :class:`BitsReport` is returned by every ``Compressor.compress`` call and
+states the bits needed to transmit *that payload* — computed in-graph from
+the actual compressed tree (nnz from the TopK mask, per-tensor norms for
+Q_r), not estimated host-side from the dense model.  It is a registered
+pytree, so reports flow through ``jit`` / ``vmap`` / ``lax.scan`` unchanged:
+a vmapped compress yields a report whose leaves carry the client axis, and
+``reduce_sum`` collapses it back to per-link totals.
+
+The three buckets mirror the paper's accounting (§3.1 / comm.py):
+
+* ``value_bits`` — the numeric payload (fp32 values, sign+level codes, int8
+  levels);
+* ``index_bits`` — coordinate indices for sparse (value, index) encodings;
+* ``meta_bits``  — side information: per-tensor norms / scales.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Union
+
+import jax
+import jax.numpy as jnp
+
+Scalar = Union[float, jax.Array]
+
+FLOAT_BITS = 32  # uncompressed scalar payload, as accounted in the paper
+INDEX_BITS = 32  # index payload for sparse (value, index) encoding
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitsReport:
+    value_bits: Scalar = 0.0
+    index_bits: Scalar = 0.0
+    meta_bits: Scalar = 0.0
+
+    # -- pytree protocol ------------------------------------------------- #
+
+    def tree_flatten(self):
+        return (self.value_bits, self.index_bits, self.meta_bits), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # -- arithmetic ------------------------------------------------------ #
+
+    @property
+    def total_bits(self) -> Scalar:
+        return self.value_bits + self.index_bits + self.meta_bits
+
+    def __add__(self, other) -> "BitsReport":
+        if isinstance(other, (int, float)) and other == 0:
+            return self                      # so built-in sum() works
+        if not isinstance(other, BitsReport):
+            return NotImplemented
+        return BitsReport(self.value_bits + other.value_bits,
+                          self.index_bits + other.index_bits,
+                          self.meta_bits + other.meta_bits)
+
+    __radd__ = __add__
+
+    def scale(self, factor: Scalar) -> "BitsReport":
+        """Report for ``factor`` identical transmissions (e.g. a broadcast)."""
+        return BitsReport(self.value_bits * factor,
+                          self.index_bits * factor,
+                          self.meta_bits * factor)
+
+    def reduce_sum(self) -> "BitsReport":
+        """Collapse batched leaves (e.g. a vmapped client axis) to totals."""
+        return BitsReport(*(jnp.sum(jnp.asarray(c)) for c in (
+            self.value_bits, self.index_bits, self.meta_bits)))
+
+    def as_floats(self) -> "BitsReport":
+        """Host-side snapshot (forces device sync)."""
+        return BitsReport(float(self.value_bits), float(self.index_bits),
+                          float(self.meta_bits))
+
+
+def zero_report() -> BitsReport:
+    return BitsReport(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+
+
+def dense_report(tree: Any) -> BitsReport:
+    """Bits to send ``tree`` uncompressed: FLOAT_BITS per scalar."""
+    n = sum(x.size for x in jax.tree_util.tree_leaves(tree))
+    return BitsReport(value_bits=float(n) * FLOAT_BITS)
+
+
+def dense_bits(tree: Any) -> float:
+    """Host-side scalar shortcut for ``dense_report(tree).total_bits``."""
+    n = sum(x.size for x in jax.tree_util.tree_leaves(tree))
+    return float(n) * FLOAT_BITS

@@ -7,9 +7,11 @@
 * ``FedDyn``       (Acar et al., 2021; the Fed-Dyn curve in Fig. 9) —
   dynamic regularisation with server-side correction h.
 
-All share the jitted local-SGD scaffolding and the CommMeter accounting so
-bits-axes are comparable with FedComLoc.  Scaffnew is FedComLoc with
-variant="none" and the Identity compressor (see fedcomloc.py).
+All share the jitted local-SGD scaffolding, the in-graph CommMeter
+accounting (repro.compress.BitsReport) so bits-axes are comparable with
+FedComLoc, and the fused ``run_rounds`` engine (repro.core.engine).
+Scaffnew is FedComLoc with variant="none" and the Identity compressor
+(see fedcomloc.py).
 """
 
 from __future__ import annotations
@@ -20,8 +22,9 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.compress import Compressor, Identity, TopK, dense_bits
 from repro.core import comm
-from repro.core.compressors import Compressor, Identity
+from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
 PyTree = Any
@@ -87,42 +90,37 @@ class FedAvgState(NamedTuple):
     round: jax.Array
 
 
-class FedAvg:
+class FedAvg(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
-                 compressor: Compressor | None = None):
+                 compressor: Compressor | None = None,
+                 meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.comp = compressor if compressor is not None else Identity()
-        self.meter = comm.CommMeter()
-        self._round = jax.jit(self._round_impl)
+        self.meter = comm.CommMeter(mode=meter_mode)
+        self._setup_engine()
 
     def init(self, params0: PyTree) -> FedAvgState:
         return FedAvgState(x=params0, round=jnp.zeros((), jnp.int32))
 
     def _round_impl(self, state: FedAvgState, key: jax.Array):
         cfg = self.cfg
+        s = cfg.clients_per_round
         k_sample, k_local, k_comp = jax.random.split(key, 3)
-        clients = jax.random.choice(k_sample, cfg.n_clients,
-                                    (cfg.clients_per_round,), replace=False)
-        x0 = _broadcast(state.x, cfg.clients_per_round)
+        clients = jax.random.choice(k_sample, cfg.n_clients, (s,),
+                                    replace=False)
+        x0 = _broadcast(state.x, s)
         x_fin, loss = _local_sgd(self.loss_fn, self.data, cfg, x0, clients,
                                  k_local)
-        comp_keys = jax.random.split(k_comp, cfg.clients_per_round)
-        x_fin = jax.vmap(self.comp.compress)(x_fin, comp_keys)
+        comp_keys = jax.random.split(k_comp, s)
+        x_fin, up_rep = jax.vmap(self.comp.compress)(x_fin, comp_keys)
         x_new = _tmap(lambda t: t.mean(axis=0), x_fin)
-        return (FedAvgState(x=x_new, round=state.round + 1),
-                {"train_loss": loss})
-
-    def round(self, state, key):
-        state, metrics = self._round(state, key)
-        dense = Identity().bits(state.x)
-        s = self.cfg.clients_per_round
-        self.meter.record_round(uplink_bits=s * self.comp.bits(state.x),
-                                downlink_bits=s * dense)
-        return state, {k: float(v) for k, v in metrics.items()}
+        metrics = {"train_loss": loss,
+                   "uplink_bits": up_rep.reduce_sum().total_bits,
+                   "downlink_bits": jnp.asarray(s * dense_bits(state.x))}
+        return FedAvgState(x=x_new, round=state.round + 1), metrics
 
 
 def SparseFedAvg(loss_fn, data, cfg, density: float = 0.1):
-    from repro.core.compressors import TopK
     return FedAvg(loss_fn, data, cfg, compressor=TopK(density=density))
 
 
@@ -137,11 +135,12 @@ class ScaffoldState(NamedTuple):
     round: jax.Array
 
 
-class Scaffold:
-    def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig):
+class Scaffold(RoundEngine):
+    def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
+                 meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
-        self.meter = comm.CommMeter()
-        self._round = jax.jit(self._round_impl)
+        self.meter = comm.CommMeter(mode=meter_mode)
+        self._setup_engine()
 
     def init(self, params0: PyTree) -> ScaffoldState:
         zeros = _tmap(jnp.zeros_like, params0)
@@ -178,18 +177,13 @@ class Scaffold:
                       state.c, dc)
         ci_all = _tmap(lambda all_, upd: all_.at[clients].set(upd),
                        state.ci, ci_new)
-        return (ScaffoldState(x=x_new, c=c_new, ci=ci_all,
-                              round=state.round + 1),
-                {"train_loss": loss})
-
-    def round(self, state, key):
-        state, metrics = self._round(state, key)
         # Scaffold communicates both the model and the control variate.
-        dense = Identity().bits(state.x)
-        s = self.cfg.clients_per_round
-        self.meter.record_round(uplink_bits=2 * s * dense,
-                                downlink_bits=2 * s * dense)
-        return state, {k: float(v) for k, v in metrics.items()}
+        dense = dense_bits(state.x)
+        metrics = {"train_loss": loss,
+                   "uplink_bits": jnp.asarray(2 * s * dense),
+                   "downlink_bits": jnp.asarray(2 * s * dense)}
+        return (ScaffoldState(x=x_new, c=c_new, ci=ci_all,
+                              round=state.round + 1), metrics)
 
 
 # --------------------------------------------------------------------------- #
@@ -203,11 +197,12 @@ class FedDynState(NamedTuple):
     round: jax.Array
 
 
-class FedDyn:
-    def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig):
+class FedDyn(RoundEngine):
+    def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
+                 meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
-        self.meter = comm.CommMeter()
-        self._round = jax.jit(self._round_impl)
+        self.meter = comm.CommMeter(mode=meter_mode)
+        self._setup_engine()
 
     def init(self, params0: PyTree) -> FedDynState:
         zeros = _tmap(jnp.zeros_like, params0)
@@ -242,13 +237,9 @@ class FedDyn:
             * (yf - xs).sum(axis=0), state.h, x_fin, x0)
         x_new = _tmap(lambda yf, h_: yf.mean(axis=0) - h_ / cfg.alpha,
                       x_fin, h_new)
+        dense = dense_bits(state.x)
+        metrics = {"train_loss": loss,
+                   "uplink_bits": jnp.asarray(s * dense),
+                   "downlink_bits": jnp.asarray(s * dense)}
         return (FedDynState(x=x_new, h=h_new, grads=grads_all,
-                            round=state.round + 1),
-                {"train_loss": loss})
-
-    def round(self, state, key):
-        state, metrics = self._round(state, key)
-        dense = Identity().bits(state.x)
-        s = self.cfg.clients_per_round
-        self.meter.record_round(uplink_bits=s * dense, downlink_bits=s * dense)
-        return state, {k: float(v) for k, v in metrics.items()}
+                            round=state.round + 1), metrics)

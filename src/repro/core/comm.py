@@ -1,41 +1,88 @@
 """Communication accounting (the paper's "communicated bits" x-axes).
 
 The FL simulator does dense arithmetic (compression zeroes / quantizes
-values in place); the *bits actually on the wire* are what the paper plots,
-so we account them exactly:
+values in place); the *bits actually on the wire* are what the paper plots.
+They are computed **in-graph from the actual payloads** by
+:mod:`repro.compress` (``BitsReport``) and accumulated here:
 
 * uncompressed tensor: 32 bits / scalar;
-* TopK: (32 + 32) bits per kept coordinate (value + index);
+* TopK: (32 + 32) bits per coordinate of the actual support (nnz from the
+  mask — not the nominal k);
 * Q_r: (1 + r) bits per scalar (sign + level) + 32 bits per-tensor norm;
 * TopK + Q_r: (32 + 1 + r) per kept coordinate + norm.
 
 Uplink (client -> server) and downlink (server -> client) are tracked
 separately — FedComLoc-Com compresses only uplink, FedComLoc-Global only
 downlink, FedComLoc-Local neither.
+
+Two accumulator modes:
+
+* ``mode="host"`` (default) — every ``record_round`` coerces to python
+  floats (forces a device sync; fine for the per-round driver which syncs
+  for metrics anyway);
+* ``mode="jnp"`` — sums stay jax scalars; adds are lazy device ops and
+  nothing blocks until a property / ``snapshot()`` is read.  This is the
+  mode for the fused ``run_rounds`` engine, where R rounds produce one
+  ``(R,)`` bits array and the meter should not force a round-trip.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
+from typing import Any, Union
 
-PyTree = Any
+Scalar = Union[float, Any]  # float or jax scalar in "jnp" mode
 
 
-@dataclasses.dataclass
 class CommMeter:
-    uplink_bits: float = 0.0
-    downlink_bits: float = 0.0
-    rounds: int = 0
+    def __init__(self, mode: str = "host"):
+        if mode not in ("host", "jnp"):
+            raise ValueError(f"unknown CommMeter mode {mode!r}")
+        self.mode = mode
+        self._uplink: Scalar = 0.0
+        self._downlink: Scalar = 0.0
+        self.rounds: int = 0
+
+    # -- recording ------------------------------------------------------- #
+
+    def record_round(self, *, uplink_bits: Scalar,
+                     downlink_bits: Scalar) -> None:
+        if self.mode == "host":
+            uplink_bits = float(uplink_bits)
+            downlink_bits = float(downlink_bits)
+        self._uplink = self._uplink + uplink_bits
+        self._downlink = self._downlink + downlink_bits
+        self.rounds += 1
+
+    def record_rounds(self, *, uplink_bits, downlink_bits,
+                      num_rounds: int) -> None:
+        """Batched recording from the fused engine.
+
+        ``uplink_bits`` / ``downlink_bits`` are per-round arrays (summed
+        here), scalars (taken as chunk totals), or None (nothing tracked).
+        """
+        def total(v):
+            if v is None:
+                return 0.0
+            v = v.sum() if hasattr(v, "sum") else v
+            return float(v) if self.mode == "host" else v
+
+        self._uplink = self._uplink + total(uplink_bits)
+        self._downlink = self._downlink + total(downlink_bits)
+        self.rounds += int(num_rounds)
+
+    # -- reading (host-side; forces sync in "jnp" mode) ------------------ #
+
+    @property
+    def uplink_bits(self) -> float:
+        return float(self._uplink)
+
+    @property
+    def downlink_bits(self) -> float:
+        return float(self._downlink)
 
     @property
     def total_bits(self) -> float:
         return self.uplink_bits + self.downlink_bits
-
-    def record_round(self, *, uplink_bits: float, downlink_bits: float) -> None:
-        self.uplink_bits += uplink_bits
-        self.downlink_bits += downlink_bits
-        self.rounds += 1
 
     def snapshot(self) -> dict:
         return {

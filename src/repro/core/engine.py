@@ -1,0 +1,87 @@
+"""Round drivers shared by every FL algorithm (DESIGN.md §3.4).
+
+Algorithms define one jit-able ``_round_impl(state, key) -> (state, metrics)``
+where ``metrics`` is a flat dict of jnp scalars that **includes**
+``uplink_bits`` / ``downlink_bits`` computed in-graph from the payloads
+actually produced that round.  :class:`RoundEngine` then provides the two
+execution modes:
+
+* ``round(state, key)`` — one jitted call per round, metrics pulled to host
+  each round (interactive / debugging path);
+* ``run_rounds(state, key, num_rounds)`` — the fused engine: ``lax.scan``
+  over whole communication rounds inside ONE jit, in-graph bit/metric
+  accumulation, a single host round-trip per chunk.  Bit-identical to
+  calling ``round`` R times: the key chain inside the scan is exactly the
+  host loop's ``key, sub = jax.random.split(key)``.
+
+Both record into ``self.meter`` (a :class:`repro.core.comm.CommMeter`), so
+histories and bits-axes are identical whichever driver ran.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+class RoundEngine:
+    """Mixin: host-stepped ``round`` + fused ``run_rounds`` over _round_impl."""
+
+    def _setup_engine(self) -> None:
+        self._round = jax.jit(self._round_impl)
+        self._fused_cache: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------------ #
+
+    def round(self, state, key: jax.Array) -> Tuple[Any, Dict[str, float]]:
+        """Run one communication round; returns (state, metrics dict)."""
+        state, metrics = self._round(state, key)
+        out = {k: float(v) for k, v in metrics.items()}
+        self.meter.record_round(
+            uplink_bits=out.get("uplink_bits", 0.0),
+            downlink_bits=out.get("downlink_bits", 0.0))
+        return state, out
+
+    # ------------------------------------------------------------------ #
+
+    def _fused(self, num_rounds: int):
+        fn = self._fused_cache.get(num_rounds)
+        if fn is None:
+            def run(state, key):
+                def body(carry, _):
+                    state, key = carry
+                    key, sub = jax.random.split(key)
+                    state, metrics = self._round_impl(state, sub)
+                    return (state, key), metrics
+
+                (state, _), metrics = jax.lax.scan(
+                    body, (state, key), None, length=num_rounds)
+                return state, metrics
+
+            fn = jax.jit(run)
+            self._fused_cache[num_rounds] = fn
+        return fn
+
+    def run_rounds(self, state, key: jax.Array, num_rounds: int
+                   ) -> Tuple[Any, Dict[str, np.ndarray]]:
+        """Run ``num_rounds`` communication rounds in ONE jit call.
+
+        Returns ``(state, metrics)`` with each metric a ``(num_rounds,)``
+        array (per-round values; ``uplink_bits`` / ``downlink_bits`` are the
+        exact per-round wire costs).  The caller's key-advance convention is
+        the host loop's: after this call, advance your key by
+        ``num_rounds`` ``jax.random.split`` steps to stay on the same chain.
+        """
+        num_rounds = int(num_rounds)
+        if num_rounds <= 0:
+            raise ValueError("num_rounds must be positive")
+        state, metrics = self._fused(num_rounds)(state, key)
+        self.meter.record_rounds(
+            uplink_bits=metrics.get("uplink_bits"),
+            downlink_bits=metrics.get("downlink_bits"),
+            num_rounds=num_rounds)
+        return state, {k: np.asarray(v) for k, v in metrics.items()}

@@ -18,6 +18,13 @@ Faithful mapping of Algorithm 1:
   clients keep their control variates; they re-enter from the current server
   model.  With full participation and C = Identity this is exactly Scaffnew.
 
+Communication accounting is **in-graph** (repro.compress.BitsReport): every
+round's metrics carry the exact uplink/downlink wire cost of the payloads
+produced that round — per-client TopK nnz, per-tensor Q_r norms, and under
+error feedback the bits of the *transmitted innovation*, not the dense
+model.  Rounds run either one-jit-per-round (``round``) or fused R-per-jit
+(``run_rounds``, inherited from :class:`repro.core.engine.RoundEngine`).
+
 State layout: the server model ``x`` is stored once (all clients restart a
 round from the broadcast model); control variates ``h`` are stacked with a
 leading client axis.  All per-round compute is one jitted function.
@@ -26,14 +33,14 @@ leading client axis.  All per-round compute is one jitted function.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.compress import Compressor, Identity, dense_bits
 from repro.core import comm
-from repro.core.compressors import Compressor, Identity
+from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
 PyTree = Any
@@ -84,20 +91,21 @@ class FedComLocConfig:
         return max(1, round(4.0 / self.p))
 
 
-class FedComLoc:
+class FedComLoc(RoundEngine):
     """Algorithm 1.  ``variant="none"`` with Identity compression = Scaffnew."""
 
     def __init__(self, loss_fn: LossFn, data: FederatedData,
                  config: FedComLocConfig,
-                 compressor: Compressor | None = None):
+                 compressor: Compressor | None = None,
+                 meter_mode: str = "host"):
         self.loss_fn = loss_fn
         self.data = data
         self.cfg = config
         self.comp = compressor if compressor is not None else Identity()
         if config.variant == "none" and not isinstance(self.comp, Identity):
             raise ValueError('variant="none" requires the Identity compressor')
-        self.meter = comm.CommMeter()
-        self._round = jax.jit(self._round_impl)
+        self.meter = comm.CommMeter(mode=meter_mode)
+        self._setup_engine()
 
     # ------------------------------------------------------------------ #
 
@@ -122,9 +130,6 @@ class FedComLoc:
         g = jnp.floor(jnp.log1p(-u) / jnp.log1p(-self.cfg.p)).astype(jnp.int32) + 1
         return jnp.clip(g, 1, cap)
 
-    def _compress(self, tree: PyTree, key: jax.Array) -> PyTree:
-        return self.comp.compress(tree, key)
-
     def _round_impl(self, state: FedComLocState, key: jax.Array):
         cfg = self.cfg
         k_sample, k_steps, k_local, k_up, k_down = jax.random.split(key, 5)
@@ -137,8 +142,6 @@ class FedComLoc:
         x0 = jax.tree_util.tree_map(
             lambda p: jnp.broadcast_to(p, (s,) + p.shape), state.x)
 
-        grad_fn = jax.grad(self.loss_fn)
-
         def local_step(carry, inp):
             x_i, loss_acc = carry
             step_idx, k_step = inp
@@ -147,7 +150,7 @@ class FedComLoc:
             def one_client(x_c, h_c, client, kc):
                 kb, kcomp = jax.random.split(kc)
                 xb, yb = self.data.sample_batch(kb, client, cfg.batch_size)
-                x_eval = (self._compress(x_c, kcomp)
+                x_eval = (self.comp.apply(x_c, kcomp)
                           if cfg.variant == "local" else x_c)
                 loss, g = jax.value_and_grad(self.loss_fn)(x_eval, xb, yb)
                 x_new = jax.tree_util.tree_map(
@@ -171,6 +174,11 @@ class FedComLoc:
             (jnp.arange(cap), step_keys))
 
         # --- communication (theta_t = 1) --------------------------------- #
+        # Exact wire accounting: the dense payload is 32 bits/scalar; the
+        # compressed payloads report their own cost in-graph (BitsReport).
+        dense = dense_bits(state.x)
+        up_bits = jnp.asarray(s * dense)
+        down_bits = jnp.asarray(s * dense)
         e_new = state.e
         if cfg.variant == "com":
             up_keys = jax.random.split(k_up, s)
@@ -180,11 +188,12 @@ class FedComLoc:
                 # x_prev + mean(sent).  Deltas after a local phase are small
                 # in magnitude, so TopK keeps far more of their energy than
                 # it keeps of the raw iterates; the residual stays in e_i.
+                # The uplink bits are those of the transmitted innovation.
                 e_s = jax.tree_util.tree_map(lambda e: e[clients], state.e)
                 innov = jax.tree_util.tree_map(
-                    lambda xh, x0, e: xh - x0[None] + e,
+                    lambda xh, x0_, e: xh - x0_[None] + e,
                     x_hat, state.x, e_s)
-                sent = jax.vmap(self._compress)(innov, up_keys)
+                sent, up_rep = jax.vmap(self.comp.compress)(innov, up_keys)
                 # leaky memory: undecayed EF diverges inside Scaffnew (the
                 # residual integrates against the control variates — see the
                 # EXPERIMENTS.md §Beyond decay study); 0.7 is the sweet spot.
@@ -194,12 +203,14 @@ class FedComLoc:
                     lambda all_, upd: all_.at[clients].set(upd),
                     state.e, e_s_new)
                 x_hat = jax.tree_util.tree_map(
-                    lambda x0, snt: x0[None] + snt, state.x, sent)
+                    lambda x0_, snt: x0_[None] + snt, state.x, sent)
             else:
-                x_hat = jax.vmap(self._compress)(x_hat, up_keys)
+                x_hat, up_rep = jax.vmap(self.comp.compress)(x_hat, up_keys)
+            up_bits = up_rep.reduce_sum().total_bits
         x_bar = jax.tree_util.tree_map(lambda t: t.mean(axis=0), x_hat)
         if cfg.variant == "global":
-            x_bar = self._compress(x_bar, k_down)
+            x_bar, down_rep = self.comp.compress(x_bar, k_down)
+            down_bits = down_rep.total_bits * s
 
         # line 16: h_i += (p/gamma) (x_{t+1} - x^_{i,t+1}) for i in S —
         # uses the pre-momentum mean: the extrapolation below must not leak
@@ -225,22 +236,8 @@ class FedComLoc:
         metrics = {
             "train_loss": loss_sum / jnp.maximum(num_steps, 1),
             "num_local_steps": num_steps,
+            "uplink_bits": up_bits,
+            "downlink_bits": down_bits,
         }
         return (FedComLocState(x=x_bar, h=h_new, round=state.round + 1,
                                e=e_new, mom=mom_new), metrics)
-
-    # ------------------------------------------------------------------ #
-
-    def round(self, state: FedComLocState, key: jax.Array):
-        """Run one communication round; returns (state, metrics dict)."""
-        state, metrics = self._round(state, key)
-        self._account_bits(state.x)
-        return state, {k: float(v) for k, v in metrics.items()}
-
-    def _account_bits(self, x: PyTree) -> None:
-        cfg = self.cfg
-        dense = Identity().bits(x)
-        s = cfg.clients_per_round
-        up = self.comp.bits(x) if cfg.variant == "com" else dense
-        down = self.comp.bits(x) if cfg.variant == "global" else dense
-        self.meter.record_round(uplink_bits=s * up, downlink_bits=s * down)

@@ -69,25 +69,53 @@ def run_federated(
     eval_every: int = 10,
     log_every: int = 0,
     log_prefix: str = "",
+    fuse: bool = True,
 ) -> History:
-    """Drive ``algorithm`` (anything with .init/.round/.meter) for R rounds."""
+    """Drive ``algorithm`` (anything with .init/.round/.meter) for R rounds.
+
+    When the algorithm exposes the fused multi-round engine
+    (``run_rounds``, see repro.core.engine) and ``fuse`` is on, every
+    stretch of rounds between two evaluation points runs as ONE jit call
+    instead of one per round — same trajectory (the fused engine replays
+    the host loop's ``key, sub = jax.random.split(key)`` chain), one host
+    round-trip per chunk instead of per round.
+    """
     state = algorithm.init(params0)
     hist = History()
     t0 = time.time()
-    for r in range(num_rounds):
-        key, sub = jax.random.split(key)
-        state, metrics = algorithm.round(state, sub)
-        if eval_fn is not None and (r % eval_every == 0 or r == num_rounds - 1):
+    fused = fuse and hasattr(algorithm, "run_rounds")
+
+    def is_eval_round(r: int) -> bool:  # r = 0-based index just completed
+        return eval_fn is not None and (r % eval_every == 0
+                                        or r == num_rounds - 1)
+
+    r = 0
+    while r < num_rounds:
+        stop = r
+        while stop < num_rounds - 1 and not is_eval_round(stop):
+            stop += 1
+        n = stop - r + 1
+        if fused and n > 1:
+            state, chunk = algorithm.run_rounds(state, key, n)
+            for _ in range(n):          # stay on the host loop's key chain
+                key, _ = jax.random.split(key)
+            metrics = {k: float(v[-1]) for k, v in chunk.items()}
+        else:
+            for _ in range(n):
+                key, sub = jax.random.split(key)
+                state, metrics = algorithm.round(state, sub)
+        r = stop + 1
+        if is_eval_round(stop):
             tl, ta = eval_fn(state.x)
-            hist.rounds.append(r + 1)
+            hist.rounds.append(stop + 1)
             hist.train_loss.append(metrics.get("train_loss", float("nan")))
             hist.test_loss.append(float(tl))
             hist.test_acc.append(float(ta))
             hist.uplink_bits.append(algorithm.meter.uplink_bits)
             hist.total_bits.append(algorithm.meter.total_bits)
             hist.wall_s.append(time.time() - t0)
-            if log_every and (r % log_every == 0 or r == num_rounds - 1):
-                print(f"{log_prefix}round {r + 1:5d}  "
+            if log_every and (stop % log_every == 0 or stop == num_rounds - 1):
+                print(f"{log_prefix}round {stop + 1:5d}  "
                       f"loss {metrics.get('train_loss', float('nan')):.4f}  "
                       f"acc {float(ta):.4f}  "
                       f"Mbits {algorithm.meter.total_bits / 1e6:.1f}")

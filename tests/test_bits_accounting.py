@@ -1,0 +1,245 @@
+"""Exact bit accounting + fused multi-round engine (hypothesis-free).
+
+Two contracts from DESIGN.md §3:
+
+1. ``BitsReport`` totals equal the hand-computed paper formulas —
+   (32+32)*nnz for TopK (nnz from the actual mask), (1+r)*n + 32/tensor for
+   Q_r, (32+1+r)*nnz + 32 for TopK->Q_r — across many shapes/seeds;
+2. ``run_rounds`` (one jit for R rounds) is *bit-identical* to calling
+   ``round`` R times on the same key chain, for all four FedComLoc
+   variants, and its accumulated meter bits match the summed per-round
+   accounting.  EF-mode uplink bits reflect the transmitted innovation,
+   not the dense model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import (
+    Compose, Identity, QuantQr, TopK, dense_bits, make_compressor)
+from repro.core import fed_data, server
+from repro.core.baselines import FedAvg, FedConfig
+from repro.core.comm import CommMeter
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --------------------------------------------------------------------------- #
+# 1. BitsReport == hand-computed formulas
+# --------------------------------------------------------------------------- #
+
+SHAPES = [[(17,)], [(64,), (8, 8)], [(5, 3), (31,), (2, 2, 2)]]
+
+
+def tree_of(seed, shapes):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(keys, shapes))}
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("shapes", SHAPES)
+@pytest.mark.parametrize("density", [0.1, 0.33, 0.8])
+def test_topk_bits_formula(seed, shapes, density):
+    x = tree_of(seed, shapes)
+    out, rep = TopK(density=density).compress(x)
+    nnz = sum(int((v != 0).sum()) for v in out.values())
+    assert float(rep.total_bits) == nnz * (32 + 32)
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("shapes", SHAPES)
+@pytest.mark.parametrize("r", [1, 4, 8])
+def test_quant_bits_formula(seed, shapes, r):
+    x = tree_of(seed, shapes)
+    n = sum(v.size for v in x.values())
+    _, rep = QuantQr(r=r).compress(x, jax.random.PRNGKey(seed + 100))
+    assert float(rep.total_bits) == (1 + r) * n + len(x) * 32
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("density,r", [(0.25, 4), (0.5, 2)])
+def test_double_compression_bits_formula(seed, density, r):
+    x = tree_of(seed, [(64,), (16, 4)])
+    comp = Compose(TopK(density), QuantQr(r))
+    out, rep = comp.compress(x, jax.random.PRNGKey(seed + 7))
+    mid = TopK(density).apply(x)
+    nnz = sum(int((v != 0).sum()) for v in mid.values())
+    assert float(rep.total_bits) == nnz * (32 + 1 + r) + len(x) * 32
+
+
+def test_identity_and_int8_formulas():
+    x = tree_of(0, [(40,), (6, 6)])
+    n = 40 + 36
+    _, rep = Identity().compress(x)
+    assert float(rep.total_bits) == n * 32
+    _, rep8 = make_compressor("int8").compress(x, jax.random.PRNGKey(0))
+    assert float(rep8.total_bits) == n * 8 + len(x) * 32
+
+
+# --------------------------------------------------------------------------- #
+# 2. run_rounds == per-round loop, exactly
+# --------------------------------------------------------------------------- #
+
+def quadratic_setup(n_clients=5, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n_clients, d))
+    b = rng.normal(size=(n_clients,))
+    reps = 8
+    x = np.repeat(A, reps, axis=0).astype(np.float32)
+    y = np.repeat(b, reps).astype(np.float32)
+    parts = [np.arange(i * reps, (i + 1) * reps) for i in range(n_clients)]
+    return fed_data.from_numpy_partition(x, y, parts)
+
+
+def sq_loss(params, xb, yb):
+    pred = xb @ params["w"]
+    return 0.5 * jnp.mean((pred - yb) ** 2)
+
+
+def make_alg(variant, comp, n=5, d=6, **cfg_kw):
+    data = quadratic_setup(n, d)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=3, batch_size=4,
+                          variant=variant, **cfg_kw)
+    return FedComLoc(sq_loss, data, cfg, comp), d
+
+
+VARIANT_COMPRESSORS = [
+    ("none", Identity(), {}),
+    ("com", TopK(density=0.4), {}),
+    ("local", TopK(density=0.5), {}),
+    ("global", QuantQr(r=6), {}),
+    ("com", TopK(density=0.4), {"error_feedback": True}),
+]
+
+
+@pytest.mark.parametrize("variant,comp,extra", VARIANT_COMPRESSORS)
+def test_run_rounds_matches_per_round_loop(variant, comp, extra):
+    R = 7
+    alg_a, d = make_alg(variant, comp, **extra)
+    alg_b, _ = make_alg(variant, comp, **extra)
+    key = jax.random.PRNGKey(42)
+    state_a = alg_a.init({"w": jnp.zeros((d,), jnp.float32)})
+    state_b = alg_b.init({"w": jnp.zeros((d,), jnp.float32)})
+
+    k = key
+    per_round = []
+    for _ in range(R):
+        k, sub = jax.random.split(k)
+        state_a, m = alg_a.round(state_a, sub)
+        per_round.append(m)
+
+    state_b, metrics = alg_b.run_rounds(state_b, key, R)
+
+    # bit-identical trajectory (same key chain, one jit for R rounds)
+    np.testing.assert_array_equal(np.asarray(state_a.x["w"]),
+                                  np.asarray(state_b.x["w"]))
+    np.testing.assert_array_equal(np.asarray(state_a.h["w"]),
+                                  np.asarray(state_b.h["w"]))
+    # identical per-round metrics and bits
+    for i, m in enumerate(per_round):
+        for key_ in ("train_loss", "uplink_bits", "downlink_bits"):
+            assert m[key_] == pytest.approx(float(metrics[key_][i]), abs=0.0)
+    # meters agree after R rounds
+    assert alg_a.meter.rounds == alg_b.meter.rounds == R
+    assert alg_a.meter.uplink_bits == alg_b.meter.uplink_bits
+    assert alg_a.meter.downlink_bits == alg_b.meter.downlink_bits
+
+
+def test_run_rounds_single_jit_call():
+    """The fused engine compiles once and issues ONE call for R rounds."""
+    alg, d = make_alg("com", TopK(density=0.4))
+    state = alg.init({"w": jnp.zeros((d,), jnp.float32)})
+    calls = {"n": 0}
+    orig = alg._fused
+
+    def counting(num_rounds):
+        fn = orig(num_rounds)
+
+        def wrapper(*a):
+            calls["n"] += 1
+            return fn(*a)
+        return wrapper
+
+    alg._fused = counting
+    alg.run_rounds(state, jax.random.PRNGKey(0), 12)
+    assert calls["n"] == 1
+    assert alg.meter.rounds == 12
+
+
+def test_ef_uplink_bits_are_innovation_bits():
+    """EF mode transmits C(innovation): at round 1 from x0 = 0 the
+    innovation is the local iterate (small support), and reported uplink
+    bits must be far below the dense model — the old dense-model
+    accounting would report s * d * 32-bit value+index pairs."""
+    n, d = 5, 40
+    data = quadratic_setup(n, d)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=n, batch_size=4,
+                          variant="com", error_feedback=True)
+    alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.1))
+    state = alg.init({"w": jnp.zeros((d,), jnp.float32)})
+    _, m = alg.round(state, jax.random.PRNGKey(0))
+    k = max(1, round(0.1 * d))
+    assert m["uplink_bits"] == n * k * 64          # nnz of the innovation
+    assert m["uplink_bits"] < n * dense_bits(state.x)
+
+
+def test_meter_jnp_mode_lazy_accumulation():
+    meter = CommMeter(mode="jnp")
+    meter.record_round(uplink_bits=jnp.asarray(100.0),
+                       downlink_bits=jnp.asarray(50.0))
+    meter.record_rounds(uplink_bits=jnp.asarray([1.0, 2.0]),
+                        downlink_bits=jnp.asarray([3.0, 4.0]),
+                        num_rounds=2)
+    assert isinstance(meter._uplink, jax.Array)    # stayed on device
+    assert meter.snapshot() == {"rounds": 3, "uplink_bits": 103.0,
+                                "downlink_bits": 57.0, "total_bits": 160.0}
+
+
+def test_server_fused_matches_unfused():
+    """run_federated(fuse=True) records the same history + meter as the
+    per-round driver."""
+    data = quadratic_setup(4, 5)
+    hists, meters = {}, {}
+    for fuse in (False, True):
+        cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=4,
+                              clients_per_round=2, batch_size=4,
+                              variant="com")
+        alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.4))
+        hist = server.run_federated(
+            alg, {"w": jnp.zeros((5,), jnp.float32)}, num_rounds=9,
+            key=jax.random.PRNGKey(5),
+            eval_fn=lambda p: (jnp.zeros(()), jnp.zeros(())), eval_every=4)
+        hists[fuse] = hist
+        meters[fuse] = alg.meter.snapshot()
+    assert meters[False] == meters[True]
+    assert hists[False].rounds == hists[True].rounds
+    np.testing.assert_array_equal(hists[False].train_loss,
+                                  hists[True].train_loss)
+    np.testing.assert_array_equal(
+        np.asarray(hists[False].final_params["w"]),
+        np.asarray(hists[True].final_params["w"]))
+
+
+def test_fedavg_run_rounds_matches_loop():
+    data = quadratic_setup(4, 5)
+    cfg = FedConfig(gamma=0.05, local_steps=3, n_clients=4,
+                    clients_per_round=2, batch_size=4)
+    a = FedAvg(sq_loss, data, cfg, TopK(density=0.5))
+    b = FedAvg(sq_loss, data, cfg, TopK(density=0.5))
+    key = jax.random.PRNGKey(9)
+    sa = a.init({"w": jnp.zeros((5,), jnp.float32)})
+    sb = b.init({"w": jnp.zeros((5,), jnp.float32)})
+    k = key
+    for _ in range(5):
+        k, sub = jax.random.split(k)
+        sa, _ = a.round(sa, sub)
+    sb, _ = b.run_rounds(sb, key, 5)
+    np.testing.assert_array_equal(np.asarray(sa.x["w"]),
+                                  np.asarray(sb.x["w"]))
+    assert a.meter.snapshot() == b.meter.snapshot()

@@ -1,14 +1,23 @@
-"""Unit + property tests for the compression operators (paper §3.1)."""
+"""Unit + property tests for the unified compression subsystem (paper §3.1).
 
-import hypothesis
-import hypothesis.strategies as st
+Covers operator semantics AND the exact in-graph bit accounting: every
+``compress`` returns ``(tree, BitsReport)`` whose totals must equal the
+hand-computed paper formulas — (32+32)*nnz for TopK, (1+r)*n + 32/tensor
+for Q_r, (32+1+r)*nnz + 32 for the double compression.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compressors import (
-    Compose, Identity, QuantQr, TopK, make_compressor)
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: property tests need hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.compress import (
+    BitsReport, Compose, Identity, Int8Sync, QuantQr, TopK, available,
+    dense_bits, make_compressor, register)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -22,25 +31,39 @@ def tree_of(key, shapes):
 class TestTopK:
     def test_keeps_exactly_k(self):
         x = {"a": jax.random.normal(jax.random.PRNGKey(0), (1000,))}
-        out = TopK(density=0.1).compress(x)
+        out, rep = TopK(density=0.1).compress(x)
         assert int((out["a"] != 0).sum()) == 100
+        assert float(rep.total_bits) == 100 * 64
 
     def test_keeps_largest(self):
         x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
-        out = TopK(density=0.4).compress({"a": x})["a"]
+        out = TopK(density=0.4).apply({"a": x})["a"]
         np.testing.assert_allclose(out, [0.0, -5.0, 0.0, 3.0, 0.0])
 
     def test_density_one_identity(self):
         x = tree_of(jax.random.PRNGKey(1), [(64,), (8, 8)])
-        out = TopK(density=1.0).compress(x)
+        out, rep = TopK(density=1.0).compress(x)
         for k in x:
             np.testing.assert_array_equal(out[k], x[k])
+        # dense payload, no indices
+        assert float(rep.index_bits) == 0
+        assert float(rep.total_bits) == 128 * 32
 
     def test_global_scope(self):
         x = {"a": jnp.asarray([10.0, 0.1]), "b": jnp.asarray([5.0, 0.2])}
-        out = TopK(density=0.5, scope="global").compress(x)
+        out, _ = TopK(density=0.5, scope="global").compress(x)
         np.testing.assert_allclose(out["a"], [10.0, 0.0])
         np.testing.assert_allclose(out["b"], [5.0, 0.0])
+
+    def test_quantile_impl_matches_threshold_semantics(self):
+        x = {"a": jax.random.normal(jax.random.PRNGKey(3), (512,))}
+        out, rep = TopK(density=0.25, impl="quantile").compress(x)
+        kept = np.abs(np.asarray(x["a"]))[np.asarray(out["a"]) != 0]
+        dropped = np.abs(np.asarray(x["a"]))[np.asarray(out["a"]) == 0]
+        assert kept.min() >= dropped.max() - 1e-7
+        # bits follow the *actual* (approximate) support
+        nnz = int((out["a"] != 0).sum())
+        assert float(rep.total_bits) == nnz * 64
 
     @hypothesis.given(
         st.integers(10, 300), st.floats(0.05, 1.0),
@@ -50,7 +73,7 @@ class TestTopK:
         """TopK(x) is the best ||.||-approximation among k-sparse vectors:
         the kept set has magnitudes >= every dropped one."""
         x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
-        out = np.asarray(TopK(density=density).compress(
+        out = np.asarray(TopK(density=density).apply(
             {"a": jnp.asarray(x)})["a"])
         kept = np.abs(x[out != 0])
         dropped = np.abs(x[out == 0])
@@ -59,10 +82,23 @@ class TestTopK:
         # kept values pass through unchanged
         np.testing.assert_allclose(out[out != 0], x[out != 0])
 
-    def test_bits(self):
+    @hypothesis.given(st.integers(16, 200), st.floats(0.05, 0.9),
+                      st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_bits_equal_nnz_formula(self, n, density, seed):
+        """BitsReport total == (32 + 32) * nnz of the actual mask."""
+        x = {"a": jax.random.normal(jax.random.PRNGKey(seed), (n,))}
+        out, rep = TopK(density=density).compress(x)
+        nnz = int((out["a"] != 0).sum())
+        assert float(rep.value_bits) == nnz * 32
+        assert float(rep.index_bits) == nnz * 32
+        assert float(rep.total_bits) == nnz * (32 + 32)
+
+    def test_expected_bits(self):
         x = {"a": jnp.zeros((1000,))}
-        assert TopK(density=0.1).bits(x) == 100 * 64
-        assert Identity().bits(x) == 1000 * 32
+        assert TopK(density=0.1).expected_bits(x) == 100 * 64
+        assert Identity().expected_bits(x) == 1000 * 32
+        assert dense_bits(x) == 1000 * 32
 
 
 class TestQuantQr:
@@ -71,16 +107,16 @@ class TestQuantQr:
             QuantQr(r=4).compress({"a": jnp.ones((4,))})
 
     def test_zero_input(self):
-        out = QuantQr(r=4).compress({"a": jnp.zeros((16,))},
-                                    jax.random.PRNGKey(0))
+        out, _ = QuantQr(r=4).compress({"a": jnp.zeros((16,))},
+                                       jax.random.PRNGKey(0))
         np.testing.assert_array_equal(out["a"], 0.0)
 
     def test_values_on_grid(self):
         x = {"a": jax.random.normal(jax.random.PRNGKey(0), (256,))}
         r = 3
-        out = QuantQr(r=r).compress(x, jax.random.PRNGKey(1))["a"]
+        out, _ = QuantQr(r=r).compress(x, jax.random.PRNGKey(1))
         norm = float(jnp.linalg.norm(x["a"]))
-        levels = np.asarray(out) / norm * (2 ** r)
+        levels = np.asarray(out["a"]) / norm * (2 ** r)
         np.testing.assert_allclose(levels, np.round(levels), atol=1e-4)
 
     def test_unbiased(self):
@@ -90,7 +126,7 @@ class TestQuantQr:
         keys = jax.random.split(jax.random.PRNGKey(2), 3000)
         acc = np.zeros(4)
         for k in keys:
-            acc += np.asarray(comp.compress(x, k)["a"])
+            acc += np.asarray(comp.apply(x, k)["a"])
         np.testing.assert_allclose(acc / len(keys), x["a"], atol=0.02)
 
     @hypothesis.given(st.integers(1, 10), st.integers(0, 2**31 - 1))
@@ -98,29 +134,98 @@ class TestQuantQr:
     def test_error_bound(self, r, seed):
         """|Q_r(x)_i - x_i| <= ||x|| / 2^r componentwise."""
         x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
-        out = QuantQr(r=r).compress({"a": x}, jax.random.PRNGKey(seed + 1))
+        out, _ = QuantQr(r=r).compress({"a": x}, jax.random.PRNGKey(seed + 1))
         err = np.abs(np.asarray(out["a"]) - np.asarray(x))
         bound = float(jnp.linalg.norm(x)) / 2 ** r + 1e-5
         assert err.max() <= bound
 
+    @hypothesis.given(st.integers(1, 12), st.integers(1, 4),
+                      st.integers(0, 2**31 - 1))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_bits_equal_formula(self, r, n_tensors, seed):
+        """BitsReport total == (1 + r) * n + 32 per tensor norm."""
+        shapes = [(8 * (i + 1),) for i in range(n_tensors)]
+        x = tree_of(jax.random.PRNGKey(seed), shapes)
+        n = sum(v.size for v in x.values())
+        _, rep = QuantQr(r=r).compress(x, jax.random.PRNGKey(seed + 1))
+        assert float(rep.total_bits) == n * (1 + r) + n_tensors * 32
+        assert QuantQr(r=r).expected_bits(x) == n * (1 + r) + n_tensors * 32
+
     def test_bits_fewer_than_dense(self):
         x = {"a": jnp.zeros((1000,))}
-        assert QuantQr(r=8).bits(x) == 1000 * 9 + 32
+        _, rep = QuantQr(r=8).compress(x, jax.random.PRNGKey(0))
+        assert float(rep.total_bits) == 1000 * 9 + 32
 
 
 class TestCompose:
     def test_topk_then_quant(self):
         x = {"a": jax.random.normal(jax.random.PRNGKey(0), (512,))}
         comp = Compose(TopK(0.25), QuantQr(4))
-        out = comp.compress(x, jax.random.PRNGKey(1))["a"]
-        assert int((out != 0).sum()) <= 128
-        # bits: 25% coords x (32 idx + 1 sign + 4 level) + norm
-        assert comp.bits(x) == 128 * 37 + 32
+        out, rep = comp.compress(x, jax.random.PRNGKey(1))
+        assert int((out["a"] != 0).sum()) <= 128
+        # bits: nnz of the sparsifier support x (32 idx + 1 sign + 4 level)
+        # + per-tensor norm — support-aware, counted in-graph
+        assert float(rep.total_bits) == 128 * 37 + 32
+        assert comp.expected_bits(x) == 128 * 37 + 32
+
+
+class TestInt8Sync:
+    def test_roundtrip_unbiased(self):
+        x = {"a": jax.random.normal(jax.random.PRNGKey(0), (128,))}
+        comp = Int8Sync()
+        keys = jax.random.split(jax.random.PRNGKey(1), 2000)
+        acc = np.zeros(128)
+        for k in keys:
+            acc += np.asarray(comp.apply(x, k)["a"])
+        np.testing.assert_allclose(acc / len(keys), x["a"], atol=0.05)
+
+    def test_payload_is_int8(self):
+        x = {"a": jax.random.normal(jax.random.PRNGKey(0), (64,))}
+        payload, scales = Int8Sync().encode(x, jax.random.PRNGKey(1))
+        assert payload["a"].dtype == jnp.int8
+        _, rep = Int8Sync().compress(x, jax.random.PRNGKey(1))
+        assert float(rep.total_bits) == 64 * 8 + 32
+
+    def test_rejects_wide_levels(self):
+        with pytest.raises(ValueError):
+            Int8Sync(magnitude_bits=8)
+
+
+class TestReport:
+    def test_add_and_scale(self):
+        a = BitsReport(10.0, 5.0, 1.0)
+        b = BitsReport(2.0, 1.0, 0.5)
+        assert (a + b).total_bits == 19.5
+        assert a.scale(3).total_bits == 48.0
+
+    def test_report_flows_through_jit_and_vmap(self):
+        comp = TopK(density=0.5)
+        tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (4, 32))}
+        keys = jax.random.split(jax.random.PRNGKey(1), 4)
+
+        @jax.jit
+        def f(t, ks):
+            out, rep = jax.vmap(comp.compress)(t, ks)
+            return rep.reduce_sum().total_bits
+
+        assert float(f(tree, keys)) == 4 * 16 * 64
 
 
 def test_registry():
     assert isinstance(make_compressor("topk", density=0.3), TopK)
     assert isinstance(make_compressor("quant", r=4), QuantQr)
     assert isinstance(make_compressor("none"), Identity)
+    assert isinstance(make_compressor("int8"), Int8Sync)
+    assert "topk+quant" in available()
     with pytest.raises(ValueError):
         make_compressor("nope")
+
+
+def test_registry_extension():
+    class Noop(Identity):
+        pass
+
+    register("test-noop", Noop, overwrite=True)
+    assert isinstance(make_compressor("test-noop"), Noop)
+    with pytest.raises(ValueError):
+        register("test-noop", Noop)

@@ -1,9 +1,12 @@
 """Data pipeline: Dirichlet partitioning properties + synthetic datasets."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: property tests need hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import fed_data
 from repro.data import dirichlet, synthetic

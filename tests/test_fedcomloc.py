@@ -16,7 +16,7 @@ import numpy as np
 import pytest
 
 from repro.core import fed_data
-from repro.core.compressors import Identity, QuantQr, TopK
+from repro.compress import Identity, QuantQr, TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 
 jax.config.update("jax_platform_name", "cpu")

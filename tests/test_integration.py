@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fed_data, server
-from repro.core.compressors import QuantQr, TopK
+from repro.compress import QuantQr, TopK
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
 from repro.data import dirichlet, synthetic
 from repro.models import small

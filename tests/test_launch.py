@@ -158,7 +158,11 @@ class TestFedInt8Sync:
             key = jax.random.PRNGKey(1)
             for _ in range(6):
                 key, sub = jax.random.split(key)
-                ps, hs, loss = step(ps, hs, {"tokens": toks}, sub)
+                ps, hs, loss, comm_bits = step(ps, hs, {"tokens": toks}, sub)
                 losses.append(float(loss))
         assert losses[-1] < losses[0]
         assert np.isfinite(losses).all()
+        # int8 wire payload: 8 bits/scalar + one f32 scale per tensor
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        n_tensors = len(jax.tree_util.tree_leaves(params))
+        assert float(comm_bits) == n_params * 8 + n_tensors * 32

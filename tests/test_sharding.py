@@ -129,25 +129,32 @@ class TestFedRound:
             key = jax.random.PRNGKey(1)
             for r in range(8):
                 key, sub = jax.random.split(key)
-                stackp, stackh, loss = step(
+                stackp, stackh, loss, bits = step(
                     stackp, stackh, {"tokens": toks},
                     jax.random.key_data(sub) if hasattr(
                         jax.random, "key_data") else sub)
                 losses.append(float(loss))
         assert losses[-1] < losses[0], losses
         assert np.isfinite(losses).all()
+        assert float(bits) > 0
 
 
-def test_compress_tree_ops():
+def test_fed_train_uses_unified_compressors():
+    """The launch layer resolves its config to repro.compress entries
+    (quantile-threshold TopK at scale) — no local compression code."""
     tree = {"a": jnp.asarray(np.random.default_rng(0).normal(
         size=(64,)).astype(np.float32))}
     fed = fed_train.FedTrainConfig(compressor="topk", density=0.25)
-    out = fed_train.compress_tree(tree, fed, jax.random.PRNGKey(0))
+    comp = fed_train.make_compressor(fed)
+    assert comp.impl == "quantile"
+    out, rep = comp.compress(tree, jax.random.PRNGKey(0))
     nnz = int((out["a"] != 0).sum())
     assert 10 <= nnz <= 22   # ~16 kept (threshold semantics)
-    bits = fed_train.compressed_bits(tree, fed)
-    assert bits == 0.25 * 64 * 64
+    # bits are counted from the actual support, in-graph
+    assert float(rep.total_bits) == nnz * 64
+    assert comp.expected_bits(tree) == 0.25 * 64 * 64
     fedq = fed_train.FedTrainConfig(compressor="quant", quant_bits=4)
-    outq = fed_train.compress_tree(tree, fedq, jax.random.PRNGKey(1))
+    compq = fed_train.make_compressor(fedq)
+    outq, repq = compq.compress(tree, jax.random.PRNGKey(1))
     assert outq["a"].shape == (64,)
-    assert fed_train.compressed_bits(tree, fedq) == 64 * 5
+    assert float(repq.total_bits) == 64 * 5 + 32   # + per-tensor norm
