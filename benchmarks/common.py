@@ -72,5 +72,9 @@ def run_fl(name: str, alg, model, eval_fn, rounds: int, seed: int = 0,
         "acc_per_gbit": round(hist.best_acc
                               / max(alg.meter.total_bits / 8e9, 1e-9), 2),
     }
+    # straggler-aware simulated time (DESIGN.md §5): server waits for the
+    # slowest sampled client each round; under a homogeneous schedule this
+    # degenerates to cumulative local steps
+    row["sim_time"] = round(hist.sim_time[-1], 2)
     row.update(extra or {})
     return row

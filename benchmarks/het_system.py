@@ -1,0 +1,70 @@
+"""System-heterogeneity sweep (DESIGN.md §5, EXPERIMENTS.md §HetSystem).
+
+The paper's data-heterogeneity scenarios (table2/fig7 Dirichlet alpha) run
+every client with the same speed, bandwidth and density.  This sweep varies
+the *system* axis: client speed distributions (uniform narrow vs lognormal
+heavy-tailed) x per-client density allocation (uniform vs
+bandwidth-proportional) x straggler policy (wait for all vs deadline+drop),
+all on the FedComLoc-Com variant with exact per-client bit accounting.
+
+Headline metrics per row: best accuracy, total Mbits, and ``sim_time`` —
+the straggler-aware simulated wall-clock where each round costs
+``max_i(steps_i/speed_i + bits_i·bit_cost/bandwidth_i)``.  Lognormal
+speeds without a deadline show the classic straggler blow-up; a deadline
+with dropping trades a little accuracy for a much shorter sim_time, and
+bandwidth-proportional densities spend the same bit budget where the links
+are fast.
+"""
+
+from repro.compress import TopK
+from repro.core.clients import ClientProfile, ClientSchedule
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+N_CLIENTS = 20
+BASE_DENSITY = 0.2
+BIT_COST = 1e-7   # sim-time per uplink bit at bandwidth 1 (light comm term)
+
+
+def _profile(speeds: str, seed: int = 0) -> ClientProfile:
+    if speeds == "uniform":
+        return ClientProfile.uniform(N_CLIENTS, lo=0.7, hi=1.4,
+                                     bandwidth_lo=0.5, bandwidth_hi=2.0,
+                                     seed=seed)
+    if speeds == "lognormal":
+        return ClientProfile.lognormal(N_CLIENTS, speed_sigma=1.0,
+                                       bandwidth_sigma=0.7, seed=seed)
+    raise ValueError(speeds)
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    data, model, loss_fn, eval_fn = common.mnist_setup(n_clients=N_CLIENTS)
+    speed_models = ("lognormal",) if fast else ("uniform", "lognormal")
+    allocations = ("uniform", "bandwidth")
+    rows = []
+    for speeds in speed_models:
+        for alloc in allocations:
+            profile = _profile(speeds).with_density_allocation(
+                BASE_DENSITY, mode=alloc)
+            scenarios = [("wait", ClientSchedule(
+                profile=profile, bit_cost=BIT_COST))]
+            if not fast or alloc == "bandwidth":
+                # deadline ~ the nominal phase length at median speed;
+                # stragglers that finish zero steps are dropped
+                scenarios.append(("drop", ClientSchedule(
+                    profile=profile, deadline=10.0, drop_stragglers=True,
+                    bit_cost=BIT_COST)))
+            for policy, sched in scenarios:
+                cfg = FedComLocConfig(gamma=0.1, p=0.1, n_clients=N_CLIENTS,
+                                      clients_per_round=5, batch_size=32,
+                                      variant="com")
+                alg = FedComLoc(loss_fn, data, cfg, TopK(density=BASE_DENSITY),
+                                schedule=sched)
+                rows.append(common.run_fl(
+                    f"het_system/{speeds}_{alloc}_{policy}",
+                    alg, model, eval_fn, rounds,
+                    extra={"speeds": speeds, "alloc": alloc,
+                           "policy": policy}))
+    return rows

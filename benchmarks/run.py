@@ -29,6 +29,7 @@ MODULES = [
     "fig10_variants",
     "fig16_double",
     "beyond_ef",
+    "het_system",
     "roofline",
 ]
 
@@ -50,6 +51,7 @@ def main() -> None:
 
     mods = args.only if args.only else MODULES
     all_rows = []
+    failed = []
     print("name,us_per_call,derived")
     for name in mods:
         mod = importlib.import_module(f"benchmarks.{name}")
@@ -59,6 +61,7 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             print(f"{name},ERROR,")
+            failed.append(name)
             continue
         for r in rows:
             derived = r.get("best_acc", r.get("useful", ""))
@@ -68,6 +71,8 @@ def main() -> None:
 
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "results.json").write_text(json.dumps(all_rows, indent=2))
+    if failed:  # nonzero exit so the CI smoke step catches rotted modules
+        raise SystemExit(f"benchmark module(s) failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

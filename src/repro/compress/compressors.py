@@ -41,6 +41,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.compress.report import (
     FLOAT_BITS, INDEX_BITS, BitsReport, dense_report)
@@ -74,30 +75,48 @@ def _map_flat_global(tree: PyTree, fn) -> PyTree:
 class Compressor:
     """Base class.  Subclasses implement ``compress`` and ``expected_bits``.
 
-    ``compress(tree, rng) -> (compressed_tree, BitsReport)`` with the report
-    computed in-graph from the actual payload; ``apply`` discards the report
-    (for call sites like FedComLoc-Local where nothing hits the wire).
+    ``compress(tree, rng, **overrides) -> (compressed_tree, BitsReport)``
+    with the report computed in-graph from the actual payload; ``apply``
+    discards the report (for call sites like FedComLoc-Local where nothing
+    hits the wire).
+
+    ``overrides`` are per-call parameter overrides (DESIGN.md §5): operators
+    that support them (``TopK.density``, ``QuantQr.r``, ``Compose`` forwards
+    both) accept *traced* scalars, so a ``vmap`` over clients with a
+    parameter array batches the compression with per-client settings while
+    the ``BitsReport`` still counts each client's actual payload.
+    ``param_overrides()`` names the keys an operator accepts, letting
+    schedulers route a profile's arrays without knowing the operator type.
     """
 
     #: True if E[C(x)] = x.
     unbiased: bool = False
 
     def compress(self, tree: PyTree,
-                 rng: Optional[jax.Array] = None
-                 ) -> Tuple[PyTree, BitsReport]:
+                 rng: Optional[jax.Array] = None,
+                 **overrides) -> Tuple[PyTree, BitsReport]:
         raise NotImplementedError
 
-    def apply(self, tree: PyTree, rng: Optional[jax.Array] = None) -> PyTree:
-        return self.compress(tree, rng)[0]
+    def apply(self, tree: PyTree, rng: Optional[jax.Array] = None,
+              **overrides) -> PyTree:
+        return self.compress(tree, rng, **overrides)[0]
+
+    def param_overrides(self) -> Tuple[str, ...]:
+        """Override keys ``compress`` accepts as traced per-call values."""
+        return ()
+
+    def validate_override(self, name: str, values) -> None:
+        """Host-side range check for override *values* (traced overrides
+        bypass ``__post_init__``); schedulers call this once at build time."""
 
     def expected_bits(self, tree: PyTree) -> float:
         """Host-side closed-form estimate of ``compress(tree)`` bits."""
         raise NotImplementedError
 
     def __call__(self, tree: PyTree,
-                 rng: Optional[jax.Array] = None
-                 ) -> Tuple[PyTree, BitsReport]:
-        return self.compress(tree, rng)
+                 rng: Optional[jax.Array] = None,
+                 **overrides) -> Tuple[PyTree, BitsReport]:
+        return self.compress(tree, rng, **overrides)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,16 +163,54 @@ class TopK(Compressor):
         return (kops.topk_mask(x.reshape(-1), self._k(x.size))
                 .reshape(x.shape).astype(x.dtype))
 
-    def compress(self, tree: PyTree, rng=None):
-        if self.density >= 1.0:
-            return tree, dense_report(tree)
+    def _mask_one_dyn(self, x: jax.Array, d: jax.Array) -> jax.Array:
+        """Threshold with a traced density (per-client values under vmap)."""
+        if self.impl == "quantile":
+            mag = jnp.abs(x.astype(jnp.float32))
+            thr = jnp.quantile(mag.reshape(-1), jnp.clip(1.0 - d, 0.0, 1.0))
+            return jnp.where(mag >= thr, x, jnp.zeros_like(x))
+        k = jnp.round(d * x.size).astype(jnp.int32)
+        return (kops.topk_mask(x.reshape(-1), k)
+                .reshape(x.shape).astype(x.dtype))
+
+    def param_overrides(self):
+        return ("density",)
+
+    def validate_override(self, name, values):
+        if name == "density":
+            v = np.asarray(values)
+            if not ((v > 0.0) & (v <= 1.0)).all():
+                raise ValueError(
+                    f"density override values must be in (0, 1], got "
+                    f"range [{v.min()}, {v.max()}]")
+
+    def compress(self, tree: PyTree, rng=None, *, density=None):
+        if density is None:
+            if self.density >= 1.0:
+                return tree, dense_report(tree)
+            if self.scope == "global":
+                out = _map_flat_global(tree, self._mask_one)
+            else:
+                out = jax.tree_util.tree_map(self._mask_one, tree)
+            nnz = _nnz(out)
+            return out, BitsReport(value_bits=nnz * FLOAT_BITS,
+                                   index_bits=nnz * INDEX_BITS)
+        # Traced density (DESIGN.md §5): same threshold semantics, but the
+        # k / quantile is a traced function of ``density``, so one vmapped
+        # compress batches per-client settings.  Bits stay exact per call:
+        # nnz from the actual mask; at density >= 1 the payload is dense and
+        # the index bits vanish in-graph.
+        d = jnp.asarray(density, jnp.float32)
+        mask = lambda x: self._mask_one_dyn(x, d)
         if self.scope == "global":
-            out = _map_flat_global(tree, self._mask_one)
+            out = _map_flat_global(tree, mask)
         else:
-            out = jax.tree_util.tree_map(self._mask_one, tree)
+            out = jax.tree_util.tree_map(mask, tree)
         nnz = _nnz(out)
-        return out, BitsReport(value_bits=nnz * FLOAT_BITS,
-                               index_bits=nnz * INDEX_BITS)
+        n = float(_tree_size(tree))
+        return out, BitsReport(
+            value_bits=jnp.where(d >= 1.0, n * FLOAT_BITS, nnz * FLOAT_BITS),
+            index_bits=jnp.where(d >= 1.0, 0.0, nnz * INDEX_BITS))
 
     def expected_bits(self, tree: PyTree) -> float:
         if self.density >= 1.0:
@@ -181,24 +238,40 @@ class QuantQr(Compressor):
         if self.r <= 0:
             raise ValueError("r must be positive")
 
-    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None):
+    def param_overrides(self):
+        return ("r",)
+
+    def validate_override(self, name, values):
+        if name == "r":
+            v = np.asarray(values)
+            if not np.issubdtype(v.dtype, np.integer) or not (v >= 1).all():
+                raise ValueError(
+                    f"r override values must be integers >= 1, got dtype "
+                    f"{v.dtype}, min {v.min()}")
+
+    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None, *,
+                 r=None):
         if rng is None:
             raise ValueError("QuantQr requires an rng key (stochastic rounding)")
+        # ``r`` may be a traced scalar (per-client bit widths under vmap);
+        # the jnp quantizer keeps 2**r in-graph and the (1+r)·n payload
+        # formula is exact either way.
+        rr = self.r if r is None else r
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         keys = jax.random.split(rng, len(leaves))
         if self.scope == "global":
             out = _map_flat_global(
-                tree, lambda flat: kops.quantize_qr(flat, self.r, keys[0]))
+                tree, lambda flat: kops.quantize_qr(flat, rr, keys[0]))
             n_norms = 1
         else:
-            new = [kops.quantize_qr(l.reshape(-1), self.r, k)
+            new = [kops.quantize_qr(l.reshape(-1), rr, k)
                    .reshape(l.shape).astype(l.dtype)
                    for l, k in zip(leaves, keys)]
             out = jax.tree_util.tree_unflatten(treedef, new)
             n_norms = len(leaves)
         n = _tree_size(tree)
         return out, BitsReport(
-            value_bits=jnp.asarray(float(n) * (1 + self.r)),
+            value_bits=jnp.asarray(float(n) * (1 + rr), jnp.float32),
             meta_bits=jnp.asarray(float(n_norms) * FLOAT_BITS))
 
     def expected_bits(self, tree: PyTree) -> float:
@@ -222,21 +295,46 @@ class Compose(Compressor):
     first: Compressor = dataclasses.field(default_factory=lambda: TopK(0.25))
     second: Compressor = dataclasses.field(default_factory=lambda: QuantQr(4))
 
-    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None):
+    def param_overrides(self):
+        return tuple(self.first.param_overrides()
+                     + self.second.param_overrides())
+
+    def validate_override(self, name, values):
+        if name in self.first.param_overrides():
+            self.first.validate_override(name, values)
+        if name in self.second.param_overrides():
+            self.second.validate_override(name, values)
+
+    def compress(self, tree: PyTree, rng: Optional[jax.Array] = None,
+                 **overrides):
         if rng is not None:
             k1, k2 = jax.random.split(rng)
         else:
             k1 = k2 = None
-        mid, rep1 = self.first.compress(tree, k1)
-        out, rep2 = self.second.compress(mid, k2)
-        if (isinstance(self.first, TopK) and isinstance(self.second, QuantQr)
-                and self.first.density < 1.0):
+        ov1 = {k: v for k, v in overrides.items()
+               if k in self.first.param_overrides()}
+        ov2 = {k: v for k, v in overrides.items()
+               if k in self.second.param_overrides()}
+        unknown = set(overrides) - set(ov1) - set(ov2)
+        if unknown:
+            raise TypeError(f"unknown override(s) {sorted(unknown)} for "
+                            f"{type(self.first).__name__}->"
+                            f"{type(self.second).__name__}")
+        mid, rep1 = self.first.compress(tree, k1, **ov1)
+        out, rep2 = self.second.compress(mid, k2, **ov2)
+        if isinstance(self.first, TopK) and isinstance(self.second, QuantQr):
             # The transmitted support is fixed by the sparsifier; count the
-            # quantized payload over that support only.
+            # quantized payload over that support only.  With a traced
+            # density the dense case (density >= 1) is gated in-graph —
+            # then the payload is the quantizer's dense report.
+            d = overrides.get("density", self.first.density)
+            rr = overrides.get("r", self.second.r)
             nnz = rep1.index_bits / INDEX_BITS
-            rep = BitsReport(value_bits=nnz * (1 + self.second.r),
-                             index_bits=rep1.index_bits,
-                             meta_bits=rep2.meta_bits)
+            rep = BitsReport(
+                value_bits=jnp.where(jnp.asarray(d) >= 1.0, rep2.value_bits,
+                                     nnz * (1 + rr)),
+                index_bits=rep1.index_bits,
+                meta_bits=rep2.meta_bits)
         else:
             rep = BitsReport(value_bits=rep2.value_bits,
                              index_bits=rep1.index_bits + rep2.index_bits,

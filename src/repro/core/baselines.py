@@ -24,6 +24,9 @@ import jax.numpy as jnp
 
 from repro.compress import Compressor, Identity, TopK, dense_bits
 from repro.core import comm
+from repro.core.clients import (
+    ClientSchedule, keep_where, masked_mean, mean_over_active, per_client,
+    tree_where, validate_schedule, vmap_compress)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
@@ -40,6 +43,16 @@ class FedConfig:
     batch_size: int = 32
     alpha: float = 0.1            # FedDyn regularisation strength
 
+    def __post_init__(self):
+        if self.n_clients <= 0:
+            raise ValueError("n_clients must be positive")
+        if not (0 < self.clients_per_round <= self.n_clients):
+            raise ValueError(
+                f"clients_per_round must be in [1, n_clients]: got "
+                f"{self.clients_per_round} with n_clients={self.n_clients}")
+        if self.local_steps <= 0:
+            raise ValueError("local_steps must be positive")
+
 
 def _tmap(f, *trees):
     return jax.tree_util.tree_map(f, *trees)
@@ -47,16 +60,22 @@ def _tmap(f, *trees):
 
 def _local_sgd(loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
                x0_stacked: PyTree, clients: jax.Array, key: jax.Array,
-               grad_adjust: Callable[[PyTree, int], PyTree] | None = None):
-    """Run cfg.local_steps of minibatch SGD on each sampled client.
+               grad_adjust: Callable[[PyTree, int], PyTree] | None = None,
+               steps: jax.Array | None = None):
+    """Run minibatch SGD on each sampled client.
 
-    grad_adjust(g, client_slot) -> adjusted gradient (vmapped per client).
-    Returns (x_final stacked, mean train loss).
+    ``steps`` is an optional (s,) per-client step count (DESIGN.md §5): the
+    scan always runs ``cfg.local_steps`` iterations and clients past their
+    count carry through unchanged, so heterogeneous schedules stay inside
+    one fused graph.  ``grad_adjust(g, client_slot, x_c)`` adjusts each
+    client's gradient (vmapped).  Returns (x_final stacked, mean train
+    loss averaged over the steps clients actually ran).
     """
     s = cfg.clients_per_round
 
-    def step(carry, k_step):
+    def step(carry, inp):
         x_i, loss_acc = carry
+        step_idx, k_step = inp
 
         def one_client(x_c, client, kc, slot):
             xb, yb = data.sample_batch(kc, client, cfg.batch_size)
@@ -67,14 +86,22 @@ def _local_sgd(loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
             return x_new, loss
 
         keys = jax.random.split(k_step, s)
-        x_i, losses = jax.vmap(one_client)(
+        x_new, losses = jax.vmap(one_client)(
             x_i, clients, keys, jnp.arange(s))
-        return (x_i, loss_acc + losses.mean()), None
+        if steps is None:
+            return (x_new, loss_acc + losses.mean()), None
+        active = step_idx < steps
+        x_i = keep_where(active, x_new, x_i)
+        loss_acc = loss_acc + mean_over_active(losses, active)
+        return (x_i, loss_acc), None
 
     step_keys = jax.random.split(key, cfg.local_steps)
-    (x_fin, loss_sum), _ = jax.lax.scan(step, (x0_stacked, jnp.zeros(())),
-                                        step_keys)
-    return x_fin, loss_sum / cfg.local_steps
+    (x_fin, loss_sum), _ = jax.lax.scan(
+        step, (x0_stacked, jnp.zeros(())),
+        (jnp.arange(cfg.local_steps), step_keys))
+    denom = (cfg.local_steps if steps is None
+             else jnp.maximum(steps.max(), 1))
+    return x_fin, loss_sum / denom
 
 
 def _broadcast(x: PyTree, s: int) -> PyTree:
@@ -93,9 +120,14 @@ class FedAvgState(NamedTuple):
 class FedAvg(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
                  compressor: Compressor | None = None,
+                 schedule: ClientSchedule | None = None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.comp = compressor if compressor is not None else Identity()
+        self.sched = validate_schedule(
+            schedule if schedule is not None
+            else ClientSchedule.homogeneous(cfg.n_clients),
+            cfg.n_clients, self.comp)
         self.meter = comm.CommMeter(mode=meter_mode)
         self._setup_engine()
 
@@ -103,25 +135,39 @@ class FedAvg(RoundEngine):
         return FedAvgState(x=params0, round=jnp.zeros((), jnp.int32))
 
     def _round_impl(self, state: FedAvgState, key: jax.Array):
-        cfg = self.cfg
+        cfg, sched = self.cfg, self.sched
         s = cfg.clients_per_round
         k_sample, k_local, k_comp = jax.random.split(key, 3)
         clients = jax.random.choice(k_sample, cfg.n_clients, (s,),
                                     replace=False)
+        plan = sched.plan(clients, cfg.local_steps)
+        partf = plan.participating.astype(jnp.float32)
         x0 = _broadcast(state.x, s)
-        x_fin, loss = _local_sgd(self.loss_fn, self.data, cfg, x0, clients,
-                                 k_local)
+        x_fin, loss = _local_sgd(
+            self.loss_fn, self.data, cfg, x0, clients, k_local,
+            steps=plan.steps if sched.deadline is not None else None)
         comp_keys = jax.random.split(k_comp, s)
-        x_fin, up_rep = jax.vmap(self.comp.compress)(x_fin, comp_keys)
-        x_new = _tmap(lambda t: t.mean(axis=0), x_fin)
+        x_fin, up_rep = vmap_compress(self.comp, plan, x_fin, comp_keys)
+        client_up = up_rep.total_bits * partf
+        if sched.may_drop:
+            # if every sampled client dropped, the server keeps its model
+            x_new = tree_where(partf.sum() > 0,
+                               masked_mean(x_fin, partf), state.x)
+        else:
+            x_new = _tmap(lambda t: t.mean(axis=0), x_fin)
         metrics = {"train_loss": loss,
-                   "uplink_bits": up_rep.reduce_sum().total_bits,
-                   "downlink_bits": jnp.asarray(s * dense_bits(state.x))}
+                   "uplink_bits": client_up.sum(),
+                   "downlink_bits": jnp.asarray(s * dense_bits(state.x)),
+                   "client_steps": plan.steps,
+                   "client_uplink_bits": client_up,
+                   "sim_time": sched.sim_time(plan, client_up)}
         return FedAvgState(x=x_new, round=state.round + 1), metrics
 
 
-def SparseFedAvg(loss_fn, data, cfg, density: float = 0.1):
-    return FedAvg(loss_fn, data, cfg, compressor=TopK(density=density))
+def SparseFedAvg(loss_fn, data, cfg, density: float = 0.1,
+                 schedule: ClientSchedule | None = None):
+    return FedAvg(loss_fn, data, cfg, compressor=TopK(density=density),
+                  schedule=schedule)
 
 
 # --------------------------------------------------------------------------- #
@@ -137,8 +183,12 @@ class ScaffoldState(NamedTuple):
 
 class Scaffold(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
+                 schedule: ClientSchedule | None = None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
+        self.sched = validate_schedule(
+            schedule if schedule is not None
+            else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
         self.meter = comm.CommMeter(mode=meter_mode)
         self._setup_engine()
 
@@ -150,11 +200,14 @@ class Scaffold(RoundEngine):
                              round=jnp.zeros((), jnp.int32))
 
     def _round_impl(self, state: ScaffoldState, key: jax.Array):
-        cfg = self.cfg
+        cfg, sched = self.cfg, self.sched
         k_sample, k_local = jax.random.split(key)
         s = cfg.clients_per_round
         clients = jax.random.choice(k_sample, cfg.n_clients, (s,),
                                     replace=False)
+        plan = sched.plan(clients, cfg.local_steps)
+        part = plan.participating
+        partf = part.astype(jnp.float32)
         ci_s = _tmap(lambda c: c[clients], state.ci)
         x0 = _broadcast(state.x, s)
 
@@ -162,26 +215,53 @@ class Scaffold(RoundEngine):
             return _tmap(lambda gc, cic, cc: gc - cic + cc,
                          g, _tmap(lambda c: c[slot], ci_s), state.c)
 
+        het = sched.deadline is not None
         x_fin, loss = _local_sgd(self.loss_fn, self.data, cfg, x0, clients,
-                                 k_local, grad_adjust=adjust)
+                                 k_local, grad_adjust=adjust,
+                                 steps=plan.steps if het else None)
 
-        # option II: ci+ = ci - c + (x - y_i) / (K * gamma)
-        coef = 1.0 / (cfg.local_steps * cfg.gamma)
-        ci_new = _tmap(
-            lambda cic, cc, xs, yf: cic - cc[None] + coef * (xs - yf),
-            ci_s, state.c, x0, x_fin)
-        dx = _tmap(lambda yf, xs: (yf - xs).mean(axis=0), x_fin, x0)
-        dc = _tmap(lambda cn, co: (cn - co).mean(axis=0), ci_new, ci_s)
+        # option II: ci+ = ci - c + (x - y_i) / (K_i * gamma) — K_i is the
+        # steps the client actually completed (DESIGN.md §5).
+        if het:
+            coef = 1.0 / (jnp.maximum(plan.steps, 1).astype(jnp.float32)
+                          * cfg.gamma)
+            ci_new = _tmap(
+                lambda cic, cc, xs, yf: cic - cc[None]
+                + per_client(coef, xs) * (xs - yf),
+                ci_s, state.c, x0, x_fin)
+            # a zero-step client did no work: the update above would still
+            # shift its variate by -c (x_fin == x0), so keep the old ci
+            ci_new = keep_where(plan.steps > 0, ci_new, ci_s)
+        else:
+            coef = 1.0 / (cfg.local_steps * cfg.gamma)
+            ci_new = _tmap(
+                lambda cic, cc, xs, yf: cic - cc[None] + coef * (xs - yf),
+                ci_s, state.c, x0, x_fin)
+        if sched.may_drop:   # dropped stragglers never report; keep ci
+            ci_new = keep_where(part, ci_new, ci_s)
+            dx = masked_mean(_tmap(lambda yf, xs: yf - xs, x_fin, x0), partf)
+            dc = masked_mean(_tmap(lambda cn, co: cn - co, ci_new, ci_s),
+                             partf)
+            s_eff = partf.sum()
+        else:
+            dx = _tmap(lambda yf, xs: (yf - xs).mean(axis=0), x_fin, x0)
+            dc = _tmap(lambda cn, co: (cn - co).mean(axis=0), ci_new, ci_s)
+            s_eff = s
         x_new = _tmap(lambda x_, d: x_ + d, state.x, dx)
-        c_new = _tmap(lambda c_, d: c_ + (s / cfg.n_clients) * d,
+        c_new = _tmap(lambda c_, d: c_ + (s_eff / cfg.n_clients) * d,
                       state.c, dc)
         ci_all = _tmap(lambda all_, upd: all_.at[clients].set(upd),
                        state.ci, ci_new)
         # Scaffold communicates both the model and the control variate.
         dense = dense_bits(state.x)
+        client_up = 2 * dense * partf
         metrics = {"train_loss": loss,
-                   "uplink_bits": jnp.asarray(2 * s * dense),
-                   "downlink_bits": jnp.asarray(2 * s * dense)}
+                   "uplink_bits": (client_up.sum() if sched.may_drop
+                                   else jnp.asarray(2 * s * dense)),
+                   "downlink_bits": jnp.asarray(2 * s * dense),
+                   "client_steps": plan.steps,
+                   "client_uplink_bits": client_up,
+                   "sim_time": sched.sim_time(plan, client_up)}
         return (ScaffoldState(x=x_new, c=c_new, ci=ci_all,
                               round=state.round + 1), metrics)
 
@@ -199,8 +279,12 @@ class FedDynState(NamedTuple):
 
 class FedDyn(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
+                 schedule: ClientSchedule | None = None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
+        self.sched = validate_schedule(
+            schedule if schedule is not None
+            else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
         self.meter = comm.CommMeter(mode=meter_mode)
         self._setup_engine()
 
@@ -212,11 +296,14 @@ class FedDyn(RoundEngine):
                            round=jnp.zeros((), jnp.int32))
 
     def _round_impl(self, state: FedDynState, key: jax.Array):
-        cfg = self.cfg
+        cfg, sched = self.cfg, self.sched
         k_sample, k_local = jax.random.split(key)
         s = cfg.clients_per_round
         clients = jax.random.choice(k_sample, cfg.n_clients, (s,),
                                     replace=False)
+        plan = sched.plan(clients, cfg.local_steps)
+        part = plan.participating
+        partf = part.astype(jnp.float32)
         g_s = _tmap(lambda g: g[clients], state.grads)
         x0 = _broadcast(state.x, s)
 
@@ -226,20 +313,41 @@ class FedDyn(RoundEngine):
                 lambda gc, gpc, xc, xs: gc - gpc + cfg.alpha * (xc - xs),
                 g, gp, x_c, state.x)
 
+        het = sched.deadline is not None
         x_fin, loss = _local_sgd(self.loss_fn, self.data, cfg, x0, clients,
-                                 k_local, grad_adjust=adjust)
+                                 k_local, grad_adjust=adjust,
+                                 steps=plan.steps if het else None)
         g_new = _tmap(lambda gp, yf, xs: gp - cfg.alpha * (yf - xs),
                       g_s, x_fin, x0)
+        if sched.may_drop:   # dropped stragglers keep their dual variables
+            g_new = keep_where(part, g_new, g_s)
         grads_all = _tmap(lambda all_, upd: all_.at[clients].set(upd),
                           state.grads, g_new)
-        h_new = _tmap(
-            lambda h_, yf, xs: h_ - cfg.alpha * (1.0 / cfg.n_clients)
-            * (yf - xs).sum(axis=0), state.h, x_fin, x0)
-        x_new = _tmap(lambda yf, h_: yf.mean(axis=0) - h_ / cfg.alpha,
-                      x_fin, h_new)
+        if sched.may_drop:
+            # only participants' deltas feed the server correction/average
+            delta = _tmap(
+                lambda yf, xs: (yf - xs) * per_client(partf, yf), x_fin, x0)
+            h_new = _tmap(
+                lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients)
+                * d_.sum(axis=0), state.h, delta)
+            x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
+                          masked_mean(x_fin, partf), h_new)
+            # if every sampled client dropped, the server keeps its model
+            x_new = tree_where(partf.sum() > 0, x_new, state.x)
+        else:
+            h_new = _tmap(
+                lambda h_, yf, xs: h_ - cfg.alpha * (1.0 / cfg.n_clients)
+                * (yf - xs).sum(axis=0), state.h, x_fin, x0)
+            x_new = _tmap(lambda yf, h_: yf.mean(axis=0) - h_ / cfg.alpha,
+                          x_fin, h_new)
         dense = dense_bits(state.x)
+        client_up = dense * partf
         metrics = {"train_loss": loss,
-                   "uplink_bits": jnp.asarray(s * dense),
-                   "downlink_bits": jnp.asarray(s * dense)}
+                   "uplink_bits": (client_up.sum() if sched.may_drop
+                                   else jnp.asarray(s * dense)),
+                   "downlink_bits": jnp.asarray(s * dense),
+                   "client_steps": plan.steps,
+                   "client_uplink_bits": client_up,
+                   "sim_time": sched.sim_time(plan, client_up)}
         return (FedDynState(x=x_new, h=h_new, grads=grads_all,
                             round=state.round + 1), metrics)

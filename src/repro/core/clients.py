@@ -1,0 +1,314 @@
+"""Client-heterogeneity layer: profiles, schedules, straggler rounds.
+
+The paper's experiments model *data* heterogeneity (Dirichlet alpha) but run
+every client with the same step count, compressor and density.  Real FL
+deployments are dominated by *system* heterogeneity — device speed and
+uplink bandwidth vary by orders of magnitude — and per-client bit budgets
+are exactly the plug-in point the compression subsystem (DESIGN.md §3)
+promises.  This module is the layer every heterogeneous scenario plugs into
+(DESIGN.md §5):
+
+* :class:`ClientProfile` — static per-client attributes: relative compute
+  ``speed``, relative uplink ``bandwidth``, and per-client compressor
+  parameter arrays (``comp_params``, e.g. ``{"density": (n,)}``) routed to
+  ``Compressor.compress(**overrides)`` as traced values under ``vmap``;
+* :class:`ClientSchedule` — resolves a round's sampled clients into a
+  :class:`RoundPlan`: per-client local-step counts (a straggler ``deadline``
+  truncates slow clients; ``drop_stragglers`` removes clients that finish
+  zero steps from the aggregate entirely), the participation mask, and the
+  per-client compressor overrides;
+* ``sim_time`` — the round's simulated wall-clock: the server waits for the
+  slowest sampled client, ``max_i(steps_i·step_cost/speed_i +
+  bits_i·bit_cost/bandwidth_i)``.
+
+Everything is jit/scan-safe: profiles are device arrays gathered by the
+sampled-client indices inside the round graph, so the fused ``run_rounds``
+engine (DESIGN.md §3.4) carries heterogeneous rounds bit-identically to the
+per-round driver.  A homogeneous schedule (the default everywhere) plans
+``steps_i = nominal`` for every client and no overrides, reproducing the
+homogeneous trajectories exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+class RoundPlan(NamedTuple):
+    """One round's resolved schedule for the ``s`` sampled clients."""
+
+    steps: jax.Array          # (s,) int32 — local steps each client completes
+    participating: jax.Array  # (s,) bool — False = straggler dropped
+    speed: jax.Array          # (s,) float32 — relative compute speed
+    bandwidth: jax.Array      # (s,) float32 — relative uplink bandwidth
+    comp_overrides: Dict[str, jax.Array]  # name -> (s,) per-client values
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientProfile:
+    """Static per-client system attributes (device arrays over n_clients).
+
+    ``speed`` and ``bandwidth`` are relative rates (1.0 = reference device).
+    ``comp_params`` maps compressor override names (``TopK.density``,
+    ``QuantQr.r`` — see ``Compressor.param_overrides``) to per-client value
+    arrays.
+    """
+
+    speed: jax.Array
+    bandwidth: jax.Array
+    comp_params: Mapping[str, jax.Array] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        speed = jnp.asarray(self.speed, jnp.float32)
+        bandwidth = jnp.asarray(self.bandwidth, jnp.float32)
+        object.__setattr__(self, "speed", speed)
+        object.__setattr__(self, "bandwidth", bandwidth)
+        if speed.ndim != 1 or bandwidth.shape != speed.shape:
+            raise ValueError(
+                f"speed/bandwidth must be matching (n,) arrays, got "
+                f"{speed.shape} / {bandwidth.shape}")
+        if not (np.all(np.asarray(speed) > 0)
+                and np.all(np.asarray(bandwidth) > 0)):
+            raise ValueError("speed and bandwidth must be positive")
+        object.__setattr__(
+            self, "comp_params",
+            {k: jnp.asarray(v) for k, v in dict(self.comp_params).items()})
+        for name, v in self.comp_params.items():
+            if v.shape != speed.shape:
+                raise ValueError(
+                    f"comp_params[{name!r}] must have shape {speed.shape}, "
+                    f"got {v.shape}")
+
+    @property
+    def n_clients(self) -> int:
+        return self.speed.shape[0]
+
+    # -- constructors ---------------------------------------------------- #
+
+    @classmethod
+    def homogeneous(cls, n_clients: int) -> "ClientProfile":
+        ones = jnp.ones((n_clients,), jnp.float32)
+        return cls(speed=ones, bandwidth=ones)
+
+    @classmethod
+    def lognormal(cls, n_clients: int, *, speed_sigma: float = 0.5,
+                  bandwidth_sigma: float = 0.0, seed: int = 0
+                  ) -> "ClientProfile":
+        """Median-1 lognormal speeds/bandwidths (heavy straggler tail)."""
+        rng = np.random.default_rng(seed)
+        speed = rng.lognormal(0.0, speed_sigma, n_clients)
+        bw = (rng.lognormal(0.0, bandwidth_sigma, n_clients)
+              if bandwidth_sigma > 0 else np.ones(n_clients))
+        return cls(speed=jnp.asarray(speed, jnp.float32),
+                   bandwidth=jnp.asarray(bw, jnp.float32))
+
+    @classmethod
+    def uniform(cls, n_clients: int, *, lo: float = 0.5, hi: float = 2.0,
+                bandwidth_lo: Optional[float] = None,
+                bandwidth_hi: Optional[float] = None, seed: int = 0
+                ) -> "ClientProfile":
+        """Speeds (and optionally bandwidths) uniform in [lo, hi]."""
+        rng = np.random.default_rng(seed)
+        speed = rng.uniform(lo, hi, n_clients)
+        if bandwidth_lo is None:
+            bw = np.ones(n_clients)
+        else:
+            bw = rng.uniform(bandwidth_lo,
+                             bandwidth_hi if bandwidth_hi is not None
+                             else bandwidth_lo, n_clients)
+        return cls(speed=jnp.asarray(speed, jnp.float32),
+                   bandwidth=jnp.asarray(bw, jnp.float32))
+
+    # -- derived profiles ------------------------------------------------ #
+
+    def with_comp_param(self, name: str, values) -> "ClientProfile":
+        params = dict(self.comp_params)
+        params[name] = jnp.asarray(values)
+        return dataclasses.replace(self, comp_params=params)
+
+    def with_density_allocation(self, base_density: float,
+                                mode: str = "uniform",
+                                floor: float = 0.01) -> "ClientProfile":
+        """Attach a per-client TopK ``density`` allocation.
+
+        ``mode="uniform"`` gives every client ``base_density``;
+        ``mode="bandwidth"`` allocates the same *total* bit budget
+        proportionally to each client's bandwidth (d_i = base·bw_i/mean bw,
+        clipped to [floor, 1]), so fast links carry denser payloads.
+        """
+        if mode == "uniform":
+            d = jnp.full((self.n_clients,), base_density, jnp.float32)
+        elif mode == "bandwidth":
+            rel = self.bandwidth / jnp.mean(self.bandwidth)
+            d = jnp.clip(base_density * rel, floor, 1.0)
+        else:
+            raise ValueError(f"unknown allocation mode {mode!r}")
+        return self.with_comp_param("density", d)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSchedule:
+    """Turns a profile + straggler policy into per-round :class:`RoundPlan`s.
+
+    ``deadline`` is a sim-time budget for the local phase: client i
+    completes ``min(nominal, floor(deadline·speed_i/step_cost))`` steps.
+    With ``drop_stragglers`` clients that complete zero steps are removed
+    from the round (no uplink payload, no control-variate update, excluded
+    from the server average); otherwise they report their (unchanged)
+    broadcast iterate.  ``step_cost``/``bit_cost`` are the sim-time of one
+    local step at speed 1 and of one uplink bit at bandwidth 1.
+    """
+
+    profile: ClientProfile
+    deadline: Optional[float] = None
+    drop_stragglers: bool = False
+    step_cost: float = 1.0
+    bit_cost: float = 0.0
+
+    def __post_init__(self):
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError("deadline must be positive")
+        if self.step_cost <= 0:
+            raise ValueError("step_cost must be positive")
+        if self.bit_cost < 0:
+            raise ValueError("bit_cost must be non-negative")
+        if self.drop_stragglers and self.deadline is None:
+            raise ValueError("drop_stragglers requires a deadline")
+
+    @classmethod
+    def homogeneous(cls, n_clients: int) -> "ClientSchedule":
+        return cls(profile=ClientProfile.homogeneous(n_clients))
+
+    @property
+    def n_clients(self) -> int:
+        return self.profile.n_clients
+
+    @property
+    def may_drop(self) -> bool:
+        return self.drop_stragglers
+
+    @property
+    def comp_override_names(self):
+        return tuple(sorted(self.profile.comp_params))
+
+    # ------------------------------------------------------------------ #
+
+    def plan(self, clients: jax.Array, nominal_steps) -> RoundPlan:
+        """Resolve the sampled ``clients`` (s,) for one round (in-graph)."""
+        speed = self.profile.speed[clients]
+        bandwidth = self.profile.bandwidth[clients]
+        nominal = jnp.asarray(nominal_steps, jnp.int32)
+        if self.deadline is None:
+            steps = jnp.broadcast_to(nominal, clients.shape)
+            participating = jnp.ones(clients.shape, bool)
+        else:
+            can_do = jnp.floor(
+                self.deadline * speed / self.step_cost).astype(jnp.int32)
+            steps = jnp.minimum(nominal, jnp.maximum(can_do, 0))
+            participating = (steps > 0 if self.drop_stragglers
+                             else jnp.ones(clients.shape, bool))
+        overrides = {k: v[clients]
+                     for k, v in self.profile.comp_params.items()}
+        return RoundPlan(steps=steps, participating=participating,
+                         speed=speed, bandwidth=bandwidth,
+                         comp_overrides=overrides)
+
+    def sim_time(self, plan: RoundPlan, client_uplink_bits) -> jax.Array:
+        """Round wall-clock in the sim cost model: wait for the slowest."""
+        compute = plan.steps.astype(jnp.float32) * self.step_cost / plan.speed
+        if self.deadline is not None and self.drop_stragglers:
+            # a dropped straggler holds the round until the deadline
+            compute = jnp.where(plan.participating, compute, self.deadline)
+        comm = (jnp.asarray(client_uplink_bits, jnp.float32) * self.bit_cost
+                / plan.bandwidth)
+        return jnp.max(compute + comm)
+
+
+# --------------------------------------------------------------------------- #
+# Shared helpers for schedule-aware round implementations
+# --------------------------------------------------------------------------- #
+
+def per_client(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Reshape a (s,) mask to broadcast over a (s, ...) stacked leaf."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
+
+
+def keep_where(mask: jax.Array, new: PyTree, old: PyTree) -> PyTree:
+    """Per-client select over stacked trees: take ``new`` where ``mask`` is
+    set, keep ``old`` elsewhere (e.g. revert non-participants' updates)."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(per_client(mask, n), n, o), new, old)
+
+
+def tree_where(cond: jax.Array, a: PyTree, b: PyTree) -> PyTree:
+    """Scalar-condition select over whole trees (e.g. 'every sampled client
+    dropped — keep the server model')."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(cond, x, y), a, b)
+
+
+def mean_over_active(values: jax.Array, active: jax.Array) -> jax.Array:
+    """Mean of per-client scalars over the active subset; 0 if none are
+    active.  With every client active this reduces to ``values.mean()``
+    bit-exactly (same sum, same divisor)."""
+    act = active.astype(values.dtype)
+    return (values * act).sum() / jnp.maximum(act.sum(), 1.0)
+
+
+def masked_mean(stacked: PyTree, weights: jax.Array) -> PyTree:
+    """Mean over the client axis weighted by ``weights`` (s,) (e.g. the
+    participation mask); a zero-weight round returns zeros, never NaN."""
+    wsum = jnp.maximum(weights.sum(), 1.0)
+    return jax.tree_util.tree_map(
+        lambda t: (t * per_client(weights, t)).sum(axis=0) / wsum, stacked)
+
+
+def vmap_compress(comp, plan: RoundPlan, stacked: PyTree, keys: jax.Array):
+    """Compress a stacked-client tree, one client per vmap lane.
+
+    Routes the plan's per-client compressor parameters (if any) into
+    ``comp.compress(**overrides)`` as traced scalars; without overrides this
+    is exactly ``jax.vmap(comp.compress)`` (the homogeneous fast path).
+    Returns ``(compressed stacked tree, BitsReport)`` whose report leaves
+    carry the client axis — ``report.total_bits`` is the (s,) per-client
+    wire cost.
+    """
+    names = tuple(sorted(plan.comp_overrides))
+    if not names:
+        return jax.vmap(comp.compress)(stacked, keys)
+    vals = [plan.comp_overrides[n] for n in names]
+    fn = lambda t, k, *ov: comp.compress(t, k, **dict(zip(names, ov)))
+    return jax.vmap(fn)(stacked, keys, *vals)
+
+
+def validate_schedule(schedule: ClientSchedule, n_clients: int,
+                      compressor=None) -> ClientSchedule:
+    """Check a schedule against an algorithm's config + compressor."""
+    if schedule.n_clients != n_clients:
+        raise ValueError(
+            f"schedule profiles {schedule.n_clients} clients but the config "
+            f"has n_clients={n_clients}")
+    if schedule.profile.comp_params:
+        if compressor is None:
+            # an algorithm that never compresses would silently drop them
+            raise ValueError(
+                f"profile comp_params {sorted(schedule.profile.comp_params)} "
+                f"given, but this algorithm has no compressor to apply them")
+        accepted = set(compressor.param_overrides())
+        unknown = set(schedule.profile.comp_params) - accepted
+        if unknown:
+            raise ValueError(
+                f"profile comp_params {sorted(unknown)} are not accepted by "
+                f"{type(compressor).__name__} (accepts {sorted(accepted)})")
+        for name, values in schedule.profile.comp_params.items():
+            # traced overrides bypass the compressor's __post_init__ range
+            # checks — validate the per-client values host-side, up front
+            compressor.validate_override(name, values)
+    return schedule

@@ -1,10 +1,12 @@
 """Round drivers shared by every FL algorithm (DESIGN.md §3.4).
 
 Algorithms define one jit-able ``_round_impl(state, key) -> (state, metrics)``
-where ``metrics`` is a flat dict of jnp scalars that **includes**
-``uplink_bits`` / ``downlink_bits`` computed in-graph from the payloads
-actually produced that round.  :class:`RoundEngine` then provides the two
-execution modes:
+where ``metrics`` is a flat dict of jnp values — scalars plus fixed-shape
+per-client vectors (``client_steps`` / ``client_uplink_bits``, DESIGN.md
+§5) — that **includes** ``uplink_bits`` / ``downlink_bits`` computed
+in-graph from the payloads actually produced that round, and ``sim_time``
+(the straggler-aware simulated round wall-clock).  :class:`RoundEngine`
+then provides the two execution modes:
 
 * ``round(state, key)`` — one jitted call per round, metrics pulled to host
   each round (interactive / debugging path);
@@ -37,10 +39,16 @@ class RoundEngine:
 
     # ------------------------------------------------------------------ #
 
-    def round(self, state, key: jax.Array) -> Tuple[Any, Dict[str, float]]:
-        """Run one communication round; returns (state, metrics dict)."""
+    def round(self, state, key: jax.Array) -> Tuple[Any, Dict[str, Any]]:
+        """Run one communication round; returns (state, metrics dict).
+
+        Scalar metrics come back as python floats; per-client vector
+        metrics (e.g. ``client_uplink_bits``, DESIGN.md §5) as numpy
+        arrays.
+        """
         state, metrics = self._round(state, key)
-        out = {k: float(v) for k, v in metrics.items()}
+        out = {k: (np.asarray(v) if getattr(v, "ndim", 0) else float(v))
+               for k, v in metrics.items()}
         self.meter.record_round(
             uplink_bits=out.get("uplink_bits", 0.0),
             downlink_bits=out.get("downlink_bits", 0.0))
@@ -70,9 +78,11 @@ class RoundEngine:
                    ) -> Tuple[Any, Dict[str, np.ndarray]]:
         """Run ``num_rounds`` communication rounds in ONE jit call.
 
-        Returns ``(state, metrics)`` with each metric a ``(num_rounds,)``
-        array (per-round values; ``uplink_bits`` / ``downlink_bits`` are the
-        exact per-round wire costs).  The caller's key-advance convention is
+        Returns ``(state, metrics)`` with each metric stacked over a leading
+        ``(num_rounds,)`` axis (per-round values; ``uplink_bits`` /
+        ``downlink_bits`` are the exact per-round wire costs, per-client
+        vector metrics stack to ``(num_rounds, s)``).  The caller's
+        key-advance convention is
         the host loop's: after this call, advance your key by
         ``num_rounds`` ``jax.random.split`` steps to stay on the same chain.
         """

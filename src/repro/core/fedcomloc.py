@@ -40,6 +40,9 @@ import jax.numpy as jnp
 
 from repro.compress import Compressor, Identity, dense_bits
 from repro.core import comm
+from repro.core.clients import (
+    ClientSchedule, keep_where, masked_mean, mean_over_active, per_client,
+    tree_where, validate_schedule, vmap_compress)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
@@ -77,6 +80,16 @@ class FedComLocConfig:
             raise ValueError(f"variant must be one of {VARIANTS}")
         if not (0 < self.p <= 1):
             raise ValueError("p must be in (0, 1]")
+        if self.n_clients <= 0:
+            raise ValueError("n_clients must be positive")
+        if not (0 < self.clients_per_round <= self.n_clients):
+            # jax.random.choice(..., replace=False) fails opaquely (or
+            # silently misbehaves) outside this range — reject up front.
+            raise ValueError(
+                f"clients_per_round must be in [1, n_clients]: got "
+                f"{self.clients_per_round} with n_clients={self.n_clients}")
+        if self.local_steps not in ("fixed", "geometric"):
+            raise ValueError('local_steps must be "fixed" or "geometric"')
         if self.error_feedback and self.variant != "com":
             raise ValueError("error_feedback applies to the Com variant")
         if not (0.0 <= self.server_momentum < 1.0):
@@ -97,6 +110,7 @@ class FedComLoc(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData,
                  config: FedComLocConfig,
                  compressor: Compressor | None = None,
+                 schedule: ClientSchedule | None = None,
                  meter_mode: str = "host"):
         self.loss_fn = loss_fn
         self.data = data
@@ -104,6 +118,10 @@ class FedComLoc(RoundEngine):
         self.comp = compressor if compressor is not None else Identity()
         if config.variant == "none" and not isinstance(self.comp, Identity):
             raise ValueError('variant="none" requires the Identity compressor')
+        self.sched = validate_schedule(
+            schedule if schedule is not None
+            else ClientSchedule.homogeneous(config.n_clients),
+            config.n_clients, self.comp)
         self.meter = comm.CommMeter(mode=meter_mode)
         self._setup_engine()
 
@@ -131,12 +149,19 @@ class FedComLoc(RoundEngine):
         return jnp.clip(g, 1, cap)
 
     def _round_impl(self, state: FedComLocState, key: jax.Array):
-        cfg = self.cfg
+        cfg, sched = self.cfg, self.sched
         k_sample, k_steps, k_local, k_up, k_down = jax.random.split(key, 5)
         s = cfg.clients_per_round
         clients = jax.random.choice(
             k_sample, cfg.n_clients, (s,), replace=False)
         num_steps = self._num_local_steps(k_steps)
+        # Client-heterogeneity layer (DESIGN.md §5): per-client step counts
+        # (straggler deadline), participation mask, compressor overrides.
+        plan = sched.plan(clients, num_steps)
+        part = plan.participating
+        partf = part.astype(jnp.float32)
+        ov_names = sched.comp_override_names
+        ov_vals = [plan.comp_overrides[n] for n in ov_names]
 
         h_s = jax.tree_util.tree_map(lambda h: h[clients], state.h)
         x0 = jax.tree_util.tree_map(
@@ -145,12 +170,13 @@ class FedComLoc(RoundEngine):
         def local_step(carry, inp):
             x_i, loss_acc = carry
             step_idx, k_step = inp
-            active = step_idx < num_steps
+            active = step_idx < plan.steps          # (s,) per-client mask
 
-            def one_client(x_c, h_c, client, kc):
+            def one_client(x_c, h_c, client, kc, *ov):
                 kb, kcomp = jax.random.split(kc)
                 xb, yb = self.data.sample_batch(kb, client, cfg.batch_size)
-                x_eval = (self.comp.apply(x_c, kcomp)
+                x_eval = (self.comp.apply(x_c, kcomp,
+                                          **dict(zip(ov_names, ov)))
                           if cfg.variant == "local" else x_c)
                 loss, g = jax.value_and_grad(self.loss_fn)(x_eval, xb, yb)
                 x_new = jax.tree_util.tree_map(
@@ -159,12 +185,12 @@ class FedComLoc(RoundEngine):
                 return x_new, loss
 
             keys = jax.random.split(k_step, s)
-            x_new, losses = jax.vmap(one_client)(x_i, h_s, clients, keys)
+            x_new, losses = jax.vmap(one_client)(x_i, h_s, clients, keys,
+                                                 *ov_vals)
             x_i = jax.tree_util.tree_map(
-                lambda new, old: jnp.where(
-                    jnp.reshape(active, (1,) * new.ndim), new, old),
+                lambda new, old: jnp.where(per_client(active, new), new, old),
                 x_new, x_i)
-            loss_acc = jnp.where(active, loss_acc + losses.mean(), loss_acc)
+            loss_acc = loss_acc + mean_over_active(losses, active)
             return (x_i, loss_acc), None
 
         cap = cfg.steps_cap
@@ -175,8 +201,10 @@ class FedComLoc(RoundEngine):
 
         # --- communication (theta_t = 1) --------------------------------- #
         # Exact wire accounting: the dense payload is 32 bits/scalar; the
-        # compressed payloads report their own cost in-graph (BitsReport).
+        # compressed payloads report their own cost in-graph (BitsReport),
+        # per client — a dropped straggler transmits nothing.
         dense = dense_bits(state.x)
+        client_up = jnp.full((s,), dense, jnp.float32)
         up_bits = jnp.asarray(s * dense)
         down_bits = jnp.asarray(s * dense)
         e_new = state.e
@@ -193,21 +221,33 @@ class FedComLoc(RoundEngine):
                 innov = jax.tree_util.tree_map(
                     lambda xh, x0_, e: xh - x0_[None] + e,
                     x_hat, state.x, e_s)
-                sent, up_rep = jax.vmap(self.comp.compress)(innov, up_keys)
+                sent, up_rep = vmap_compress(self.comp, plan, innov, up_keys)
                 # leaky memory: undecayed EF diverges inside Scaffnew (the
                 # residual integrates against the control variates — see the
                 # EXPERIMENTS.md §Beyond decay study); 0.7 is the sweet spot.
                 e_s_new = jax.tree_util.tree_map(
                     lambda c, snt: cfg.ef_decay * (c - snt), innov, sent)
+                if sched.may_drop:    # a dropped client never transmitted
+                    e_s_new = keep_where(part, e_s_new, e_s)
                 e_new = jax.tree_util.tree_map(
                     lambda all_, upd: all_.at[clients].set(upd),
                     state.e, e_s_new)
                 x_hat = jax.tree_util.tree_map(
                     lambda x0_, snt: x0_[None] + snt, state.x, sent)
             else:
-                x_hat, up_rep = jax.vmap(self.comp.compress)(x_hat, up_keys)
-            up_bits = up_rep.reduce_sum().total_bits
-        x_bar = jax.tree_util.tree_map(lambda t: t.mean(axis=0), x_hat)
+                x_hat, up_rep = vmap_compress(self.comp, plan, x_hat,
+                                              up_keys)
+            client_up = up_rep.total_bits        # (s,) — leaves carry vmap axis
+            up_bits = None                       # recomputed from client_up
+        client_up = client_up * partf
+        if up_bits is None or sched.may_drop:
+            up_bits = client_up.sum()
+        if sched.may_drop:
+            # if every sampled client dropped, the server keeps its model
+            x_bar = tree_where(partf.sum() > 0,
+                               masked_mean(x_hat, partf), state.x)
+        else:
+            x_bar = jax.tree_util.tree_map(lambda t: t.mean(axis=0), x_hat)
         if cfg.variant == "global":
             x_bar, down_rep = self.comp.compress(x_bar, k_down)
             down_bits = down_rep.total_bits * s
@@ -218,6 +258,8 @@ class FedComLoc(RoundEngine):
         h_s_new = jax.tree_util.tree_map(
             lambda h, xh, xb_: h + (cfg.p / cfg.gamma) * (xb_[None] - xh),
             h_s, x_hat, x_bar)
+        if sched.may_drop:   # a dropped client keeps its control variate
+            h_s_new = keep_where(part, h_s_new, h_s)
         h_new = jax.tree_util.tree_map(
             lambda h_all, h_upd: h_all.at[clients].set(h_upd),
             state.h, h_s_new)
@@ -234,10 +276,13 @@ class FedComLoc(RoundEngine):
                 lambda x0_, m: x0_ + m, state.x, mom_new)
 
         metrics = {
-            "train_loss": loss_sum / jnp.maximum(num_steps, 1),
+            "train_loss": loss_sum / jnp.maximum(plan.steps.max(), 1),
             "num_local_steps": num_steps,
             "uplink_bits": up_bits,
             "downlink_bits": down_bits,
+            "client_steps": plan.steps,           # (s,) per-client schedule
+            "client_uplink_bits": client_up,      # (s,) exact per-client wire
+            "sim_time": sched.sim_time(plan, client_up),
         }
         return (FedComLocState(x=x_bar, h=h_new, round=state.round + 1,
                                e=e_new, mom=mom_new), metrics)

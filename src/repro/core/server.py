@@ -10,6 +10,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -21,15 +22,21 @@ class History:
     test_acc: list = dataclasses.field(default_factory=list)
     test_loss: list = dataclasses.field(default_factory=list)
     uplink_bits: list = dataclasses.field(default_factory=list)
+    downlink_bits: list = dataclasses.field(default_factory=list)
     total_bits: list = dataclasses.field(default_factory=list)
     wall_s: list = dataclasses.field(default_factory=list)
+    sim_time: list = dataclasses.field(default_factory=list)  # cumulative
+    final_params: Optional[Any] = None  # set by run_federated on completion
 
     @property
     def best_acc(self) -> float:
         return max(self.test_acc) if self.test_acc else float("nan")
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        # json-friendly view: the metric curves, without the params pytree
+        # (not asdict(), which would deep-copy the params just to drop them)
+        return {f.name: list(getattr(self, f.name))
+                for f in dataclasses.fields(self) if f.name != "final_params"}
 
 
 def make_eval_fn(apply_fn: Callable, x_test: jax.Array, y_test: jax.Array,
@@ -83,6 +90,7 @@ def run_federated(
     state = algorithm.init(params0)
     hist = History()
     t0 = time.time()
+    sim_t = 0.0          # cumulative straggler-aware simulated time (§5)
     fused = fuse and hasattr(algorithm, "run_rounds")
 
     def is_eval_round(r: int) -> bool:  # r = 0-based index just completed
@@ -99,11 +107,16 @@ def run_federated(
             state, chunk = algorithm.run_rounds(state, key, n)
             for _ in range(n):          # stay on the host loop's key chain
                 key, _ = jax.random.split(key)
-            metrics = {k: float(v[-1]) for k, v in chunk.items()}
+            # last round's values; per-client vectors keep their axis
+            metrics = {k: (v[-1] if v.ndim > 1 else float(v[-1]))
+                       for k, v in chunk.items()}
+            if "sim_time" in chunk:
+                sim_t += float(np.sum(chunk["sim_time"]))
         else:
             for _ in range(n):
                 key, sub = jax.random.split(key)
                 state, metrics = algorithm.round(state, sub)
+                sim_t += metrics.get("sim_time", 0.0)
         r = stop + 1
         if is_eval_round(stop):
             tl, ta = eval_fn(state.x)
@@ -112,12 +125,14 @@ def run_federated(
             hist.test_loss.append(float(tl))
             hist.test_acc.append(float(ta))
             hist.uplink_bits.append(algorithm.meter.uplink_bits)
+            hist.downlink_bits.append(algorithm.meter.downlink_bits)
             hist.total_bits.append(algorithm.meter.total_bits)
             hist.wall_s.append(time.time() - t0)
+            hist.sim_time.append(sim_t)
             if log_every and (stop % log_every == 0 or stop == num_rounds - 1):
                 print(f"{log_prefix}round {stop + 1:5d}  "
                       f"loss {metrics.get('train_loss', float('nan')):.4f}  "
                       f"acc {float(ta):.4f}  "
                       f"Mbits {algorithm.meter.total_bits / 1e6:.1f}")
-    hist.final_params = state.x  # type: ignore[attr-defined]
+    hist.final_params = state.x
     return hist

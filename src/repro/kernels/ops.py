@@ -19,6 +19,7 @@ from __future__ import annotations
 from typing import Literal, Optional
 
 import jax
+import numpy as np
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import quantize as _quant
@@ -48,16 +49,29 @@ def _resolve() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def topk_mask(x: jax.Array, k: int) -> jax.Array:
+def _is_traced(v) -> bool:
+    """True for jax arrays / tracers (per-client parameters under vmap);
+    host scalars — python or numpy — stay on the static kernel path."""
+    return not isinstance(v, (int, float, np.integer, np.floating))
+
+
+def topk_mask(x: jax.Array, k) -> jax.Array:
     mode = _resolve()
+    if _is_traced(k):
+        # Traced k (per-client density): the static-k radix-select kernel
+        # cannot specialise, so every backend takes the sort-based dynamic
+        # path (identical threshold semantics, see ref.topk_mask_dynamic).
+        return _ref.topk_mask_dynamic(x, k)
     if mode == "ref":
         return _ref.topk_mask(x, k)
     return _topk.topk_mask(x, int(k), interpret=(mode == "interpret"))
 
 
-def quantize_qr(x: jax.Array, r: int, key: jax.Array) -> jax.Array:
+def quantize_qr(x: jax.Array, r, key: jax.Array) -> jax.Array:
     mode = _resolve()
-    if mode == "ref":
+    if mode == "ref" or _is_traced(r):
+        # The jnp oracle handles traced r (2**r stays in-graph); the Pallas
+        # kernel needs a static level count.
         return _ref.quantize_qr(x, r, key)
     return _quant.quantize_qr(x, int(r), key, interpret=(mode == "interpret"))
 

@@ -33,6 +33,24 @@ def topk_mask(x: jax.Array, k: int) -> jax.Array:
     return jnp.where(mag >= kth, x, jnp.zeros_like(x))
 
 
+def topk_mask_dynamic(x: jax.Array, k: jax.Array) -> jax.Array:
+    """``topk_mask`` with a *traced* k (per-client densities under ``vmap``).
+
+    Same threshold semantics as :func:`topk_mask` — the k-th largest
+    magnitude is found by a full descending sort plus a dynamic gather, so
+    the output shape stays static while k varies per trace.  At k >= size
+    every entry is kept (dense payload).
+    """
+    if x.ndim != 1:
+        raise ValueError(
+            f"topk_mask_dynamic expects 1-D input, got shape {x.shape}")
+    mag = jnp.abs(x)
+    desc = jnp.sort(mag)[::-1]
+    kc = jnp.clip(jnp.asarray(k, jnp.int32), 1, x.size)
+    kth = desc[kc - 1]
+    return jnp.where(mag >= kth, x, jnp.zeros_like(x))
+
+
 # --------------------------------------------------------------------------- #
 # QSGD binary quantization (paper Definition 3.2)
 # --------------------------------------------------------------------------- #

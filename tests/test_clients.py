@@ -1,0 +1,444 @@
+"""Client-heterogeneity layer (DESIGN.md §5).
+
+Contracts:
+
+* with a homogeneous profile the schedule-aware round implementations
+  reproduce the schedule-less (today's) trajectories exactly;
+* heterogeneous per-client step counts + per-client TopK densities run
+  under both drivers — ``round()`` and the fused ``run_rounds()`` — with
+  bit-identical trajectories, and the per-client uplink bits match the
+  §3.2 formulas (nnz from each client's actual mask), for both
+  ``impl="select"`` and ``impl="quantile"``;
+* straggler deadline/dropout semantics: dropped clients transmit nothing,
+  keep their control variates, and are excluded from the server average;
+* geometric local-step sampling: truncation at ``steps_cap``, mean ≈ 1/p
+  for small p, and fixed == geometric when the draw equals the cap;
+* config/schedule validation fails fast.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import Compose, QuantQr, TopK
+from repro.core import fed_data, server
+from repro.core.baselines import FedAvg, FedConfig, FedDyn, Scaffold
+from repro.core.clients import ClientProfile, ClientSchedule
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def quadratic_setup(n_clients=6, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n_clients, d))
+    b = rng.normal(size=(n_clients,))
+    reps = 8
+    x = np.repeat(A, reps, axis=0).astype(np.float32)
+    y = np.repeat(b, reps).astype(np.float32)
+    parts = [np.arange(i * reps, (i + 1) * reps) for i in range(n_clients)]
+    return fed_data.from_numpy_partition(x, y, parts)
+
+
+def sq_loss(params, xb, yb):
+    return 0.5 * jnp.mean((xb @ params["w"] - yb) ** 2)
+
+
+def drive(alg, d, rounds, seed=0, w0=None):
+    state = alg.init({"w": jnp.zeros((d,), jnp.float32) if w0 is None
+                      else w0})
+    key = jax.random.PRNGKey(seed)
+    ms = []
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        state, m = alg.round(state, sub)
+        ms.append(m)
+    return state, ms
+
+
+# --------------------------------------------------------------------------- #
+# 1. Homogeneous profile == today's schedule-less behaviour, exactly
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("variant,comp", [
+    ("com", TopK(density=0.4)),
+    ("local", TopK(density=0.5)),
+    ("global", QuantQr(r=6)),
+])
+def test_homogeneous_schedule_is_identity(variant, comp):
+    n, d = 6, 8
+    data = quadratic_setup(n, d)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=3, batch_size=4, variant=variant)
+    base = FedComLoc(sq_loss, data, cfg, comp)
+    homog = FedComLoc(sq_loss, data, cfg, comp,
+                      schedule=ClientSchedule.homogeneous(n))
+    sa, ma = drive(base, d, 6)
+    sb, mb = drive(homog, d, 6)
+    np.testing.assert_array_equal(np.asarray(sa.x["w"]), np.asarray(sb.x["w"]))
+    np.testing.assert_array_equal(np.asarray(sa.h["w"]), np.asarray(sb.h["w"]))
+    for a, b in zip(ma, mb):
+        assert a["train_loss"] == b["train_loss"]
+        assert a["uplink_bits"] == b["uplink_bits"]
+        assert a["downlink_bits"] == b["downlink_bits"]
+
+
+# --------------------------------------------------------------------------- #
+# 2. Heterogeneous rounds: both drivers, bit-identical, exact per-client bits
+# --------------------------------------------------------------------------- #
+
+def het_schedule(n, *, drop=False, impl_density=0.3):
+    profile = ClientProfile(
+        speed=jnp.asarray(np.linspace(0.3, 2.1, n), jnp.float32),
+        bandwidth=jnp.asarray(np.linspace(2.0, 0.5, n), jnp.float32),
+    ).with_density_allocation(impl_density, mode="bandwidth")
+    return ClientSchedule(profile=profile, deadline=3.0,
+                          drop_stragglers=drop, bit_cost=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["select", "quantile"])
+@pytest.mark.parametrize("drop", [False, True])
+def test_het_round_matches_run_rounds(impl, drop):
+    n, d, R = 6, 8, 5
+    data = quadratic_setup(n, d)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=4, batch_size=4, variant="com")
+    mk = lambda: FedComLoc(sq_loss, data, cfg, TopK(density=0.3, impl=impl),
+                           schedule=het_schedule(n, drop=drop))
+    alg_a, alg_b = mk(), mk()
+    sa, per = drive(alg_a, d, R, seed=42)
+    sb = alg_b.init({"w": jnp.zeros((d,), jnp.float32)})
+    sb, fused = alg_b.run_rounds(sb, jax.random.PRNGKey(42), R)
+
+    np.testing.assert_array_equal(np.asarray(sa.x["w"]), np.asarray(sb.x["w"]))
+    np.testing.assert_array_equal(np.asarray(sa.h["w"]), np.asarray(sb.h["w"]))
+    for i, m in enumerate(per):
+        assert m["uplink_bits"] == float(fused["uplink_bits"][i])
+        assert m["sim_time"] == float(fused["sim_time"][i])
+        np.testing.assert_array_equal(np.asarray(m["client_steps"]),
+                                      fused["client_steps"][i])
+        np.testing.assert_array_equal(np.asarray(m["client_uplink_bits"]),
+                                      fused["client_uplink_bits"][i])
+    assert alg_a.meter.snapshot() == alg_b.meter.snapshot()
+    # per-client bits sum to the round total
+    np.testing.assert_allclose(fused["client_uplink_bits"].sum(axis=1),
+                               fused["uplink_bits"])
+
+
+@pytest.mark.parametrize("impl", ["select", "quantile"])
+def test_per_client_bits_match_formulas(impl):
+    """Full participation: sorted per-client uplink bits == the §3.2 TopK
+    formula 64·nnz with nnz = each client's k_i (no ties for generic float
+    data), and per-client steps == the deadline truncation."""
+    n, d = 6, 8
+    data = quadratic_setup(n, d)
+    sched = het_schedule(n)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=n, batch_size=4, variant="com")
+    alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.3, impl=impl),
+                    schedule=sched)
+    # nonzero init: a zero-step straggler retransmits the broadcast model,
+    # and nnz-from-mask only equals k for generically nonzero payloads
+    _, ms = drive(alg, d, 3,
+                  w0=jax.random.normal(jax.random.PRNGKey(7), (d,)))
+    dens = np.asarray(sched.profile.comp_params["density"])
+    exp_k = np.clip(np.round(dens * d), 1, d)
+    exp_steps = np.minimum(cfg.steps_cap,
+                           np.floor(3.0 * np.asarray(sched.profile.speed)))
+    for m in ms:
+        np.testing.assert_array_equal(np.sort(m["client_uplink_bits"]),
+                                      np.sort(64.0 * exp_k))
+        np.testing.assert_array_equal(np.sort(m["client_steps"]),
+                                      np.sort(exp_steps))
+
+
+def test_per_client_quant_bits():
+    """Per-client Q_r bit widths: (1+r_i)·d + 32 per tensor, exactly."""
+    n, d = 5, 16
+    data = quadratic_setup(n, d)
+    rs = np.asarray([2, 4, 6, 8, 3])
+    profile = ClientProfile.homogeneous(n).with_comp_param(
+        "r", jnp.asarray(rs, jnp.int32))
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=n, batch_size=4, variant="com")
+    alg = FedComLoc(sq_loss, data, cfg, QuantQr(r=8),
+                    schedule=ClientSchedule(profile=profile))
+    _, ms = drive(alg, d, 2)
+    expected = (1 + rs) * d + 32
+    for m in ms:
+        np.testing.assert_array_equal(np.sort(m["client_uplink_bits"]),
+                                      np.sort(expected.astype(np.float64)))
+
+
+def test_local_variant_accepts_per_client_density():
+    n, d = 5, 8
+    data = quadratic_setup(n, d)
+    profile = ClientProfile.homogeneous(n).with_density_allocation(0.5)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=3, batch_size=4, variant="local")
+    alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.5),
+                    schedule=ClientSchedule(profile=profile))
+    state, ms = drive(alg, d, 3)
+    assert np.isfinite(ms[-1]["train_loss"])
+
+
+# --------------------------------------------------------------------------- #
+# 3. Straggler dropout semantics
+# --------------------------------------------------------------------------- #
+
+def test_dropped_straggler_transmits_nothing_and_keeps_state():
+    n, d = 5, 8
+    data = quadratic_setup(n, d)
+    speed = np.ones(n, np.float32)
+    speed[0] = 1e-3                       # client 0 can't finish one step
+    sched = ClientSchedule(
+        profile=ClientProfile(speed=jnp.asarray(speed),
+                              bandwidth=jnp.ones((n,), jnp.float32)),
+        deadline=10.0, drop_stragglers=True)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=n, batch_size=4, variant="com")
+    alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.5), schedule=sched)
+    state = alg.init({"w": jnp.zeros((d,), jnp.float32)})
+    state, m = alg.round(state, jax.random.PRNGKey(0))
+    steps = np.asarray(m["client_steps"])
+    bits = np.asarray(m["client_uplink_bits"])
+    assert (steps == 0).sum() == 1        # exactly the slow client dropped
+    assert bits[steps == 0] == 0.0        # no uplink payload
+    assert m["uplink_bits"] == bits.sum()
+    # the dropped client's control variate is untouched (h starts at 0;
+    # participants moved theirs)
+    h = np.asarray(state.h["w"])          # rows follow client ids
+    assert np.all(h[0] == 0.0)
+    assert np.all(np.any(h[1:] != 0.0, axis=1))
+    # a dropped straggler holds the round until the deadline
+    assert m["sim_time"] == pytest.approx(10.0)
+
+
+def test_all_dropped_round_keeps_server_model():
+    """A round where every sampled client misses the deadline must leave
+    the server model untouched (not zero it out)."""
+    n, d = 4, 6
+    data = quadratic_setup(n, d)
+    sched = ClientSchedule(
+        profile=ClientProfile(speed=jnp.full((n,), 1e-3),
+                              bandwidth=jnp.ones((n,), jnp.float32)),
+        deadline=1.0, drop_stragglers=True)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=2, batch_size=4, variant="com")
+    alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.5), schedule=sched)
+    w0 = jax.random.normal(jax.random.PRNGKey(11), (d,))
+    state, ms = drive(alg, d, 2, w0=w0)
+    np.testing.assert_array_equal(np.asarray(state.x["w"]), np.asarray(w0))
+    np.testing.assert_array_equal(np.asarray(state.h["w"]), 0.0)
+    assert all(m["uplink_bits"] == 0.0 for m in ms)
+
+    for cls in (FedAvg, FedDyn):
+        bcfg = FedConfig(gamma=0.05, local_steps=5, n_clients=n,
+                         clients_per_round=2, batch_size=4)
+        balg = cls(sq_loss, data, bcfg, schedule=sched)
+        bstate, _ = drive(balg, d, 2, w0=w0)
+        np.testing.assert_array_equal(np.asarray(bstate.x["w"]),
+                                      np.asarray(w0))
+
+
+def test_dropout_requires_deadline():
+    with pytest.raises(ValueError):
+        ClientSchedule(profile=ClientProfile.homogeneous(4),
+                       drop_stragglers=True)
+
+
+# --------------------------------------------------------------------------- #
+# 4. Baselines consume schedules
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("cls", [FedAvg, Scaffold, FedDyn])
+def test_baselines_run_heterogeneous(cls):
+    n, d = 6, 8
+    data = quadratic_setup(n, d)
+    cfg = FedConfig(gamma=0.05, local_steps=5, n_clients=n,
+                    clients_per_round=4, batch_size=4)
+    sched = ClientSchedule(
+        profile=ClientProfile.uniform(n, lo=0.3, hi=2.0, seed=1),
+        deadline=4.0, drop_stragglers=True)
+    alg = cls(sq_loss, data, cfg, schedule=sched)
+    state, ms = drive(alg, d, 8)
+    losses = [m["train_loss"] for m in ms]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+    assert all(0 <= m["sim_time"] <= 4.0 + 1e-6 for m in ms)
+
+
+def test_scaffold_zero_step_client_keeps_control_variate():
+    """Deadline without dropping: a client that completes zero steps did no
+    work, so its Scaffold control variate must not shift by -c."""
+    n, d = 5, 6
+    data = quadratic_setup(n, d)
+    speed = np.ones(n, np.float32)
+    speed[0] = 1e-3
+    sched = ClientSchedule(
+        profile=ClientProfile(speed=jnp.asarray(speed),
+                              bandwidth=jnp.ones((n,), jnp.float32)),
+        deadline=2.0, drop_stragglers=False)
+    cfg = FedConfig(gamma=0.05, local_steps=5, n_clients=n,
+                    clients_per_round=n, batch_size=4)
+    alg = Scaffold(sq_loss, data, cfg, schedule=sched)
+    state, _ = drive(alg, d, 6)
+    ci = np.asarray(state.ci["w"])
+    assert np.all(ci[0] == 0.0), ci[0]          # never did a step
+    assert np.any(np.asarray(state.c["w"]) != 0.0)
+
+
+def test_fedavg_het_round_matches_run_rounds():
+    n, d, R = 6, 8, 5
+    data = quadratic_setup(n, d)
+    cfg = FedConfig(gamma=0.05, local_steps=5, n_clients=n,
+                    clients_per_round=3, batch_size=4)
+    mk = lambda: FedAvg(
+        sq_loss, data, cfg, TopK(density=0.4),
+        schedule=het_schedule(n, drop=True))
+    a, b = mk(), mk()
+    sa, _ = drive(a, d, R, seed=9)
+    sb = b.init({"w": jnp.zeros((d,), jnp.float32)})
+    sb, _ = b.run_rounds(sb, jax.random.PRNGKey(9), R)
+    np.testing.assert_array_equal(np.asarray(sa.x["w"]), np.asarray(sb.x["w"]))
+    assert a.meter.snapshot() == b.meter.snapshot()
+
+
+# --------------------------------------------------------------------------- #
+# 5. Geometric local-step sampling (satellite)
+# --------------------------------------------------------------------------- #
+
+def make_geom_alg(p, n=4, d=3, **cfg_kw):
+    data = quadratic_setup(n, d)
+    cfg = FedComLocConfig(gamma=0.05, p=p, n_clients=n, clients_per_round=2,
+                          batch_size=4, variant="none",
+                          local_steps="geometric", **cfg_kw)
+    from repro.compress import Identity
+    return FedComLoc(sq_loss, data, cfg, Identity()), d
+
+
+def test_geometric_truncates_at_cap():
+    alg, _ = make_geom_alg(p=0.05, max_local_steps=7)
+    keys = jax.random.split(jax.random.PRNGKey(0), 400)
+    draws = np.asarray(jax.vmap(alg._num_local_steps)(keys))
+    assert draws.min() >= 1
+    assert draws.max() == 7               # p=0.05 ⇒ the cap binds often
+
+
+def test_geometric_mean_close_to_1_over_p():
+    p = 0.05
+    alg, _ = make_geom_alg(p=p)            # default cap 4/p = 80
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    draws = np.asarray(jax.vmap(alg._num_local_steps)(keys))
+    # E[min(Geom(p), 80)] = (1 - (1-p)^80)/p ≈ 19.67 for p = 0.05
+    expected = (1 - (1 - p) ** 80) / p
+    assert abs(draws.mean() - expected) < 1.0, (draws.mean(), expected)
+    assert draws.max() <= alg.cfg.steps_cap
+
+
+def test_fixed_equals_geometric_when_draw_equals_cap():
+    """With cap = 1 every geometric draw is clipped to the cap, so the two
+    step modes must produce identical trajectories."""
+    n, d = 4, 3
+    data = quadratic_setup(n, d)
+    runs = {}
+    for mode in ("fixed", "geometric"):
+        cfg = FedComLocConfig(gamma=0.05, p=0.3, n_clients=n,
+                              clients_per_round=2, batch_size=4,
+                              variant="none", local_steps=mode,
+                              max_local_steps=1)
+        from repro.compress import Identity
+        alg = FedComLoc(sq_loss, data, cfg, Identity())
+        state, ms = drive(alg, d, 6, seed=3)
+        runs[mode] = (np.asarray(state.x["w"]),
+                      [m["num_local_steps"] for m in ms])
+    assert runs["fixed"][1] == runs["geometric"][1] == [1.0] * 6
+    np.testing.assert_array_equal(runs["fixed"][0], runs["geometric"][0])
+
+
+# --------------------------------------------------------------------------- #
+# 6. Validation + History satellites
+# --------------------------------------------------------------------------- #
+
+def test_config_rejects_bad_client_counts():
+    with pytest.raises(ValueError):
+        FedComLocConfig(n_clients=3, clients_per_round=4)
+    with pytest.raises(ValueError):
+        FedComLocConfig(n_clients=3, clients_per_round=0)
+    with pytest.raises(ValueError):
+        FedComLocConfig(n_clients=0, clients_per_round=0)
+    with pytest.raises(ValueError):
+        FedConfig(n_clients=3, clients_per_round=4)
+    with pytest.raises(ValueError):
+        FedConfig(local_steps=0)
+
+
+def test_schedule_validation():
+    n, d = 4, 3
+    data = quadratic_setup(n, d)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=2, batch_size=4, variant="com")
+    with pytest.raises(ValueError):   # profile size mismatch
+        FedComLoc(sq_loss, data, cfg, TopK(density=0.5),
+                  schedule=ClientSchedule.homogeneous(n + 1))
+    with pytest.raises(ValueError):   # density override vs quantizer
+        FedComLoc(sq_loss, data, cfg, QuantQr(r=4),
+                  schedule=ClientSchedule(
+                      profile=ClientProfile.homogeneous(n)
+                      .with_density_allocation(0.5)))
+    # Compose accepts both density and r overrides
+    FedComLoc(sq_loss, data, cfg, Compose(TopK(0.5), QuantQr(4)),
+              schedule=ClientSchedule(
+                  profile=ClientProfile.homogeneous(n)
+                  .with_density_allocation(0.5)
+                  .with_comp_param("r", jnp.full((n,), 4, jnp.int32))))
+
+
+def test_out_of_range_comp_params_rejected():
+    """Traced overrides bypass the compressors' __post_init__ checks, so
+    per-client values are range-validated at schedule-build time."""
+    n, d = 4, 3
+    data = quadratic_setup(n, d)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=2, batch_size=4, variant="com")
+    bad_density = ClientSchedule(profile=ClientProfile.homogeneous(n)
+                                 .with_comp_param("density", jnp.zeros((n,))))
+    with pytest.raises(ValueError):
+        FedComLoc(sq_loss, data, cfg, TopK(density=0.5),
+                  schedule=bad_density)
+    bad_r = ClientSchedule(profile=ClientProfile.homogeneous(n)
+                           .with_comp_param("r", jnp.full((n,), -1,
+                                                          jnp.int32)))
+    with pytest.raises(ValueError):
+        FedComLoc(sq_loss, data, cfg, QuantQr(r=4), schedule=bad_r)
+    # an algorithm with no compressor can't consume comp_params at all
+    with pytest.raises(ValueError):
+        Scaffold(sq_loss, data,
+                 FedConfig(gamma=0.05, local_steps=5, n_clients=n,
+                           clients_per_round=2, batch_size=4),
+                 schedule=ClientSchedule(
+                     profile=ClientProfile.homogeneous(n)
+                     .with_density_allocation(0.5)))
+
+
+def test_history_records_downlink_and_final_params():
+    assert "final_params" in {f.name for f in dataclasses.fields(server.History)}
+    n, d = 4, 3
+    data = quadratic_setup(n, d)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=2, batch_size=4, variant="com")
+    alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.5))
+    hist = server.run_federated(
+        alg, {"w": jnp.zeros((d,), jnp.float32)}, num_rounds=6,
+        key=jax.random.PRNGKey(0),
+        eval_fn=lambda p: (jnp.zeros(()), jnp.zeros(())), eval_every=3)
+    assert hist.downlink_bits and hist.downlink_bits[-1] > 0
+    assert hist.downlink_bits[-1] == alg.meter.downlink_bits
+    assert hist.sim_time and hist.sim_time[-1] > 0
+    assert hist.final_params is not None
+    d_ = hist.as_dict()
+    assert "downlink_bits" in d_ and "sim_time" in d_
+    assert "final_params" not in d_   # json-friendly view
