@@ -6,7 +6,10 @@
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = wall-time per FL
 round; derived = best test accuracy or the benchmark's headline metric) and
-writes the full rows to benchmarks/artifacts/results.json.
+writes the rows to benchmarks/artifacts/.  Only a *full* default run (no
+--fast / --only / --no-fuse) overwrites the committed ``results.json``;
+anything partial goes to ``results.partial.json`` so the committed full-run
+artifact survives spot checks (EXPERIMENTS.md §Artifacts).
 """
 
 from __future__ import annotations
@@ -30,6 +33,7 @@ MODULES = [
     "fig16_double",
     "beyond_ef",
     "het_system",
+    "client_scaling",
     "roofline",
 ]
 
@@ -69,8 +73,11 @@ def main() -> None:
             all_rows.append(r)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
 
+    full_run = not (args.fast or args.only or args.no_fuse)
+    out = ART / ("results.json" if full_run else "results.partial.json")
     ART.mkdir(parents=True, exist_ok=True)
-    (ART / "results.json").write_text(json.dumps(all_rows, indent=2))
+    out.write_text(json.dumps(all_rows, indent=2))
+    print(f"# wrote {out.relative_to(ART.parent.parent)}", flush=True)
     if failed:  # nonzero exit so the CI smoke step catches rotted modules
         raise SystemExit(f"benchmark module(s) failed: {', '.join(failed)}")
 

@@ -6,6 +6,9 @@ import importlib
 
 from repro.configs.base import ALL_SHAPES, SHAPES, ArchSpec, InputShape, reduced
 
+__all__ = ["ALL_SHAPES", "SHAPES", "ArchSpec", "InputShape", "reduced",
+           "ARCH_IDS", "get_spec", "all_specs"]
+
 _MODULES = {
     "recurrentgemma-2b": "recurrentgemma_2b",
     "rwkv6-3b": "rwkv6_3b",

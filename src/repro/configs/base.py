@@ -9,13 +9,11 @@ smoke tests (<= 2 layers, d_model <= 512, <= 4 experts).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax.numpy as jnp
 
 from repro.models.encdec import EncDecConfig
-from repro.models.moe import MoEConfig
-from repro.models.transformer import ModelConfig
 
 ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 

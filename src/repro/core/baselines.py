@@ -25,8 +25,9 @@ import jax.numpy as jnp
 from repro.compress import Compressor, Identity, TopK, dense_bits
 from repro.core import comm
 from repro.core.clients import (
-    ClientSchedule, keep_where, masked_mean, mean_over_active, per_client,
-    tree_where, validate_schedule, vmap_compress)
+    NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
+    mean_over_active, per_client, tree_where, validate_schedule,
+    vmap_compress)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
@@ -61,17 +62,23 @@ def _tmap(f, *trees):
 def _local_sgd(loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
                x0_stacked: PyTree, clients: jax.Array, key: jax.Array,
                grad_adjust: Callable[[PyTree, int], PyTree] | None = None,
-               steps: jax.Array | None = None):
+               steps: jax.Array | None = None,
+               ctx: ClientAxisCtx = NULL_CTX):
     """Run minibatch SGD on each sampled client.
 
     ``steps`` is an optional (s,) per-client step count (DESIGN.md §5): the
     scan always runs ``cfg.local_steps`` iterations and clients past their
     count carry through unchanged, so heterogeneous schedules stay inside
     one fused graph.  ``grad_adjust(g, client_slot, x_c)`` adjusts each
-    client's gradient (vmapped).  Returns (x_final stacked, mean train
-    loss averaged over the steps clients actually ran).
+    client's gradient (vmapped).  Under a sharded ``ctx`` (DESIGN.md §6)
+    ``x0_stacked`` / ``clients`` / ``steps`` are this shard's slice and the
+    per-step loss means psum across shards.  Returns (x_final stacked,
+    summed per-step mean loss) — the caller divides by the step denominator
+    (``cfg.local_steps``, or the *full* plan's ``steps.max()`` under a
+    deadline, which a shard-local slice cannot know).
     """
     s = cfg.clients_per_round
+    s_loc = ctx.local_count(s)
 
     def step(carry, inp):
         x_i, loss_acc = carry
@@ -85,23 +92,23 @@ def _local_sgd(loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
             x_new = _tmap(lambda xc, gc: xc - cfg.gamma * gc, x_c, g)
             return x_new, loss
 
-        keys = jax.random.split(k_step, s)
+        # full (s,) key chain then slice: per-client keys are device-count
+        # invariant
+        keys = ctx.shard(jax.random.split(k_step, s))
         x_new, losses = jax.vmap(one_client)(
-            x_i, clients, keys, jnp.arange(s))
+            x_i, clients, keys, jnp.arange(s_loc))
         if steps is None:
-            return (x_new, loss_acc + losses.mean()), None
+            return (x_new, loss_acc + ctx.mean_clients(losses)), None
         active = step_idx < steps
         x_i = keep_where(active, x_new, x_i)
-        loss_acc = loss_acc + mean_over_active(losses, active)
+        loss_acc = loss_acc + mean_over_active(losses, active, ctx)
         return (x_i, loss_acc), None
 
     step_keys = jax.random.split(key, cfg.local_steps)
     (x_fin, loss_sum), _ = jax.lax.scan(
         step, (x0_stacked, jnp.zeros(())),
         (jnp.arange(cfg.local_steps), step_keys))
-    denom = (cfg.local_steps if steps is None
-             else jnp.maximum(steps.max(), 1))
-    return x_fin, loss_sum / denom
+    return x_fin, loss_sum
 
 
 def _broadcast(x: PyTree, s: int) -> PyTree:
@@ -134,27 +141,37 @@ class FedAvg(RoundEngine):
     def init(self, params0: PyTree) -> FedAvgState:
         return FedAvgState(x=params0, round=jnp.zeros((), jnp.int32))
 
-    def _round_impl(self, state: FedAvgState, key: jax.Array):
+    def _round_impl(self, state: FedAvgState, key: jax.Array,
+                    ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched
         s = cfg.clients_per_round
+        s_loc = ctx.local_count(s)
         k_sample, k_local, k_comp = jax.random.split(key, 3)
-        clients = jax.random.choice(k_sample, cfg.n_clients, (s,),
-                                    replace=False)
-        plan = sched.plan(clients, cfg.local_steps)
-        partf = plan.participating.astype(jnp.float32)
-        x0 = _broadcast(state.x, s)
-        x_fin, loss = _local_sgd(
+        clients_full = jax.random.choice(k_sample, cfg.n_clients, (s,),
+                                         replace=False)
+        plan = sched.plan(clients_full, cfg.local_steps)
+        plan_l = ctx.shard_tree(plan)
+        clients = ctx.shard(clients_full)
+        partf = plan_l.participating.astype(jnp.float32)
+        partf_full = plan.participating.astype(jnp.float32)
+        het = sched.deadline is not None
+        x0 = _broadcast(state.x, s_loc)
+        x_fin, loss_sum = _local_sgd(
             self.loss_fn, self.data, cfg, x0, clients, k_local,
-            steps=plan.steps if sched.deadline is not None else None)
-        comp_keys = jax.random.split(k_comp, s)
-        x_fin, up_rep = vmap_compress(self.comp, plan, x_fin, comp_keys)
-        client_up = up_rep.total_bits * partf
+            steps=plan_l.steps if het else None, ctx=ctx)
+        loss = loss_sum / (jnp.maximum(plan.steps.max(), 1) if het
+                           else cfg.local_steps)
+        comp_keys = ctx.shard(jax.random.split(k_comp, s))
+        x_fin, up_rep = vmap_compress(self.comp, plan_l, x_fin, comp_keys)
+        client_up = ctx.all_clients(up_rep.total_bits * partf)  # full (s,)
         if sched.may_drop:
             # if every sampled client dropped, the server keeps its model
-            x_new = tree_where(partf.sum() > 0,
-                               masked_mean(x_fin, partf), state.x)
+            x_new = tree_where(partf_full.sum() > 0,
+                               masked_mean(x_fin, partf, ctx,
+                                           weight_sum=partf_full.sum()),
+                               state.x)
         else:
-            x_new = _tmap(lambda t: t.mean(axis=0), x_fin)
+            x_new = ctx.mean_clients(x_fin)
         metrics = {"train_loss": loss,
                    "uplink_bits": client_up.sum(),
                    "downlink_bits": jnp.asarray(s * dense_bits(state.x)),
@@ -199,31 +216,39 @@ class Scaffold(RoundEngine):
         return ScaffoldState(x=params0, c=zeros, ci=ci,
                              round=jnp.zeros((), jnp.int32))
 
-    def _round_impl(self, state: ScaffoldState, key: jax.Array):
+    def _round_impl(self, state: ScaffoldState, key: jax.Array,
+                    ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched
         k_sample, k_local = jax.random.split(key)
         s = cfg.clients_per_round
-        clients = jax.random.choice(k_sample, cfg.n_clients, (s,),
-                                    replace=False)
-        plan = sched.plan(clients, cfg.local_steps)
-        part = plan.participating
+        s_loc = ctx.local_count(s)
+        clients_full = jax.random.choice(k_sample, cfg.n_clients, (s,),
+                                         replace=False)
+        plan = sched.plan(clients_full, cfg.local_steps)
+        plan_l = ctx.shard_tree(plan)
+        clients = ctx.shard(clients_full)
+        part = plan_l.participating
         partf = part.astype(jnp.float32)
+        partf_full = plan.participating.astype(jnp.float32)
         ci_s = _tmap(lambda c: c[clients], state.ci)
-        x0 = _broadcast(state.x, s)
+        x0 = _broadcast(state.x, s_loc)
 
         def adjust(g, slot, x_c):
             return _tmap(lambda gc, cic, cc: gc - cic + cc,
                          g, _tmap(lambda c: c[slot], ci_s), state.c)
 
         het = sched.deadline is not None
-        x_fin, loss = _local_sgd(self.loss_fn, self.data, cfg, x0, clients,
-                                 k_local, grad_adjust=adjust,
-                                 steps=plan.steps if het else None)
+        x_fin, loss_sum = _local_sgd(self.loss_fn, self.data, cfg, x0,
+                                     clients, k_local, grad_adjust=adjust,
+                                     steps=plan_l.steps if het else None,
+                                     ctx=ctx)
+        loss = loss_sum / (jnp.maximum(plan.steps.max(), 1) if het
+                           else cfg.local_steps)
 
         # option II: ci+ = ci - c + (x - y_i) / (K_i * gamma) — K_i is the
         # steps the client actually completed (DESIGN.md §5).
         if het:
-            coef = 1.0 / (jnp.maximum(plan.steps, 1).astype(jnp.float32)
+            coef = 1.0 / (jnp.maximum(plan_l.steps, 1).astype(jnp.float32)
                           * cfg.gamma)
             ci_new = _tmap(
                 lambda cic, cc, xs, yf: cic - cc[None]
@@ -231,7 +256,7 @@ class Scaffold(RoundEngine):
                 ci_s, state.c, x0, x_fin)
             # a zero-step client did no work: the update above would still
             # shift its variate by -c (x_fin == x0), so keep the old ci
-            ci_new = keep_where(plan.steps > 0, ci_new, ci_s)
+            ci_new = keep_where(plan_l.steps > 0, ci_new, ci_s)
         else:
             coef = 1.0 / (cfg.local_steps * cfg.gamma)
             ci_new = _tmap(
@@ -239,22 +264,24 @@ class Scaffold(RoundEngine):
                 ci_s, state.c, x0, x_fin)
         if sched.may_drop:   # dropped stragglers never report; keep ci
             ci_new = keep_where(part, ci_new, ci_s)
-            dx = masked_mean(_tmap(lambda yf, xs: yf - xs, x_fin, x0), partf)
+            wsum = partf_full.sum()
+            dx = masked_mean(_tmap(lambda yf, xs: yf - xs, x_fin, x0),
+                             partf, ctx, weight_sum=wsum)
             dc = masked_mean(_tmap(lambda cn, co: cn - co, ci_new, ci_s),
-                             partf)
-            s_eff = partf.sum()
+                             partf, ctx, weight_sum=wsum)
+            s_eff = wsum
         else:
-            dx = _tmap(lambda yf, xs: (yf - xs).mean(axis=0), x_fin, x0)
-            dc = _tmap(lambda cn, co: (cn - co).mean(axis=0), ci_new, ci_s)
+            dx = ctx.mean_clients(_tmap(lambda yf, xs: yf - xs, x_fin, x0))
+            dc = ctx.mean_clients(_tmap(lambda cn, co: cn - co,
+                                        ci_new, ci_s))
             s_eff = s
         x_new = _tmap(lambda x_, d: x_ + d, state.x, dx)
         c_new = _tmap(lambda c_, d: c_ + (s_eff / cfg.n_clients) * d,
                       state.c, dc)
-        ci_all = _tmap(lambda all_, upd: all_.at[clients].set(upd),
-                       state.ci, ci_new)
+        ci_all = ctx.scatter_rows(state.ci, clients, ci_new)
         # Scaffold communicates both the model and the control variate.
         dense = dense_bits(state.x)
-        client_up = 2 * dense * partf
+        client_up = 2 * dense * partf_full
         metrics = {"train_loss": loss,
                    "uplink_bits": (client_up.sum() if sched.may_drop
                                    else jnp.asarray(2 * s * dense)),
@@ -295,17 +322,22 @@ class FedDyn(RoundEngine):
         return FedDynState(x=params0, h=zeros, grads=g,
                            round=jnp.zeros((), jnp.int32))
 
-    def _round_impl(self, state: FedDynState, key: jax.Array):
+    def _round_impl(self, state: FedDynState, key: jax.Array,
+                    ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched
         k_sample, k_local = jax.random.split(key)
         s = cfg.clients_per_round
-        clients = jax.random.choice(k_sample, cfg.n_clients, (s,),
-                                    replace=False)
-        plan = sched.plan(clients, cfg.local_steps)
-        part = plan.participating
+        s_loc = ctx.local_count(s)
+        clients_full = jax.random.choice(k_sample, cfg.n_clients, (s,),
+                                         replace=False)
+        plan = sched.plan(clients_full, cfg.local_steps)
+        plan_l = ctx.shard_tree(plan)
+        clients = ctx.shard(clients_full)
+        part = plan_l.participating
         partf = part.astype(jnp.float32)
+        partf_full = plan.participating.astype(jnp.float32)
         g_s = _tmap(lambda g: g[clients], state.grads)
-        x0 = _broadcast(state.x, s)
+        x0 = _broadcast(state.x, s_loc)
 
         def adjust(g, slot, x_c):
             gp = _tmap(lambda gg: gg[slot], g_s)
@@ -314,34 +346,40 @@ class FedDyn(RoundEngine):
                 g, gp, x_c, state.x)
 
         het = sched.deadline is not None
-        x_fin, loss = _local_sgd(self.loss_fn, self.data, cfg, x0, clients,
-                                 k_local, grad_adjust=adjust,
-                                 steps=plan.steps if het else None)
+        x_fin, loss_sum = _local_sgd(self.loss_fn, self.data, cfg, x0,
+                                     clients, k_local, grad_adjust=adjust,
+                                     steps=plan_l.steps if het else None,
+                                     ctx=ctx)
+        loss = loss_sum / (jnp.maximum(plan.steps.max(), 1) if het
+                           else cfg.local_steps)
         g_new = _tmap(lambda gp, yf, xs: gp - cfg.alpha * (yf - xs),
                       g_s, x_fin, x0)
         if sched.may_drop:   # dropped stragglers keep their dual variables
             g_new = keep_where(part, g_new, g_s)
-        grads_all = _tmap(lambda all_, upd: all_.at[clients].set(upd),
-                          state.grads, g_new)
+        grads_all = ctx.scatter_rows(state.grads, clients, g_new)
         if sched.may_drop:
             # only participants' deltas feed the server correction/average
-            delta = _tmap(
-                lambda yf, xs: (yf - xs) * per_client(partf, yf), x_fin, x0)
+            delta = ctx.sum_clients(_tmap(
+                lambda yf, xs: (yf - xs) * per_client(partf, yf),
+                x_fin, x0))
             h_new = _tmap(
-                lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients)
-                * d_.sum(axis=0), state.h, delta)
+                lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients) * d_,
+                state.h, delta)
             x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
-                          masked_mean(x_fin, partf), h_new)
+                          masked_mean(x_fin, partf, ctx,
+                                      weight_sum=partf_full.sum()), h_new)
             # if every sampled client dropped, the server keeps its model
-            x_new = tree_where(partf.sum() > 0, x_new, state.x)
+            x_new = tree_where(partf_full.sum() > 0, x_new, state.x)
         else:
+            dsum = ctx.sum_clients(_tmap(lambda yf, xs: yf - xs,
+                                         x_fin, x0))
             h_new = _tmap(
-                lambda h_, yf, xs: h_ - cfg.alpha * (1.0 / cfg.n_clients)
-                * (yf - xs).sum(axis=0), state.h, x_fin, x0)
-            x_new = _tmap(lambda yf, h_: yf.mean(axis=0) - h_ / cfg.alpha,
-                          x_fin, h_new)
+                lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients) * d_,
+                state.h, dsum)
+            x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
+                          ctx.mean_clients(x_fin), h_new)
         dense = dense_bits(state.x)
-        client_up = dense * partf
+        client_up = dense * partf_full
         metrics = {"train_loss": loss,
                    "uplink_bits": (client_up.sum() if sched.may_drop
                                    else jnp.asarray(s * dense)),

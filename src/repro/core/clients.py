@@ -241,6 +241,66 @@ def per_client(mask: jax.Array, leaf: jax.Array) -> jax.Array:
     return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
 
 
+class ClientAxisCtx:
+    """Single-device view of the sampled-client axis (DESIGN.md §6).
+
+    Round implementations write every cross-client operation against this
+    interface; the base class is the unsharded path and each method is
+    *exactly* the op the pre-sharding code inlined, so the unsharded graph
+    is unchanged.  :class:`repro.core.distributed.ShardCtx` overrides the
+    methods with shard-local slicing + explicit collectives, turning the
+    same round body into a ``shard_map`` program over a ``clients`` mesh
+    axis.
+    """
+
+    #: number of devices the sampled-client axis is split across
+    n_shards: int = 1
+
+    def local_count(self, s: int) -> int:
+        """Clients this shard owns out of ``s`` sampled per round."""
+        return s
+
+    def shard(self, arr: jax.Array) -> jax.Array:
+        """Slice this shard's rows from a full (s, ...) array."""
+        return arr
+
+    def shard_tree(self, tree: PyTree) -> PyTree:
+        """``shard`` over every (s, ...) leaf (e.g. a :class:`RoundPlan`)."""
+        return tree
+
+    def all_clients(self, vec: jax.Array) -> jax.Array:
+        """Reassemble the full (s, ...) array from shard-local rows.
+
+        Metric vectors go through this before any scalar reduction, so
+        totals are computed from the *same* full vector on every shard —
+        bit-identical to the unsharded path at any device count.
+        """
+        return vec
+
+    def psum(self, x):
+        """Sum a value (array or pytree) across shards."""
+        return x
+
+    def mean_clients(self, stacked: PyTree) -> PyTree:
+        """Mean over the (local) client axis of a stacked tree."""
+        return jax.tree_util.tree_map(lambda t: t.mean(axis=0), stacked)
+
+    def sum_clients(self, stacked: PyTree) -> PyTree:
+        """Sum over the (local) client axis of a stacked tree."""
+        return jax.tree_util.tree_map(lambda t: t.sum(axis=0), stacked)
+
+    def scatter_rows(self, full: PyTree, idx: jax.Array, upd: PyTree
+                     ) -> PyTree:
+        """Write shard-local per-client rows back into the full
+        (n_clients, ...) store (rows not owned by any shard unchanged)."""
+        return jax.tree_util.tree_map(
+            lambda all_, up_: all_.at[idx].set(up_), full, upd)
+
+
+#: The default (unsharded) client-axis context.
+NULL_CTX = ClientAxisCtx()
+
+
 def keep_where(mask: jax.Array, new: PyTree, old: PyTree) -> PyTree:
     """Per-client select over stacked trees: take ``new`` where ``mask`` is
     set, keep ``old`` elsewhere (e.g. revert non-participants' updates)."""
@@ -254,20 +314,32 @@ def tree_where(cond: jax.Array, a: PyTree, b: PyTree) -> PyTree:
     return jax.tree_util.tree_map(lambda x, y: jnp.where(cond, x, y), a, b)
 
 
-def mean_over_active(values: jax.Array, active: jax.Array) -> jax.Array:
+def mean_over_active(values: jax.Array, active: jax.Array,
+                     ctx: ClientAxisCtx = NULL_CTX) -> jax.Array:
     """Mean of per-client scalars over the active subset; 0 if none are
     active.  With every client active this reduces to ``values.mean()``
-    bit-exactly (same sum, same divisor)."""
+    bit-exactly (same sum, same divisor).  Under a sharded ``ctx`` both the
+    masked sum and the active count are psum'd across shards."""
     act = active.astype(values.dtype)
-    return (values * act).sum() / jnp.maximum(act.sum(), 1.0)
+    return (ctx.psum((values * act).sum())
+            / jnp.maximum(ctx.psum(act.sum()), 1.0))
 
 
-def masked_mean(stacked: PyTree, weights: jax.Array) -> PyTree:
+def masked_mean(stacked: PyTree, weights: jax.Array,
+                ctx: ClientAxisCtx = NULL_CTX,
+                weight_sum: Optional[jax.Array] = None) -> PyTree:
     """Mean over the client axis weighted by ``weights`` (s,) (e.g. the
-    participation mask); a zero-weight round returns zeros, never NaN."""
-    wsum = jnp.maximum(weights.sum(), 1.0)
+    participation mask); a zero-weight round returns zeros, never NaN.
+
+    Under a sharded ``ctx``, ``stacked``/``weights`` are shard-local and the
+    numerator is psum'd; pass ``weight_sum`` (the full-vector weight total,
+    available replicated from the round plan) so the divisor stays
+    bit-identical to the unsharded path."""
+    wsum = jnp.maximum(weights.sum() if weight_sum is None else weight_sum,
+                       1.0)
     return jax.tree_util.tree_map(
-        lambda t: (t * per_client(weights, t)).sum(axis=0) / wsum, stacked)
+        lambda t: ctx.psum((t * per_client(weights, t)).sum(axis=0)) / wsum,
+        stacked)
 
 
 def vmap_compress(comp, plan: RoundPlan, stacked: PyTree, keys: jax.Array):

@@ -1,0 +1,164 @@
+"""Client-axis device parallelism: ``shard_map`` federated rounds.
+
+The paper's experiments (100 clients, 10 sampled per round) are
+embarrassingly parallel along the client axis, but the round
+implementations vmap the sampled clients onto one device.  This module
+splits that axis across a ``clients`` mesh axis (DESIGN.md §6):
+
+* :class:`ShardCtx` — the sharded implementation of
+  :class:`repro.core.clients.ClientAxisCtx`: per-client work (local SGD,
+  TopK/Q_r compression, RNG keys, ``RoundPlan`` vectors) runs shard-local
+  on an ``s/D`` slice of the sampled clients, and every cross-client
+  reduction is an explicit collective — ``psum`` for model-tree means and
+  masked sums, ``all_gather`` for the (s,) metric vectors;
+* :func:`shard_round` — wraps an algorithm's ``_round_impl`` in
+  ``shard_map`` over the mesh.  State and key go in replicated and come
+  out replicated, so ``lax.scan`` over rounds (the fused
+  ``RoundEngine.run_rounds`` engine) stays a single jit with the
+  ``shard_map`` inside the scan body.
+
+Determinism contract (tests/test_distributed.py): per-client RNG keys are
+split from the *full* (s,) chain and then sliced, so each client computes
+exactly what it computes unsharded; metric scalars (``uplink_bits`` /
+``downlink_bits``, ``client_steps``, ``sim_time``) are derived from
+``all_gather``-ed full vectors with the unsharded formula and are therefore
+**bit-identical** at any device count, while psum-reduced model trees
+(server mean, control variates) are allclose (summation order changes with
+D).  On a 1-device mesh everything — params included — is bit-identical.
+
+The persistent (n_clients, ...) client state stays replicated: sampling
+draws arbitrary global indices each round, so a round gathers its s rows
+replicated (cheap — s << n_clients) and scatters them back with a
+psum-of-disjoint-rows trick that is exact because ``replace=False``
+sampling makes shard contributions disjoint.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.clients import ClientAxisCtx, per_client
+
+try:  # jax >= 0.6 exports shard_map at the top level
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# older jax wants check_rep=False for axis_index-based slicing; the kwarg
+# was renamed/retired in newer releases, so pass it only when accepted.
+_SM_KWARGS = ({"check_rep": False}
+              if "check_rep" in inspect.signature(_shard_map).parameters
+              else {})
+
+PyTree = Any
+
+CLIENT_AXIS = "clients"
+
+
+class ShardCtx(ClientAxisCtx):
+    """Sharded view of the sampled-client axis inside ``shard_map``."""
+
+    def __init__(self, axis_name: str, n_shards: int):
+        self.axis = axis_name
+        self.n_shards = n_shards
+
+    def local_count(self, s: int) -> int:
+        return s // self.n_shards
+
+    def shard(self, arr: jax.Array) -> jax.Array:
+        nl = arr.shape[0] // self.n_shards
+        start = jax.lax.axis_index(self.axis) * nl
+        return jax.lax.dynamic_slice_in_dim(arr, start, nl, axis=0)
+
+    def shard_tree(self, tree: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(self.shard, tree)
+
+    def all_clients(self, vec: jax.Array) -> jax.Array:
+        # tiled gather in axis order == the inverse of ``shard``'s slicing,
+        # so the reassembled vector matches the unsharded one row-for-row
+        return jax.lax.all_gather(vec, self.axis, axis=0, tiled=True)
+
+    def psum(self, x):
+        return jax.tree_util.tree_map(
+            lambda t: jax.lax.psum(t, self.axis), x)
+
+    def mean_clients(self, stacked: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda t: jax.lax.psum(t.sum(axis=0), self.axis)
+            / (t.shape[0] * self.n_shards), stacked)
+
+    def sum_clients(self, stacked: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda t: jax.lax.psum(t.sum(axis=0), self.axis), stacked)
+
+    def scatter_rows(self, full: PyTree, idx: jax.Array, upd: PyTree
+                     ) -> PyTree:
+        """Exact cross-shard scatter into a replicated (n, ...) store.
+
+        Each shard zero-fills a copy, writes its rows, and the psum merges
+        them: sampling without replacement makes the written rows disjoint,
+        so every touched row receives exactly one shard's value plus zeros
+        (exact in fp), and untouched rows keep the old value via the mask.
+        """
+        n_rows = jax.tree_util.tree_leaves(full)[0].shape[0]
+        touched = jnp.zeros((n_rows,), jnp.int32).at[idx].set(1)
+        touched = jax.lax.psum(touched, self.axis) > 0
+
+        def one(f, u):
+            contrib = jax.lax.psum(jnp.zeros_like(f).at[idx].set(u),
+                                   self.axis)
+            return jnp.where(per_client(touched, f), contrib, f)
+
+        return jax.tree_util.tree_map(one, full, upd)
+
+
+# --------------------------------------------------------------------------- #
+
+
+def validate_client_mesh(mesh: Mesh, clients_per_round: int,
+                         axis: str = CLIENT_AXIS) -> int:
+    """Check the mesh can shard ``clients_per_round``; return shard count."""
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"mesh axes {mesh.axis_names} have no {axis!r} axis; build one "
+            f"with repro.launch.mesh.make_client_mesh()")
+    n = mesh.shape[axis]
+    if clients_per_round % n != 0:
+        raise ValueError(
+            f"clients_per_round={clients_per_round} must divide evenly over "
+            f"the {n}-device {axis!r} mesh axis")
+    return n
+
+
+def shard_round(round_impl: Callable, mesh: Mesh, clients_per_round: int,
+                axis: str = CLIENT_AXIS) -> Callable:
+    """Wrap ``_round_impl(state, key, ctx)`` in ``shard_map`` over ``mesh``.
+
+    Returns a drop-in ``(state, key) -> (state, metrics)`` with replicated
+    in/out specs: the sampled-client slicing happens *inside* via
+    ``ShardCtx`` (axis_index-based), and every output is either psum- or
+    all_gather-reassembled, so the wrapper composes with ``jax.jit`` and
+    ``lax.scan`` exactly like the unsharded implementation.
+    """
+    n = validate_client_mesh(mesh, clients_per_round, axis)
+    ctx = ShardCtx(axis, n)
+
+    def run(state, key):
+        return round_impl(state, key, ctx=ctx)
+
+    return _shard_map(run, mesh=mesh, in_specs=(P(), P()),
+                      out_specs=(P(), P()), **_SM_KWARGS)
+
+
+def usable_shard_counts(clients_per_round: int,
+                        max_devices: int | None = None) -> Sequence[int]:
+    """Divisors of ``clients_per_round`` realisable on this host's devices
+    (ascending) — the sweep axis for tests and benchmarks."""
+    cap = len(jax.devices()) if max_devices is None else max_devices
+    return [d for d in range(1, min(clients_per_round, cap) + 1)
+            if clients_per_round % d == 0]

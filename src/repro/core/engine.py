@@ -22,7 +22,7 @@ histories and bits-axes are identical whichever driver ran.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -34,8 +34,40 @@ class RoundEngine:
     """Mixin: host-stepped ``round`` + fused ``run_rounds`` over _round_impl."""
 
     def _setup_engine(self) -> None:
-        self._round = jax.jit(self._round_impl)
+        self._mesh = None
+        self._impl = self._round_impl
+        self._round = jax.jit(self._impl)
         self._fused_cache: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------------ #
+
+    def use_mesh(self, mesh: Optional["jax.sharding.Mesh"],
+                 axis: str = "clients"):
+        """Bind (or, with ``None``, unbind) a client-axis mesh.
+
+        With a mesh bound, both drivers run ``_round_impl`` under
+        ``shard_map`` with the sampled-client axis split across the mesh's
+        ``axis`` devices (DESIGN.md §6) — same trajectory contract as the
+        fused engine: metric scalars bit-identical, params allclose.
+        Rebinding to a *different* mesh clears the jit caches; rebinding
+        the mesh already bound is a no-op (so drivers may pass ``mesh=``
+        on every call without triggering recompiles).  Returns ``self``
+        for chaining.
+        """
+        from repro.core import distributed
+        if (mesh is self._mesh
+                or (mesh is not None and self._mesh is not None
+                    and mesh == self._mesh)):
+            return self
+        if mesh is None:
+            self._impl = self._round_impl
+        else:
+            self._impl = distributed.shard_round(
+                self._round_impl, mesh, self.cfg.clients_per_round, axis)
+        self._mesh = mesh
+        self._round = jax.jit(self._impl)
+        self._fused_cache = {}
+        return self
 
     # ------------------------------------------------------------------ #
 
@@ -63,7 +95,7 @@ class RoundEngine:
                 def body(carry, _):
                     state, key = carry
                     key, sub = jax.random.split(key)
-                    state, metrics = self._round_impl(state, sub)
+                    state, metrics = self._impl(state, sub)
                     return (state, key), metrics
 
                 (state, _), metrics = jax.lax.scan(

@@ -41,8 +41,9 @@ import jax.numpy as jnp
 from repro.compress import Compressor, Identity, dense_bits
 from repro.core import comm
 from repro.core.clients import (
-    ClientSchedule, keep_where, masked_mean, mean_over_active, per_client,
-    tree_where, validate_schedule, vmap_compress)
+    NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
+    mean_over_active, per_client, tree_where, validate_schedule,
+    vmap_compress)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
@@ -148,29 +149,36 @@ class FedComLoc(RoundEngine):
         g = jnp.floor(jnp.log1p(-u) / jnp.log1p(-self.cfg.p)).astype(jnp.int32) + 1
         return jnp.clip(g, 1, cap)
 
-    def _round_impl(self, state: FedComLocState, key: jax.Array):
+    def _round_impl(self, state: FedComLocState, key: jax.Array,
+                    ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched
         k_sample, k_steps, k_local, k_up, k_down = jax.random.split(key, 5)
         s = cfg.clients_per_round
-        clients = jax.random.choice(
+        s_loc = ctx.local_count(s)
+        clients_full = jax.random.choice(
             k_sample, cfg.n_clients, (s,), replace=False)
         num_steps = self._num_local_steps(k_steps)
         # Client-heterogeneity layer (DESIGN.md §5): per-client step counts
         # (straggler deadline), participation mask, compressor overrides.
-        plan = sched.plan(clients, num_steps)
-        part = plan.participating
+        # The full (s,) plan is computed replicated (metrics use it); the
+        # per-client compute below runs on this shard's slice (§6).
+        plan = sched.plan(clients_full, num_steps)
+        plan_l = ctx.shard_tree(plan)
+        clients = ctx.shard(clients_full)
+        part = plan_l.participating
         partf = part.astype(jnp.float32)
+        partf_full = plan.participating.astype(jnp.float32)
         ov_names = sched.comp_override_names
-        ov_vals = [plan.comp_overrides[n] for n in ov_names]
+        ov_vals = [plan_l.comp_overrides[n] for n in ov_names]
 
         h_s = jax.tree_util.tree_map(lambda h: h[clients], state.h)
         x0 = jax.tree_util.tree_map(
-            lambda p: jnp.broadcast_to(p, (s,) + p.shape), state.x)
+            lambda p: jnp.broadcast_to(p, (s_loc,) + p.shape), state.x)
 
         def local_step(carry, inp):
             x_i, loss_acc = carry
             step_idx, k_step = inp
-            active = step_idx < plan.steps          # (s,) per-client mask
+            active = step_idx < plan_l.steps        # (s_loc,) per-client mask
 
             def one_client(x_c, h_c, client, kc, *ov):
                 kb, kcomp = jax.random.split(kc)
@@ -184,13 +192,15 @@ class FedComLoc(RoundEngine):
                     x_c, g, h_c)
                 return x_new, loss
 
-            keys = jax.random.split(k_step, s)
+            # split the full (s,) key chain, then slice: client i sees the
+            # same key at every device count
+            keys = ctx.shard(jax.random.split(k_step, s))
             x_new, losses = jax.vmap(one_client)(x_i, h_s, clients, keys,
                                                  *ov_vals)
             x_i = jax.tree_util.tree_map(
                 lambda new, old: jnp.where(per_client(active, new), new, old),
                 x_new, x_i)
-            loss_acc = loss_acc + mean_over_active(losses, active)
+            loss_acc = loss_acc + mean_over_active(losses, active, ctx)
             return (x_i, loss_acc), None
 
         cap = cfg.steps_cap
@@ -204,12 +214,12 @@ class FedComLoc(RoundEngine):
         # compressed payloads report their own cost in-graph (BitsReport),
         # per client — a dropped straggler transmits nothing.
         dense = dense_bits(state.x)
-        client_up = jnp.full((s,), dense, jnp.float32)
+        client_up = jnp.full((s_loc,), dense, jnp.float32)
         up_bits = jnp.asarray(s * dense)
         down_bits = jnp.asarray(s * dense)
         e_new = state.e
         if cfg.variant == "com":
-            up_keys = jax.random.split(k_up, s)
+            up_keys = ctx.shard(jax.random.split(k_up, s))
             if cfg.error_feedback:
                 # EF on the uplink *innovation*: transmit
                 # C(x^_i - x_prev + e_i); the server reconstructs
@@ -221,7 +231,8 @@ class FedComLoc(RoundEngine):
                 innov = jax.tree_util.tree_map(
                     lambda xh, x0_, e: xh - x0_[None] + e,
                     x_hat, state.x, e_s)
-                sent, up_rep = vmap_compress(self.comp, plan, innov, up_keys)
+                sent, up_rep = vmap_compress(self.comp, plan_l, innov,
+                                             up_keys)
                 # leaky memory: undecayed EF diverges inside Scaffnew (the
                 # residual integrates against the control variates — see the
                 # EXPERIMENTS.md §Beyond decay study); 0.7 is the sweet spot.
@@ -229,25 +240,25 @@ class FedComLoc(RoundEngine):
                     lambda c, snt: cfg.ef_decay * (c - snt), innov, sent)
                 if sched.may_drop:    # a dropped client never transmitted
                     e_s_new = keep_where(part, e_s_new, e_s)
-                e_new = jax.tree_util.tree_map(
-                    lambda all_, upd: all_.at[clients].set(upd),
-                    state.e, e_s_new)
+                e_new = ctx.scatter_rows(state.e, clients, e_s_new)
                 x_hat = jax.tree_util.tree_map(
                     lambda x0_, snt: x0_[None] + snt, state.x, sent)
             else:
-                x_hat, up_rep = vmap_compress(self.comp, plan, x_hat,
+                x_hat, up_rep = vmap_compress(self.comp, plan_l, x_hat,
                                               up_keys)
-            client_up = up_rep.total_bits        # (s,) — leaves carry vmap axis
-            up_bits = None                       # recomputed from client_up
-        client_up = client_up * partf
+            client_up = up_rep.total_bits      # (s_loc,) — vmap axis on leaves
+            up_bits = None                     # recomputed from client_up
+        client_up = ctx.all_clients(client_up * partf)   # full (s,) exact
         if up_bits is None or sched.may_drop:
             up_bits = client_up.sum()
         if sched.may_drop:
             # if every sampled client dropped, the server keeps its model
-            x_bar = tree_where(partf.sum() > 0,
-                               masked_mean(x_hat, partf), state.x)
+            x_bar = tree_where(partf_full.sum() > 0,
+                               masked_mean(x_hat, partf, ctx,
+                                           weight_sum=partf_full.sum()),
+                               state.x)
         else:
-            x_bar = jax.tree_util.tree_map(lambda t: t.mean(axis=0), x_hat)
+            x_bar = ctx.mean_clients(x_hat)
         if cfg.variant == "global":
             x_bar, down_rep = self.comp.compress(x_bar, k_down)
             down_bits = down_rep.total_bits * s
@@ -260,9 +271,7 @@ class FedComLoc(RoundEngine):
             h_s, x_hat, x_bar)
         if sched.may_drop:   # a dropped client keeps its control variate
             h_s_new = keep_where(part, h_s_new, h_s)
-        h_new = jax.tree_util.tree_map(
-            lambda h_all, h_upd: h_all.at[clients].set(h_upd),
-            state.h, h_s_new)
+        h_new = ctx.scatter_rows(state.h, clients, h_s_new)
 
         # beyond-paper: Polyak momentum on the broadcast point only
         mom_new = state.mom

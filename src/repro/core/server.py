@@ -77,6 +77,7 @@ def run_federated(
     log_every: int = 0,
     log_prefix: str = "",
     fuse: bool = True,
+    mesh: Optional[Any] = None,
 ) -> History:
     """Drive ``algorithm`` (anything with .init/.round/.meter) for R rounds.
 
@@ -86,7 +87,13 @@ def run_federated(
     instead of one per round — same trajectory (the fused engine replays
     the host loop's ``key, sub = jax.random.split(key)`` chain), one host
     round-trip per chunk instead of per round.
+
+    ``mesh`` (a ``jax.sharding.Mesh`` with a ``clients`` axis — see
+    ``repro.launch.mesh.make_client_mesh``) binds the algorithm's rounds to
+    the client-sharded ``shard_map`` path (DESIGN.md §6) before driving.
     """
+    if mesh is not None:
+        algorithm.use_mesh(mesh)
     state = algorithm.init(params0)
     hist = History()
     t0 = time.time()

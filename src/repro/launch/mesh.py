@@ -21,3 +21,26 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate 1x1 mesh for CPU smoke runs of the pjit code paths."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_client_mesh(n_shards: int | None = None, *, data: int = 1,
+                     model: int = 1) -> jax.sharding.Mesh:
+    """Mesh whose leading ``clients`` axis shards federated rounds
+    (DESIGN.md §6; consumed by ``RoundEngine.use_mesh`` /
+    ``server.run_federated(mesh=...)``).
+
+    With ``data``/``model`` left at 1 this is a 1-D ``("clients",)`` mesh
+    over ``n_shards`` devices (default: all available — force more host
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    Passing ``data``/``model`` composes the client axis with the existing
+    in-model axes: ``(clients, data, model)``, clients outermost so each
+    client shard holds a contiguous data/model sub-mesh.
+    """
+    if n_shards is None:
+        n_shards = max(1, len(jax.devices()) // (data * model))
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if data == 1 and model == 1:
+        return jax.make_mesh((n_shards,), ("clients",))
+    return jax.make_mesh((n_shards, data, model),
+                         ("clients", "data", "model"))

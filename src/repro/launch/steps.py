@@ -206,7 +206,6 @@ def build_serve_step(spec: ArchSpec, shape: InputShape,
     """Decode: ONE new token against a cache of ``shape.seq_len``."""
     m = spec.model
     b, t = shape.global_batch, shape.seq_len
-    fsdp = ("pod", "data") if "pod" in mesh.axis_names else "data"
     params_struct = _params_struct(spec)
     pshard = sh.param_shardings(params_struct, mesh,
                                 n_experts=_n_experts(spec))

@@ -485,7 +485,6 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
     layer), sized for ``max_len``.
     """
     b, t = tokens.shape
-    npre = 0 if prefix_embeds is None else prefix_embeds.shape[1]
     x = _embed_in(params, cfg, tokens, prefix_embeds)
     ttot = x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(ttot), (b, ttot))

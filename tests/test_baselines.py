@@ -50,7 +50,6 @@ def test_baseline_decreases_loss(cls):
 
 
 def test_sparse_fedavg_fewer_bits():
-    d = 64
     data, A, b = quadratic_setup(d=4)
     cfg = FedConfig(gamma=0.05, local_steps=5, n_clients=5,
                     clients_per_round=5, batch_size=4)

@@ -1,0 +1,218 @@
+"""Client-axis sharding (DESIGN.md §6): a `shard_map` round must reproduce
+the unsharded round — bit-identically on the metrics (uplink/downlink bits,
+client_steps, client_uplink_bits, sim_time) and allclose on params — for
+FedComLoc and all three baselines, at every realisable device count.
+
+Run single-device (the default tier-1 env) this exercises the shard_map
+path on a 1-device mesh; under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI matrix's
+second leg) the same tests sweep 1/2/4/8-way sharding.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import TopK
+from repro.core import fed_data
+from repro.core.baselines import FedAvg, FedConfig, FedDyn, Scaffold
+from repro.core.clients import ClientProfile, ClientSchedule
+from repro.core.distributed import (
+    shard_round, usable_shard_counts, validate_client_mesh)
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+from repro.launch.mesh import make_client_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_CLIENTS, DIM, S, ROUNDS = 16, 6, 8, 4
+
+EXACT_METRICS = ("uplink_bits", "downlink_bits", "client_steps",
+                 "client_uplink_bits", "sim_time")
+
+
+def quadratic_data(n_clients=N_CLIENTS, d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n_clients, d))
+    b = rng.normal(size=(n_clients,))
+    reps = 8
+    x = np.repeat(A, reps, axis=0).astype(np.float32)
+    y = np.repeat(b, reps).astype(np.float32)
+    parts = [np.arange(i * reps, (i + 1) * reps) for i in range(n_clients)]
+    return fed_data.from_numpy_partition(x, y, parts)
+
+
+def sq_loss(params, xb, yb):
+    return 0.5 * jnp.mean((xb @ params["w"] - yb) ** 2)
+
+
+DATA = quadratic_data()
+P0 = {"w": jnp.zeros((DIM,), jnp.float32)}
+
+
+def straggler_schedule():
+    return ClientSchedule(
+        profile=ClientProfile.lognormal(N_CLIENTS, speed_sigma=1.5, seed=3),
+        deadline=3.0, drop_stragglers=True, bit_cost=1e-6)
+
+
+def build(name):
+    """Fresh algorithm instance (meters and jit caches are per-instance)."""
+    if name == "fedcomloc_com":
+        cfg = FedComLocConfig(gamma=0.05, p=0.2, n_clients=N_CLIENTS,
+                              clients_per_round=S, batch_size=4,
+                              variant="com")
+        return FedComLoc(sq_loss, DATA, cfg, TopK(density=0.5))
+    if name == "fedcomloc_ef":
+        cfg = FedComLocConfig(gamma=0.05, p=0.2, n_clients=N_CLIENTS,
+                              clients_per_round=S, batch_size=4,
+                              variant="com", error_feedback=True)
+        return FedComLoc(sq_loss, DATA, cfg, TopK(density=0.25))
+    if name == "fedcomloc_drop":
+        cfg = FedComLocConfig(gamma=0.05, p=0.2, n_clients=N_CLIENTS,
+                              clients_per_round=S, batch_size=4,
+                              variant="com")
+        return FedComLoc(sq_loss, DATA, cfg, TopK(density=0.5),
+                         schedule=straggler_schedule())
+    fed = FedConfig(n_clients=N_CLIENTS, clients_per_round=S, batch_size=4,
+                    local_steps=5)
+    if name == "fedavg":
+        return FedAvg(sq_loss, DATA, fed, TopK(density=0.5))
+    if name == "fedavg_drop":
+        return FedAvg(sq_loss, DATA, fed, TopK(density=0.5),
+                      schedule=straggler_schedule())
+    if name == "scaffold":
+        return Scaffold(sq_loss, DATA, fed)
+    if name == "feddyn":
+        return FedDyn(sq_loss, DATA, fed)
+    raise ValueError(name)
+
+
+ALGORITHMS = ["fedcomloc_com", "fedcomloc_ef", "fedcomloc_drop",
+              "fedavg", "fedavg_drop", "scaffold", "feddyn"]
+
+
+@pytest.fixture(scope="module")
+def references():
+    """Unsharded run_rounds trajectories, one per algorithm."""
+    out = {}
+    for name in ALGORITHMS:
+        alg = build(name)
+        state, metrics = alg.run_rounds(alg.init(P0), jax.random.PRNGKey(9),
+                                        ROUNDS)
+        out[name] = (state, metrics)
+    return out
+
+
+@pytest.mark.parametrize("name", ALGORITHMS)
+def test_sharded_rounds_match_unsharded(name, references):
+    """Fused scan-of-shard_map == unsharded scan at every device count."""
+    st_ref, m_ref = references[name]
+    for n_shards in usable_shard_counts(S):
+        alg = build(name).use_mesh(make_client_mesh(n_shards))
+        st, m = alg.run_rounds(alg.init(P0), jax.random.PRNGKey(9), ROUNDS)
+        for k in EXACT_METRICS:
+            np.testing.assert_array_equal(
+                m_ref[k], m[k], err_msg=f"{name} D={n_shards} metric {k}")
+        np.testing.assert_allclose(
+            np.asarray(st.x["w"]), np.asarray(st_ref.x["w"]),
+            rtol=1e-5, atol=1e-6, err_msg=f"{name} D={n_shards} params")
+        np.testing.assert_allclose(
+            m["train_loss"], m_ref["train_loss"], rtol=1e-5, atol=1e-7)
+        # the meter saw identical wire totals whichever mesh ran the rounds
+        assert np.isclose(alg.meter.uplink_bits,
+                          float(m_ref["uplink_bits"].sum()))
+
+
+def test_single_device_mesh_is_bit_identical(references):
+    """On a 1-device mesh even the *params* must match bit-for-bit: the
+    shard_map program is the same computation in the same order."""
+    st_ref, m_ref = references["fedcomloc_com"]
+    alg = build("fedcomloc_com").use_mesh(make_client_mesh(1))
+    st, m = alg.run_rounds(alg.init(P0), jax.random.PRNGKey(9), ROUNDS)
+    np.testing.assert_array_equal(np.asarray(st_ref.x["w"]),
+                                  np.asarray(st.x["w"]))
+    np.testing.assert_array_equal(np.asarray(st_ref.h["w"]),
+                                  np.asarray(st.h["w"]))
+    for k in m_ref:
+        np.testing.assert_array_equal(m_ref[k], m[k], err_msg=k)
+
+
+def test_per_round_driver_matches_on_mesh(references):
+    """The one-jit-per-round driver agrees with the fused sharded engine."""
+    _, m_ref = references["scaffold"]
+    alg = build("scaffold").use_mesh(make_client_mesh())
+    state = alg.init(P0)
+    key = jax.random.PRNGKey(9)
+    for r in range(ROUNDS):
+        key, sub = jax.random.split(key)
+        state, m = alg.round(state, sub)
+        assert m["uplink_bits"] == float(m_ref["uplink_bits"][r])
+        np.testing.assert_array_equal(m["client_steps"],
+                                      m_ref["client_steps"][r])
+
+
+def test_unbind_mesh_restores_unsharded_path(references):
+    st_ref, m_ref = references["fedavg"]
+    alg = build("fedavg").use_mesh(make_client_mesh(1)).use_mesh(None)
+    assert alg._mesh is None
+    st, m = alg.run_rounds(alg.init(P0), jax.random.PRNGKey(9), ROUNDS)
+    np.testing.assert_array_equal(np.asarray(st_ref.x["w"]),
+                                  np.asarray(st.x["w"]))
+    np.testing.assert_array_equal(m_ref["uplink_bits"], m["uplink_bits"])
+
+
+class TestValidation:
+    def test_mesh_must_have_clients_axis(self):
+        from repro.launch.mesh import make_host_mesh
+        with pytest.raises(ValueError, match="clients"):
+            validate_client_mesh(make_host_mesh(), S)
+
+    def test_sample_must_divide_over_shards(self):
+        if len(jax.devices()) < 2:
+            pytest.skip("needs >= 2 devices to make division fail")
+        mesh = make_client_mesh(2)
+        with pytest.raises(ValueError, match="divide"):
+            validate_client_mesh(mesh, 7)
+        with pytest.raises(ValueError, match="divide"):
+            shard_round(lambda st, k, ctx: (st, {}), mesh, 7)
+
+    def test_use_mesh_rejects_undividable_sample(self):
+        if len(jax.devices()) < 2:
+            pytest.skip("needs >= 2 devices to make division fail")
+        cfg = FedComLocConfig(n_clients=N_CLIENTS, clients_per_round=3,
+                              batch_size=4, variant="none")
+        from repro.compress import Identity
+        alg = FedComLoc(sq_loss, DATA, cfg, Identity())
+        with pytest.raises(ValueError, match="divide"):
+            alg.use_mesh(make_client_mesh(2))
+
+    def test_usable_shard_counts(self):
+        counts = usable_shard_counts(8, max_devices=8)
+        assert counts == [1, 2, 4, 8]
+        assert usable_shard_counts(8, max_devices=3) == [1, 2]
+        assert usable_shard_counts(6, max_devices=8) == [1, 2, 3, 6]
+
+
+def test_make_client_mesh_shapes():
+    mesh = make_client_mesh(1)
+    assert mesh.axis_names == ("clients",)
+    assert mesh.shape["clients"] == 1
+    composed = make_client_mesh(1, data=1, model=1)
+    assert composed.axis_names == ("clients",)
+    if len(jax.devices()) >= 2:
+        full = make_client_mesh()
+        assert full.shape["clients"] == len(jax.devices())
+        two_axis = make_client_mesh(len(jax.devices()) // 2, data=2)
+        assert two_axis.axis_names == ("clients", "data", "model")
+
+
+def test_run_federated_accepts_mesh():
+    from repro.core import server
+    alg = build("fedcomloc_com")
+    hist = server.run_federated(alg, P0, num_rounds=3,
+                                key=jax.random.PRNGKey(2),
+                                mesh=make_client_mesh())
+    assert alg._mesh is not None
+    assert alg.meter.rounds == 3
+    assert hist.final_params is not None

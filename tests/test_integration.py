@@ -4,7 +4,6 @@ paper's qualitative claims."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import fed_data, server
 from repro.compress import QuantQr, TopK

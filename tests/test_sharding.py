@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs import get_spec
 from repro.configs.base import SHAPES, reduced
@@ -42,7 +42,6 @@ class TestParamSpecs:
 
     def test_big_tensors_are_sharded(self):
         """On the production mesh no parameter > 64 MiB may be replicated."""
-        import os
         mesh_devs = np.array(jax.devices()[:1]).reshape(1, 1)
         mesh = Mesh(mesh_devs, ("data", "model"))
         for arch in ("qwen2-7b", "mixtral-8x7b", "rwkv6-3b"):
