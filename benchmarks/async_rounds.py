@@ -1,0 +1,144 @@
+"""Aggregation-policy sweep (DESIGN.md §7, EXPERIMENTS.md §Async).
+
+Policy (sync / semi_sync / async_buffered) x client heterogeneity
+(uniform vs lognormal speeds) x compressor (dense vs TopK), all on
+FedComLoc-Com with the §5 sim-time cost model.  The headline metric is
+**sim_time to target accuracy**: the simulated wall-clock until the run
+first reaches 95% of the sync policy's best accuracy (same speeds, same
+compressor), plus the uplink bits spent getting there.
+
+Under lognormal (heavy-tailed) speeds one straggler sets the sync round
+clock, so ``semi_sync(K = s/2)`` — aggregate the K fastest, carry the
+rest — cuts time-to-target by far more than its per-round accuracy cost,
+and ``async_buffered`` converts the same waiting into extra
+staleness-weighted server steps.  Uniform speeds show the control: little
+to gain when there is no tail.  Writes the sweep + per-policy speedups to
+``benchmarks/artifacts/async_rounds.json`` (the committed artifact backing
+the §Async claims).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.compress import TopK
+from repro.core import server
+from repro.core.aggregation import AggregationPolicy
+from repro.core.clients import ClientProfile, ClientSchedule
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+from benchmarks import common
+
+N_CLIENTS = 20
+S = 8                      # clients sampled per round (policies divide it)
+DENSITY = 0.2
+BIT_COST = 1e-7            # sim-time per uplink bit at bandwidth 1
+TARGET_FRACTION = 0.95     # of the sync policy's best accuracy
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+POLICIES = [
+    ("sync", None),
+    ("semi_sync", AggregationPolicy.semi_sync(S // 2)),
+    # alpha=1.0: undiscounted stale flushes (alpha=0) overshoot the
+    # Scaffnew h-correction and stall; 1/(1+staleness) is the sweet spot
+    # in the EXPERIMENTS.md §Async alpha study
+    ("async_buffered", AggregationPolicy.async_buffered(S // 2, alpha=1.0)),
+]
+
+
+def _schedule(speeds: str) -> ClientSchedule:
+    if speeds == "uniform":
+        profile = ClientProfile.uniform(N_CLIENTS, lo=0.7, hi=1.4, seed=0)
+    elif speeds == "lognormal":
+        profile = ClientProfile.lognormal(N_CLIENTS, speed_sigma=1.0, seed=0)
+    else:
+        raise ValueError(speeds)
+    return ClientSchedule(profile=profile, bit_cost=BIT_COST)
+
+
+def _time_to_target(hist: server.History, target: float):
+    """(sim_time, uplink Mbits, rounds) at the first eval point reaching
+    ``target`` accuracy; None if the run never does."""
+    for i, acc in enumerate(hist.test_acc):
+        if acc >= target:
+            return (hist.sim_time[i], hist.uplink_bits[i] / 1e6,
+                    hist.rounds[i])
+    return None
+
+
+def run(fast: bool = False):
+    rounds = common.FAST_ROUNDS if fast else common.FULL_ROUNDS
+    data, model, loss_fn, eval_fn = common.mnist_setup(n_clients=N_CLIENTS)
+    speed_models = ("lognormal",) if fast else ("uniform", "lognormal")
+    compressors = (("topk", TopK(density=DENSITY)),) if fast else \
+        (("dense", None), ("topk", TopK(density=DENSITY)))
+    rows, sweeps = [], {}
+    for speeds in speed_models:
+        for comp_name, comp in compressors:
+            group = []
+            for pol_name, policy in POLICIES:
+                cfg = FedComLocConfig(gamma=0.1, p=0.1, n_clients=N_CLIENTS,
+                                      clients_per_round=S, batch_size=32,
+                                      variant="com" if comp else "none")
+                alg = FedComLoc(loss_fn, data, cfg, comp,
+                                schedule=_schedule(speeds), policy=policy)
+                t0 = time.time()
+                hist = server.run_federated(
+                    alg, model.init(jax.random.PRNGKey(0)), rounds,
+                    jax.random.PRNGKey(1), eval_fn,
+                    eval_every=max(1, rounds // 12),
+                    fuse=common.FUSE_ROUNDS)
+                wall = time.time() - t0
+                group.append({
+                    "name": f"async_rounds/{speeds}_{comp_name}_{pol_name}",
+                    "speeds": speeds, "compressor": comp_name,
+                    "policy": pol_name, "rounds": rounds,
+                    "best_acc": round(hist.best_acc, 4),
+                    "total_sim_time": round(hist.sim_time[-1], 2),
+                    "uplink_mbits": round(alg.meter.uplink_bits / 1e6, 2),
+                    "us_per_round": round(wall / rounds * 1e6, 1),
+                    "_hist": hist,
+                })
+            # target = 95% of this group's *sync* best accuracy, so every
+            # policy chases the same bar on the same data/compressor
+            target = TARGET_FRACTION * group[0]["best_acc"]
+            sync_t2t = None
+            for row in group:
+                t2t = _time_to_target(row.pop("_hist"), target)
+                row["target_acc"] = round(target, 4)
+                if t2t is None:
+                    row["sim_time_to_target"] = None
+                    row["useful"] = 0.0
+                    continue
+                row["sim_time_to_target"] = round(t2t[0], 2)
+                row["uplink_mbits_to_target"] = round(t2t[1], 2)
+                row["rounds_to_target"] = t2t[2]
+                if row["policy"] == "sync":
+                    sync_t2t = t2t[0]
+                row["speedup_vs_sync"] = (
+                    round(sync_t2t / t2t[0], 3) if sync_t2t else None)
+                row["useful"] = row["speedup_vs_sync"] or 0.0
+            rows.extend(group)
+            sweeps[f"{speeds}/{comp_name}"] = [
+                {k: v for k, v in r.items()} for r in group]
+    best_lognormal = max(
+        (r.get("speedup_vs_sync") or 0.0 for r in rows
+         if r["speeds"] == "lognormal" and r["policy"] != "sync"),
+        default=0.0)
+    ART.mkdir(parents=True, exist_ok=True)
+    # same convention as results.json (EXPERIMENTS.md §Artifacts): only a
+    # full run may overwrite the committed artifact; fast smoke runs write
+    # the .partial scratch file so they never clobber the 6.49x headline
+    name = "async_rounds.partial.json" if fast else "async_rounds.json"
+    (ART / name).write_text(json.dumps({
+        "clients_per_round": S,
+        "target_fraction": TARGET_FRACTION,
+        "best_speedup_lognormal": best_lognormal,
+        "sweep": sweeps,
+    }, indent=2))
+    return rows

@@ -34,6 +34,7 @@ MODULES = [
     "beyond_ef",
     "het_system",
     "client_scaling",
+    "async_rounds",
     "roofline",
 ]
 

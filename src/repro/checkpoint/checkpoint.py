@@ -26,6 +26,16 @@ def _flatten(tree: PyTree) -> Tuple[dict, list]:
     return arrays, treedef
 
 
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name, including the ml_dtypes extension types
+    (bfloat16, float8_*) numpy's npz format round-trips as raw void bytes."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def save(path: str | Path, tree: PyTree, meta: Optional[dict] = None) -> None:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -34,6 +44,10 @@ def save(path: str | Path, tree: PyTree, meta: Optional[dict] = None) -> None:
         "treedef": str(treedef),
         "meta": meta or {},
         "n_leaves": len(arrays),
+        # npz stores extension dtypes (bfloat16, ...) as opaque |V bytes;
+        # the manifest keeps the real names so load can view-cast back
+        "dtypes": [str(arrays[f"leaf_{i}"].dtype)
+                   for i in range(len(arrays))],
     }
     fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
     os.close(fd)
@@ -53,8 +67,13 @@ def load(path: str | Path, like: Optional[PyTree] = None
     tree is reconstructed by caller from the flat leaves)."""
     with np.load(Path(path), allow_pickle=False) as z:
         manifest = json.loads(str(z["__manifest__"]))
-        leaves = [jnp.asarray(z[f"leaf_{i}"])
-                  for i in range(manifest["n_leaves"])]
+        dtypes = manifest.get("dtypes")          # absent in old checkpoints
+        leaves = []
+        for i in range(manifest["n_leaves"]):
+            raw = z[f"leaf_{i}"]
+            if dtypes is not None and raw.dtype.kind == "V":
+                raw = raw.view(_np_dtype(dtypes[i]))
+            leaves.append(jnp.asarray(raw))
     if like is not None:
         treedef = jax.tree_util.tree_structure(like)
         return jax.tree_util.tree_unflatten(treedef, leaves), manifest["meta"]

@@ -1,0 +1,276 @@
+"""Aggregation policies: sync, semi-sync wait-for-K, FedBuff-style async.
+
+The paper's rounds are fully synchronous — every sampled client reports
+before the server moves, so one straggler sets the round clock (the §5
+``sim_time`` cost model quantifies exactly how much wall-clock that
+wastes).  This module is the event-driven answer (DESIGN.md §7): every
+round implementation runs unchanged under one of three policies on the
+``ClientSchedule`` sim-time clock:
+
+* ``sync`` — today's path, graph-for-graph unchanged: the server waits for
+  the slowest sampled client, then averages every (plan-)participant.
+* ``semi_sync(K)`` — the server aggregates as soon as the K fastest sampled
+  clients have *finished* (local phase + uplink on the sim-time clock).
+  The rest are carried as stragglers exactly like §5 deadline drops:
+  they transmit nothing this round, keep their control variates, and are
+  excluded from the server average.  ``sim_time`` is the K-th smallest
+  finish time instead of the max.  Selection uses the same sort-based
+  dynamic-k threshold semantics as the §5 TopK machinery (ties at the
+  K-th finish time are all kept), so ``K = clients_per_round`` reproduces
+  the sync policy bit-identically on every metric.
+* ``async_buffered(capacity, alpha)`` — FedBuff-style buffered
+  aggregation (Nguyen et al., 2022): client updates (deltas from the
+  broadcast anchor) arrive in finish-time order and the server flushes
+  its fixed-``capacity`` buffer every ``capacity`` arrivals, applying
+  each buffer mean scaled by the staleness weight ``w/(1+staleness)^α``
+  where an update's staleness is the number of server applications since
+  its anchor was broadcast.  One engine round = one sampled cohort =
+  ``s/capacity`` server applications, all inside the fused ``lax.scan``
+  (one jit still drives R rounds).  At ``capacity = clients_per_round``
+  there is a single flush with staleness 0, reproducing sync's metrics
+  bit-identically (params allclose: the server update is applied in
+  delta form).
+
+The cohort simplification (the buffer refills from a fresh sample each
+engine round, so staleness spans ``0..s/capacity-1``) is what keeps every
+shape static and the RNG key chain identical to the sync engine — see
+DESIGN.md §7 for why bits accounting survives buffering unchanged.
+
+Everything is computed from the *replicated* full ``(s,)`` plan/bits
+vectors with the unsharded formula, so under the §6 ``shard_map`` mesh
+the policy outcome — participation, staleness, weights, ``sim_time`` —
+is bit-identical at every device count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+MODES = ("sync", "semi_sync", "async_buffered")
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationPolicy:
+    """How the server combines one round's sampled-client updates.
+
+    ``wait_for`` (semi_sync) and ``capacity`` (async_buffered) default to
+    ``clients_per_round`` at validation time — the neutral settings that
+    reproduce the sync engine exactly.  ``alpha`` is the staleness
+    exponent of the FedBuff weight ``1/(1+staleness)^alpha``.
+    """
+
+    mode: str = "sync"
+    wait_for: Optional[int] = None     # K (semi_sync)
+    capacity: Optional[int] = None     # buffer size (async_buffered)
+    alpha: float = 0.0                 # staleness exponent (async_buffered)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.wait_for is not None and self.wait_for <= 0:
+            raise ValueError("wait_for must be positive")
+        if self.capacity is not None and self.capacity <= 0:
+            raise ValueError("capacity must be positive")
+        if self.alpha < 0:
+            raise ValueError("alpha must be non-negative")
+        if self.mode != "semi_sync" and self.wait_for is not None:
+            raise ValueError("wait_for only applies to semi_sync")
+        if self.mode != "async_buffered" and (self.capacity is not None
+                                              or self.alpha != 0.0):
+            raise ValueError("capacity/alpha only apply to async_buffered")
+
+    # -- constructors ---------------------------------------------------- #
+
+    @classmethod
+    def sync(cls) -> "AggregationPolicy":
+        return cls()
+
+    @classmethod
+    def semi_sync(cls, wait_for: int) -> "AggregationPolicy":
+        return cls(mode="semi_sync", wait_for=wait_for)
+
+    @classmethod
+    def async_buffered(cls, capacity: Optional[int] = None,
+                       alpha: float = 0.0) -> "AggregationPolicy":
+        return cls(mode="async_buffered", capacity=capacity, alpha=alpha)
+
+    # -- derived --------------------------------------------------------- #
+
+    @property
+    def is_sync(self) -> bool:
+        return self.mode == "sync"
+
+    @property
+    def may_exclude(self) -> bool:
+        """True if the policy itself can exclude a sampled client from the
+        aggregate (semi_sync stragglers) — round implementations gate the
+        control-variate/EF keep-old paths on this, exactly like §5 drops."""
+        return self.mode == "semi_sync"
+
+
+SYNC = AggregationPolicy()
+
+
+def validate_policy(policy: Optional[AggregationPolicy],
+                    clients_per_round: int) -> AggregationPolicy:
+    """Resolve ``None``/defaults against ``clients_per_round`` and check
+    realisability (host-side, at construction time)."""
+    if policy is None:
+        return SYNC
+    if not isinstance(policy, AggregationPolicy):
+        raise TypeError(f"policy must be an AggregationPolicy, got "
+                        f"{type(policy).__name__}")
+    s = clients_per_round
+    if policy.mode == "semi_sync":
+        k = s if policy.wait_for is None else policy.wait_for
+        if not (1 <= k <= s):
+            raise ValueError(
+                f"semi_sync wait_for={k} must be in [1, clients_per_round="
+                f"{s}]")
+        return dataclasses.replace(policy, wait_for=k)
+    if policy.mode == "async_buffered":
+        cap = s if policy.capacity is None else policy.capacity
+        if not (1 <= cap <= s) or s % cap != 0:
+            # the buffer flushes s/cap times per sampled cohort; a ragged
+            # final flush would need a data-dependent shape inside the scan
+            raise ValueError(
+                f"async_buffered capacity={cap} must divide "
+                f"clients_per_round={s}")
+        return dataclasses.replace(policy, capacity=cap)
+    return policy
+
+
+class PolicyOutcome(NamedTuple):
+    """One round's resolved aggregation decision (replicated (s,) vectors).
+
+    ``participating`` already folds the plan's §5 straggler mask together
+    with the policy's own exclusions; ``coef`` is the per-client weight of
+    the *delta-form* server application ``x + Σ_i coef_i·Δ_i`` (async
+    path), folding participation, the staleness weight and the per-flush
+    buffer-mean divisor; ``discount`` is the un-normalised staleness
+    weight ``partf/(1+staleness)^α`` (FedDyn-style delta *sums*).
+    """
+
+    participating: jax.Array   # (s,) bool — plan ∩ policy
+    partf: jax.Array           # (s,) f32 — participating as float
+    n_selected: jax.Array      # () f32 — partf.sum()
+    sim_time: jax.Array        # () f32 — this round's simulated wall-clock
+    finish: jax.Array          # (s,) f32 — per-client finish times
+    staleness: jax.Array       # (s,) f32 — flush index (0 for sync/semi)
+    coef: jax.Array            # (s,) f32 — delta-form aggregation weights
+    discount: jax.Array        # (s,) f32 — partf / (1+staleness)^alpha
+
+
+def apply_policy(policy: AggregationPolicy, sched, plan,
+                 client_bits_full: jax.Array) -> PolicyOutcome:
+    """Resolve one round's policy from the full replicated plan + bits.
+
+    ``client_bits_full`` is the (s,) wire cost each plan-participant would
+    transmit (0 for §5-dropped stragglers) — the uplink term of the finish
+    clock.  All inputs and outputs are replicated full vectors, so the
+    outcome is bit-identical at every §6 device count.
+    """
+    s = plan.steps.shape[0]
+    partf_plan = plan.participating.astype(jnp.float32)
+    finish = sched.finish_times(plan, client_bits_full)
+
+    if policy.mode == "semi_sync":
+        k = policy.wait_for
+        # sort-based dynamic-k threshold (same semantics as §5 TopK): the
+        # K-th smallest finish time; ties at the threshold are all kept.
+        # Only plan participants count toward K — a §5-dropped straggler
+        # never finishes or transmits, so its deadline-held finish must
+        # not crowd a real report out of the buffer (sorted last as +inf).
+        finish_eff = jnp.where(plan.participating, finish, jnp.inf)
+        kth = jnp.sort(finish_eff)[k - 1]
+        participating = (finish_eff <= kth) & plan.participating
+        partf = participating.astype(jnp.float32)
+        # fewer than K participants: every report arrives and the dropped
+        # stragglers hold the round open until the deadline (sync rule)
+        sim_time = jnp.where(jnp.isinf(kth), jnp.max(finish), kth)
+        zeros = jnp.zeros((s,), jnp.float32)
+        return PolicyOutcome(
+            participating=participating, partf=partf,
+            n_selected=partf.sum(), sim_time=sim_time, finish=finish,
+            staleness=zeros, coef=partf / jnp.maximum(partf.sum(), 1.0),
+            discount=partf)
+
+    if policy.mode == "async_buffered":
+        cap = policy.capacity
+        # arrival order on the sim-time clock; plan-dropped stragglers
+        # never arrive (sorted last via +inf) and take no buffer slot
+        finish_eff = jnp.where(plan.participating, finish, jnp.inf)
+        order = jnp.argsort(finish_eff)
+        ranks = jnp.zeros((s,), jnp.int32).at[order].set(
+            jnp.arange(s, dtype=jnp.int32))
+        flush = ranks // cap                       # which buffer flush
+        staleness = flush.astype(jnp.float32) * partf_plan
+        discount = partf_plan * jnp.power(1.0 + staleness, -policy.alpha)
+        # participants in flush j: the last flush may be part-filled when
+        # plan drops thin the cohort; each flush applies its buffer *mean*
+        n_part = partf_plan.sum()
+        n_flush = jnp.clip(n_part - flush.astype(jnp.float32) * cap,
+                           0.0, float(cap))
+        coef = discount / jnp.maximum(n_flush, 1.0)
+        return PolicyOutcome(
+            participating=plan.participating, partf=partf_plan,
+            n_selected=n_part, sim_time=jnp.max(finish), finish=finish,
+            staleness=staleness, coef=coef, discount=discount)
+
+    # sync: today's semantics, same formula graph (sim_time = max finish)
+    zeros = jnp.zeros((s,), jnp.float32)
+    return PolicyOutcome(
+        participating=plan.participating, partf=partf_plan,
+        n_selected=partf_plan.sum(), sim_time=jnp.max(finish),
+        finish=finish, staleness=zeros,
+        coef=partf_plan / jnp.maximum(partf_plan.sum(), 1.0),
+        discount=partf_plan)
+
+
+class ResolvedPolicy(NamedTuple):
+    """One round's policy outcome plus the shard-local/derived views every
+    round implementation needs — the single resolution point, so the four
+    algorithms cannot drift apart in how they consume a policy."""
+
+    out: PolicyOutcome
+    part: jax.Array        # shard-local bool participation (plan ∩ policy)
+    partf: jax.Array       # shard-local f32 participation
+    may_exclude: bool      # static: gate keep-old control-variate paths
+    client_up: jax.Array   # full (s,) applied wire bits (excluded -> 0)
+
+
+def resolve_policy(policy: AggregationPolicy, sched, plan,
+                   client_bits_full: jax.Array, ctx) -> ResolvedPolicy:
+    """``apply_policy`` + the standard derived views (shard-local masks,
+    the §5-composed ``may_exclude`` flag, and the applied per-client wire
+    cost — an excluded client's update never reaches the server)."""
+    out = apply_policy(policy, sched, plan, client_bits_full)
+    part = ctx.shard(out.participating)
+    return ResolvedPolicy(
+        out=out, part=part, partf=part.astype(jnp.float32),
+        may_exclude=sched.may_drop or policy.may_exclude,
+        client_up=client_bits_full * out.partf)
+
+
+def async_weighted_sum(out: PolicyOutcome, stacked, ctx):
+    """Staleness-weighted delta combine ``Σ_i coef_i · stacked_i`` over the
+    client axis (the async server application, in delta form).  ``stacked``
+    is shard-local under a §6 ctx; ``out.coef`` is replicated and sliced
+    here, and the cross-shard reduction is one psum."""
+    from repro.core.clients import per_client
+    coef_l = ctx.shard(out.coef)
+    return ctx.psum(jax.tree_util.tree_map(
+        lambda t: (t * per_client(coef_l, t)).sum(axis=0), stacked))
+
+
+def policy_metrics(out: PolicyOutcome) -> dict:
+    """The per-round metric entries every policy-aware round emits: the
+    staleness vector rides the §5 vector-metrics path through the fused
+    engine; ``clients_aggregated`` is the number of updates the server
+    actually applied this round."""
+    return {"client_staleness": out.staleness,
+            "clients_aggregated": out.n_selected}

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compress import Compressor, Identity, TopK, dense_bits
-from repro.core import comm
+from repro.core import aggregation, comm
 from repro.core.clients import (
     NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
     mean_over_active, per_client, tree_where, validate_schedule,
@@ -128,8 +128,10 @@ class FedAvg(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
                  compressor: Compressor | None = None,
                  schedule: ClientSchedule | None = None,
+                 policy: aggregation.AggregationPolicy | None = None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
+        self.policy = policy
         self.comp = compressor if compressor is not None else Identity()
         self.sched = validate_schedule(
             schedule if schedule is not None
@@ -152,8 +154,7 @@ class FedAvg(RoundEngine):
         plan = sched.plan(clients_full, cfg.local_steps)
         plan_l = ctx.shard_tree(plan)
         clients = ctx.shard(clients_full)
-        partf = plan_l.participating.astype(jnp.float32)
-        partf_full = plan.participating.astype(jnp.float32)
+        partf_plan_full = plan.participating.astype(jnp.float32)
         het = sched.deadline is not None
         x0 = _broadcast(state.x, s_loc)
         x_fin, loss_sum = _local_sgd(
@@ -163,12 +164,23 @@ class FedAvg(RoundEngine):
                            else cfg.local_steps)
         comp_keys = ctx.shard(jax.random.split(k_comp, s))
         x_fin, up_rep = vmap_compress(self.comp, plan_l, x_fin, comp_keys)
-        client_up = ctx.all_clients(up_rep.total_bits * partf)  # full (s,)
-        if sched.may_drop:
-            # if every sampled client dropped, the server keeps its model
-            x_new = tree_where(partf_full.sum() > 0,
+        # aggregation policy (DESIGN.md §7): plan-masked bits feed the
+        # finish clock; the outcome is replicated, device-count invariant
+        pol = aggregation.resolve_policy(
+            self.policy, sched, plan,
+            ctx.all_clients(up_rep.total_bits) * partf_plan_full, ctx)
+        out, partf, may_exclude = pol.out, pol.partf, pol.may_exclude
+        client_up = pol.client_up             # excluded clients send nothing
+        if self.policy.mode == "async_buffered":
+            delta = _tmap(lambda yf, xs: yf - xs, x_fin, x0)
+            x_new = _tmap(lambda x_, u: x_ + u, state.x,
+                          aggregation.async_weighted_sum(out, delta, ctx))
+        elif may_exclude:
+            # if every sampled client was excluded, the server keeps its
+            # model
+            x_new = tree_where(out.n_selected > 0,
                                masked_mean(x_fin, partf, ctx,
-                                           weight_sum=partf_full.sum()),
+                                           weight_sum=out.n_selected),
                                state.x)
         else:
             x_new = ctx.mean_clients(x_fin)
@@ -177,14 +189,17 @@ class FedAvg(RoundEngine):
                    "downlink_bits": jnp.asarray(s * dense_bits(state.x)),
                    "client_steps": plan.steps,
                    "client_uplink_bits": client_up,
-                   "sim_time": sched.sim_time(plan, client_up)}
+                   "client_finish": out.finish,
+                   "sim_time": out.sim_time,
+                   **aggregation.policy_metrics(out)}
         return FedAvgState(x=x_new, round=state.round + 1), metrics
 
 
 def SparseFedAvg(loss_fn, data, cfg, density: float = 0.1,
-                 schedule: ClientSchedule | None = None):
+                 schedule: ClientSchedule | None = None,
+                 policy: aggregation.AggregationPolicy | None = None):
     return FedAvg(loss_fn, data, cfg, compressor=TopK(density=density),
-                  schedule=schedule)
+                  schedule=schedule, policy=policy)
 
 
 # --------------------------------------------------------------------------- #
@@ -201,8 +216,10 @@ class ScaffoldState(NamedTuple):
 class Scaffold(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
                  schedule: ClientSchedule | None = None,
+                 policy: aggregation.AggregationPolicy | None = None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
+        self.policy = policy
         self.sched = validate_schedule(
             schedule if schedule is not None
             else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
@@ -227,9 +244,7 @@ class Scaffold(RoundEngine):
         plan = sched.plan(clients_full, cfg.local_steps)
         plan_l = ctx.shard_tree(plan)
         clients = ctx.shard(clients_full)
-        part = plan_l.participating
-        partf = part.astype(jnp.float32)
-        partf_full = plan.participating.astype(jnp.float32)
+        partf_plan_full = plan.participating.astype(jnp.float32)
         ci_s = _tmap(lambda c: c[clients], state.ci)
         x0 = _broadcast(state.x, s_loc)
 
@@ -262,9 +277,25 @@ class Scaffold(RoundEngine):
             ci_new = _tmap(
                 lambda cic, cc, xs, yf: cic - cc[None] + coef * (xs - yf),
                 ci_s, state.c, x0, x_fin)
-        if sched.may_drop:   # dropped stragglers never report; keep ci
+        # Scaffold communicates both the model and the control variate;
+        # the (plan-masked) per-client wire cost feeds the policy's
+        # finish-time clock (DESIGN.md §7).
+        dense = dense_bits(state.x)
+        pol = aggregation.resolve_policy(
+            self.policy, sched, plan, 2 * dense * partf_plan_full, ctx)
+        out, part, partf, may_exclude = (pol.out, pol.part, pol.partf,
+                                         pol.may_exclude)
+        client_up = pol.client_up
+        if may_exclude:   # excluded stragglers never report; keep ci
             ci_new = keep_where(part, ci_new, ci_s)
-            wsum = partf_full.sum()
+        if self.policy.mode == "async_buffered":
+            dx = aggregation.async_weighted_sum(
+                out, _tmap(lambda yf, xs: yf - xs, x_fin, x0), ctx)
+            dc = aggregation.async_weighted_sum(
+                out, _tmap(lambda cn, co: cn - co, ci_new, ci_s), ctx)
+            s_eff = out.n_selected
+        elif may_exclude:
+            wsum = out.n_selected
             dx = masked_mean(_tmap(lambda yf, xs: yf - xs, x_fin, x0),
                              partf, ctx, weight_sum=wsum)
             dc = masked_mean(_tmap(lambda cn, co: cn - co, ci_new, ci_s),
@@ -279,16 +310,15 @@ class Scaffold(RoundEngine):
         c_new = _tmap(lambda c_, d: c_ + (s_eff / cfg.n_clients) * d,
                       state.c, dc)
         ci_all = ctx.scatter_rows(state.ci, clients, ci_new)
-        # Scaffold communicates both the model and the control variate.
-        dense = dense_bits(state.x)
-        client_up = 2 * dense * partf_full
         metrics = {"train_loss": loss,
-                   "uplink_bits": (client_up.sum() if sched.may_drop
+                   "uplink_bits": (client_up.sum() if may_exclude
                                    else jnp.asarray(2 * s * dense)),
                    "downlink_bits": jnp.asarray(2 * s * dense),
                    "client_steps": plan.steps,
                    "client_uplink_bits": client_up,
-                   "sim_time": sched.sim_time(plan, client_up)}
+                   "client_finish": out.finish,
+                   "sim_time": out.sim_time,
+                   **aggregation.policy_metrics(out)}
         return (ScaffoldState(x=x_new, c=c_new, ci=ci_all,
                               round=state.round + 1), metrics)
 
@@ -307,8 +337,10 @@ class FedDynState(NamedTuple):
 class FedDyn(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
                  schedule: ClientSchedule | None = None,
+                 policy: aggregation.AggregationPolicy | None = None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
+        self.policy = policy
         self.sched = validate_schedule(
             schedule if schedule is not None
             else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
@@ -333,9 +365,7 @@ class FedDyn(RoundEngine):
         plan = sched.plan(clients_full, cfg.local_steps)
         plan_l = ctx.shard_tree(plan)
         clients = ctx.shard(clients_full)
-        part = plan_l.participating
-        partf = part.astype(jnp.float32)
-        partf_full = plan.participating.astype(jnp.float32)
+        partf_plan_full = plan.participating.astype(jnp.float32)
         g_s = _tmap(lambda g: g[clients], state.grads)
         x0 = _broadcast(state.x, s_loc)
 
@@ -352,12 +382,34 @@ class FedDyn(RoundEngine):
                                      ctx=ctx)
         loss = loss_sum / (jnp.maximum(plan.steps.max(), 1) if het
                            else cfg.local_steps)
+        dense = dense_bits(state.x)
+        pol = aggregation.resolve_policy(
+            self.policy, sched, plan, dense * partf_plan_full, ctx)
+        out, part, partf, may_exclude = (pol.out, pol.part, pol.partf,
+                                         pol.may_exclude)
+        client_up = pol.client_up
         g_new = _tmap(lambda gp, yf, xs: gp - cfg.alpha * (yf - xs),
                       g_s, x_fin, x0)
-        if sched.may_drop:   # dropped stragglers keep their dual variables
+        if may_exclude:   # excluded stragglers keep their dual variables
             g_new = keep_where(part, g_new, g_s)
         grads_all = ctx.scatter_rows(state.grads, clients, g_new)
-        if sched.may_drop:
+        if self.policy.mode == "async_buffered":
+            # the server correction absorbs the staleness-discounted delta
+            # *sum*; the average applies the per-flush buffer means
+            disc = ctx.shard(out.discount)
+            deltas = _tmap(lambda yf, xs: yf - xs, x_fin, x0)
+            dsum = ctx.psum(_tmap(
+                lambda d_: (d_ * per_client(disc, d_)).sum(axis=0), deltas))
+            h_new = _tmap(
+                lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients) * d_,
+                state.h, dsum)
+            x_new = _tmap(
+                lambda x_, u, h_: x_ + u - h_ / cfg.alpha, state.x,
+                aggregation.async_weighted_sum(out, deltas, ctx), h_new)
+            if sched.may_drop:
+                # if every sampled client dropped, keep the server model
+                x_new = tree_where(out.n_selected > 0, x_new, state.x)
+        elif may_exclude:
             # only participants' deltas feed the server correction/average
             delta = ctx.sum_clients(_tmap(
                 lambda yf, xs: (yf - xs) * per_client(partf, yf),
@@ -367,9 +419,9 @@ class FedDyn(RoundEngine):
                 state.h, delta)
             x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
                           masked_mean(x_fin, partf, ctx,
-                                      weight_sum=partf_full.sum()), h_new)
-            # if every sampled client dropped, the server keeps its model
-            x_new = tree_where(partf_full.sum() > 0, x_new, state.x)
+                                      weight_sum=out.n_selected), h_new)
+            # if every sampled client was excluded, keep the server model
+            x_new = tree_where(out.n_selected > 0, x_new, state.x)
         else:
             dsum = ctx.sum_clients(_tmap(lambda yf, xs: yf - xs,
                                          x_fin, x0))
@@ -378,14 +430,14 @@ class FedDyn(RoundEngine):
                 state.h, dsum)
             x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
                           ctx.mean_clients(x_fin), h_new)
-        dense = dense_bits(state.x)
-        client_up = dense * partf_full
         metrics = {"train_loss": loss,
-                   "uplink_bits": (client_up.sum() if sched.may_drop
+                   "uplink_bits": (client_up.sum() if may_exclude
                                    else jnp.asarray(s * dense)),
                    "downlink_bits": jnp.asarray(s * dense),
                    "client_steps": plan.steps,
                    "client_uplink_bits": client_up,
-                   "sim_time": sched.sim_time(plan, client_up)}
+                   "client_finish": out.finish,
+                   "sim_time": out.sim_time,
+                   **aggregation.policy_metrics(out)}
         return (FedDynState(x=x_new, h=h_new, grads=grads_all,
                             round=state.round + 1), metrics)

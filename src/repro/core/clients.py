@@ -221,15 +221,22 @@ class ClientSchedule:
                          speed=speed, bandwidth=bandwidth,
                          comp_overrides=overrides)
 
-    def sim_time(self, plan: RoundPlan, client_uplink_bits) -> jax.Array:
-        """Round wall-clock in the sim cost model: wait for the slowest."""
+    def finish_times(self, plan: RoundPlan, client_uplink_bits) -> jax.Array:
+        """Per-client finish times (s,) on the sim clock: local phase plus
+        uplink.  This is the event clock the aggregation policies order
+        arrivals by (DESIGN.md §7); its max is the synchronous round
+        wall-clock."""
         compute = plan.steps.astype(jnp.float32) * self.step_cost / plan.speed
         if self.deadline is not None and self.drop_stragglers:
             # a dropped straggler holds the round until the deadline
             compute = jnp.where(plan.participating, compute, self.deadline)
         comm = (jnp.asarray(client_uplink_bits, jnp.float32) * self.bit_cost
                 / plan.bandwidth)
-        return jnp.max(compute + comm)
+        return compute + comm
+
+    def sim_time(self, plan: RoundPlan, client_uplink_bits) -> jax.Array:
+        """Round wall-clock in the sim cost model: wait for the slowest."""
+        return jnp.max(self.finish_times(plan, client_uplink_bits))
 
 
 # --------------------------------------------------------------------------- #

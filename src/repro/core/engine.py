@@ -18,6 +18,11 @@ then provides the two execution modes:
 
 Both record into ``self.meter`` (a :class:`repro.core.comm.CommMeter`), so
 histories and bits-axes are identical whichever driver ran.
+
+``set_policy`` binds one of the three aggregation policies (DESIGN.md §7:
+``sync`` / ``semi_sync(K)`` / ``async_buffered``); the round
+implementations read ``self.policy`` at trace time, so both drivers — and
+the ``shard_map`` mesh path — run the same policy-resolved graph.
 """
 
 from __future__ import annotations
@@ -34,10 +39,32 @@ class RoundEngine:
     """Mixin: host-stepped ``round`` + fused ``run_rounds`` over _round_impl."""
 
     def _setup_engine(self) -> None:
+        from repro.core import aggregation
+        self.policy = aggregation.validate_policy(
+            getattr(self, "policy", None), self.cfg.clients_per_round)
         self._mesh = None
         self._impl = self._round_impl
         self._round = jax.jit(self._impl)
         self._fused_cache: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------------ #
+
+    def set_policy(self, policy) -> "RoundEngine":
+        """Bind an aggregation policy (DESIGN.md §7) — ``None`` = sync.
+
+        ``_round_impl`` reads ``self.policy`` at trace time, so rebinding
+        to a *different* policy clears the jit caches (like ``use_mesh``);
+        rebinding the policy already bound is a no-op.  Returns ``self``.
+        """
+        from repro.core import aggregation
+        policy = aggregation.validate_policy(
+            policy, self.cfg.clients_per_round)
+        if policy == self.policy:
+            return self
+        self.policy = policy
+        self._round = jax.jit(self._impl)
+        self._fused_cache = {}
+        return self
 
     # ------------------------------------------------------------------ #
 

@@ -23,7 +23,9 @@ round's metrics carry the exact uplink/downlink wire cost of the payloads
 produced that round — per-client TopK nnz, per-tensor Q_r norms, and under
 error feedback the bits of the *transmitted innovation*, not the dense
 model.  Rounds run either one-jit-per-round (``round``) or fused R-per-jit
-(``run_rounds``, inherited from :class:`repro.core.engine.RoundEngine`).
+(``run_rounds``, inherited from :class:`repro.core.engine.RoundEngine`),
+under any of the three aggregation policies (``sync`` / ``semi_sync(K)`` /
+``async_buffered`` — repro.core.aggregation, DESIGN.md §7).
 
 State layout: the server model ``x`` is stored once (all clients restart a
 round from the broadcast model); control variates ``h`` are stacked with a
@@ -39,7 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compress import Compressor, Identity, dense_bits
-from repro.core import comm
+from repro.core import aggregation, comm
 from repro.core.clients import (
     NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
     mean_over_active, per_client, tree_where, validate_schedule,
@@ -112,10 +114,12 @@ class FedComLoc(RoundEngine):
                  config: FedComLocConfig,
                  compressor: Compressor | None = None,
                  schedule: ClientSchedule | None = None,
+                 policy: aggregation.AggregationPolicy | None = None,
                  meter_mode: str = "host"):
         self.loss_fn = loss_fn
         self.data = data
         self.cfg = config
+        self.policy = policy
         self.comp = compressor if compressor is not None else Identity()
         if config.variant == "none" and not isinstance(self.comp, Identity):
             raise ValueError('variant="none" requires the Identity compressor')
@@ -165,9 +169,7 @@ class FedComLoc(RoundEngine):
         plan = sched.plan(clients_full, num_steps)
         plan_l = ctx.shard_tree(plan)
         clients = ctx.shard(clients_full)
-        part = plan_l.participating
-        partf = part.astype(jnp.float32)
-        partf_full = plan.participating.astype(jnp.float32)
+        partf_plan_full = plan.participating.astype(jnp.float32)
         ov_names = sched.comp_override_names
         ov_vals = [plan_l.comp_overrides[n] for n in ov_names]
 
@@ -218,6 +220,7 @@ class FedComLoc(RoundEngine):
         up_bits = jnp.asarray(s * dense)
         down_bits = jnp.asarray(s * dense)
         e_new = state.e
+        innov = sent = e_s = None
         if cfg.variant == "com":
             up_keys = ctx.shard(jax.random.split(k_up, s))
             if cfg.error_feedback:
@@ -233,14 +236,6 @@ class FedComLoc(RoundEngine):
                     x_hat, state.x, e_s)
                 sent, up_rep = vmap_compress(self.comp, plan_l, innov,
                                              up_keys)
-                # leaky memory: undecayed EF diverges inside Scaffnew (the
-                # residual integrates against the control variates — see the
-                # EXPERIMENTS.md §Beyond decay study); 0.7 is the sweet spot.
-                e_s_new = jax.tree_util.tree_map(
-                    lambda c, snt: cfg.ef_decay * (c - snt), innov, sent)
-                if sched.may_drop:    # a dropped client never transmitted
-                    e_s_new = keep_where(part, e_s_new, e_s)
-                e_new = ctx.scatter_rows(state.e, clients, e_s_new)
                 x_hat = jax.tree_util.tree_map(
                     lambda x0_, snt: x0_[None] + snt, state.x, sent)
             else:
@@ -248,14 +243,43 @@ class FedComLoc(RoundEngine):
                                               up_keys)
             client_up = up_rep.total_bits      # (s_loc,) — vmap axis on leaves
             up_bits = None                     # recomputed from client_up
-        client_up = ctx.all_clients(client_up * partf)   # full (s,) exact
-        if up_bits is None or sched.may_drop:
+
+        # --- aggregation policy (DESIGN.md §7) --------------------------- #
+        # The full (s,) bits each plan-participant would transmit feed the
+        # finish-time clock; the policy outcome (participation, staleness,
+        # weights, sim_time) is computed replicated, so it is bit-identical
+        # at every §6 device count.
+        pol = aggregation.resolve_policy(
+            self.policy, sched, plan,
+            ctx.all_clients(client_up) * partf_plan_full, ctx)
+        out, part, partf, may_exclude = (pol.out, pol.part, pol.partf,
+                                         pol.may_exclude)
+        client_up = pol.client_up             # excluded clients send nothing
+        if up_bits is None or may_exclude:
             up_bits = client_up.sum()
-        if sched.may_drop:
-            # if every sampled client dropped, the server keeps its model
-            x_bar = tree_where(partf_full.sum() > 0,
+        if cfg.variant == "com" and cfg.error_feedback:
+            # leaky memory: undecayed EF diverges inside Scaffnew (the
+            # residual integrates against the control variates — see the
+            # EXPERIMENTS.md §Beyond decay study); 0.7 is the sweet spot.
+            e_s_new = jax.tree_util.tree_map(
+                lambda c, snt: cfg.ef_decay * (c - snt), innov, sent)
+            if may_exclude:    # an excluded client never transmitted
+                e_s_new = keep_where(part, e_s_new, e_s)
+            e_new = ctx.scatter_rows(state.e, clients, e_s_new)
+        if self.policy.mode == "async_buffered":
+            # FedBuff server application in delta form: each buffer flush
+            # applies its staleness-discounted mean of anchor deltas
+            delta = jax.tree_util.tree_map(
+                lambda xh, x0_: xh - x0_[None], x_hat, state.x)
+            x_bar = jax.tree_util.tree_map(
+                lambda x0_, u: x0_ + u, state.x,
+                aggregation.async_weighted_sum(out, delta, ctx))
+        elif may_exclude:
+            # if every sampled client was excluded, the server keeps its
+            # model
+            x_bar = tree_where(out.n_selected > 0,
                                masked_mean(x_hat, partf, ctx,
-                                           weight_sum=partf_full.sum()),
+                                           weight_sum=out.n_selected),
                                state.x)
         else:
             x_bar = ctx.mean_clients(x_hat)
@@ -269,7 +293,7 @@ class FedComLoc(RoundEngine):
         h_s_new = jax.tree_util.tree_map(
             lambda h, xh, xb_: h + (cfg.p / cfg.gamma) * (xb_[None] - xh),
             h_s, x_hat, x_bar)
-        if sched.may_drop:   # a dropped client keeps its control variate
+        if may_exclude:   # an excluded client keeps its control variate
             h_s_new = keep_where(part, h_s_new, h_s)
         h_new = ctx.scatter_rows(state.h, clients, h_s_new)
 
@@ -291,7 +315,9 @@ class FedComLoc(RoundEngine):
             "downlink_bits": down_bits,
             "client_steps": plan.steps,           # (s,) per-client schedule
             "client_uplink_bits": client_up,      # (s,) exact per-client wire
-            "sim_time": sched.sim_time(plan, client_up),
+            "client_finish": out.finish,          # (s,) sim-clock arrivals
+            "sim_time": out.sim_time,
+            **aggregation.policy_metrics(out),
         }
         return (FedComLocState(x=x_bar, h=h_new, round=state.round + 1,
                                e=e_new, mom=mom_new), metrics)

@@ -78,6 +78,7 @@ def run_federated(
     log_prefix: str = "",
     fuse: bool = True,
     mesh: Optional[Any] = None,
+    policy: Optional[Any] = None,
 ) -> History:
     """Drive ``algorithm`` (anything with .init/.round/.meter) for R rounds.
 
@@ -91,9 +92,13 @@ def run_federated(
     ``mesh`` (a ``jax.sharding.Mesh`` with a ``clients`` axis — see
     ``repro.launch.mesh.make_client_mesh``) binds the algorithm's rounds to
     the client-sharded ``shard_map`` path (DESIGN.md §6) before driving.
+    ``policy`` (a ``repro.core.aggregation.AggregationPolicy``) rebinds the
+    aggregation policy (DESIGN.md §7) the same way.
     """
     if mesh is not None:
         algorithm.use_mesh(mesh)
+    if policy is not None:
+        algorithm.set_policy(policy)
     state = algorithm.init(params0)
     hist = History()
     t0 = time.time()

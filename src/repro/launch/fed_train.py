@@ -63,6 +63,30 @@ class FedTrainConfig:
     # (jax dense collectives otherwise move full-width zeros; §Perf H3).
     # Requires compressor="quant" with quant_bits <= 7 magnitude bits.
     sync_mode: str = "dense"        # dense | int8
+    # Aggregation policy (DESIGN.md §7).  The pod-as-client round IS one
+    # cross-pod collective, so only "sync" is executable here; the
+    # event-driven policies (semi_sync / async_buffered) live in the
+    # simulator layer (repro.core.aggregation).  Parsed + validated via
+    # aggregation_policy() so launch configs fail fast, not at build time.
+    aggregation: str = "sync"       # sync | semi_sync | async_buffered
+    wait_for: int | None = None     # K (semi_sync)
+    buffer_capacity: int | None = None   # buffer size (async_buffered)
+    staleness_alpha: float = 0.0    # staleness exponent (async_buffered)
+
+    def aggregation_policy(self):
+        """The config's aggregation policy as a validated core object.
+
+        All policy fields are forwarded so the core's cross-field checks
+        fire: a knob that doesn't belong to the selected mode (e.g.
+        ``wait_for`` under ``aggregation="sync"``) raises instead of being
+        silently discarded.
+        """
+        from repro.core.aggregation import AggregationPolicy
+        if self.aggregation not in ("sync", "semi_sync", "async_buffered"):
+            raise ValueError(f"unknown aggregation {self.aggregation!r}")
+        return AggregationPolicy(
+            mode=self.aggregation, wait_for=self.wait_for,
+            capacity=self.buffer_capacity, alpha=self.staleness_alpha)
 
 
 def make_compressor(fed: FedTrainConfig) -> cx.Compressor:
@@ -90,6 +114,12 @@ def build_fed_round(spec: ArchSpec, shape: InputShape, mesh: Mesh,
     """
     if "pod" not in mesh.axis_names:
         raise ValueError("fed_train requires a multi-pod mesh")
+    if not fed.aggregation_policy().is_sync:
+        raise ValueError(
+            f'aggregation={fed.aggregation!r}: the pod-as-client round is a '
+            f'single cross-pod collective, so only "sync" is executable '
+            f'here; run event-driven policies through the simulator '
+            f'(repro.core.aggregation, DESIGN.md §7)')
     n_clients = mesh.shape["pod"]
     m = spec.model
     b_local = shape.global_batch // n_clients

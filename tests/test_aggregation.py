@@ -1,0 +1,426 @@
+"""Aggregation policies (DESIGN.md §7): sync / semi_sync(K) / async_buffered.
+
+Contracts:
+
+* **Neutral-settings equivalence** — ``semi_sync(K = clients_per_round)``
+  and ``async_buffered(capacity = clients_per_round, alpha = 0)``
+  reproduce the sync engine's metrics **bit-identically** (params allclose;
+  the async server update is applied in delta form) for all four
+  algorithms, composed with §5 straggler schedules, EF, and the §6
+  ``shard_map`` mesh at every realisable shard count;
+* **Semi-sync semantics** — the server waits for the K-th smallest finish
+  time (``sim_time`` drops accordingly); excluded stragglers transmit
+  nothing, keep their control variates, and are excluded from the average;
+* **Async semantics** — arrivals ordered by finish time, one staleness
+  level per buffer flush, weights ``1/(1+staleness)^alpha``, uplink bits
+  unchanged (buffering permutes application order, never payloads);
+* validation fails fast on unrealisable policies.
+
+Runs on the single-device path by default; under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI matrix's
+second leg) the mesh sweep covers 1/2/4/8-way sharding.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import TopK
+from repro.core import fed_data, server
+from repro.core.aggregation import AggregationPolicy, validate_policy
+from repro.core.baselines import FedAvg, FedConfig, FedDyn, Scaffold
+from repro.core.clients import ClientProfile, ClientSchedule
+from repro.core.distributed import usable_shard_counts
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+from repro.launch.mesh import make_client_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_CLIENTS, DIM, S, ROUNDS = 8, 6, 4, 4
+
+# every metric except the trajectory-dependent loss is structural
+# accounting and must survive the policy change bit-for-bit
+APPROX_METRICS = ("train_loss",)
+
+
+def quadratic_data(n_clients=N_CLIENTS, d=DIM, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n_clients, d))
+    b = rng.normal(size=(n_clients,))
+    reps = 8
+    x = np.repeat(A, reps, axis=0).astype(np.float32)
+    y = np.repeat(b, reps).astype(np.float32)
+    parts = [np.arange(i * reps, (i + 1) * reps) for i in range(n_clients)]
+    return fed_data.from_numpy_partition(x, y, parts)
+
+
+def sq_loss(params, xb, yb):
+    return 0.5 * jnp.mean((xb @ params["w"] - yb) ** 2)
+
+
+DATA = quadratic_data()
+P0 = {"w": jnp.zeros((DIM,), jnp.float32)}
+
+NEUTRAL = [
+    ("semi_sync", AggregationPolicy.semi_sync(S)),
+    ("async_buffered", AggregationPolicy.async_buffered(S, 0.0)),
+]
+
+
+def lognormal_schedule(*, drop=False):
+    return ClientSchedule(
+        profile=ClientProfile.lognormal(N_CLIENTS, speed_sigma=1.0, seed=3),
+        deadline=3.0 if drop else None, drop_stragglers=drop, bit_cost=1e-6)
+
+
+def build(name, policy=None):
+    if name.startswith("fedcomloc"):
+        cfg = FedComLocConfig(gamma=0.05, p=0.2, n_clients=N_CLIENTS,
+                              clients_per_round=S, batch_size=4,
+                              variant="com",
+                              error_feedback=name == "fedcomloc_ef")
+        sched = lognormal_schedule(drop=name == "fedcomloc_drop")
+        return FedComLoc(sq_loss, DATA, cfg, TopK(density=0.5),
+                         schedule=sched, policy=policy)
+    fed = FedConfig(gamma=0.05, local_steps=5, n_clients=N_CLIENTS,
+                    clients_per_round=S, batch_size=4)
+    sched = lognormal_schedule(drop=name == "fedavg_drop")
+    if name.startswith("fedavg"):
+        return FedAvg(sq_loss, DATA, fed, TopK(density=0.5),
+                      schedule=sched, policy=policy)
+    if name == "scaffold":
+        return Scaffold(sq_loss, DATA, fed, schedule=sched, policy=policy)
+    if name == "feddyn":
+        return FedDyn(sq_loss, DATA, fed, schedule=sched, policy=policy)
+    raise ValueError(name)
+
+
+ALGORITHMS = ["fedcomloc", "fedcomloc_ef", "fedcomloc_drop",
+              "fedavg", "fedavg_drop", "scaffold", "feddyn"]
+
+
+def run_fused(alg, rounds=ROUNDS, seed=9):
+    state, metrics = alg.run_rounds(alg.init(P0), jax.random.PRNGKey(seed),
+                                    rounds)
+    return state, metrics
+
+
+@pytest.fixture(scope="module")
+def sync_refs():
+    return {name: run_fused(build(name)) for name in ALGORITHMS}
+
+
+def assert_matches_sync(m_ref, st_ref, m, st, label):
+    for k in m_ref:
+        if k in APPROX_METRICS:
+            np.testing.assert_allclose(m_ref[k], m[k], rtol=1e-5,
+                                       atol=1e-7, err_msg=f"{label} {k}")
+        else:
+            np.testing.assert_array_equal(m_ref[k], m[k],
+                                          err_msg=f"{label} {k}")
+    # params are allclose, not bit-identical: the policy paths aggregate
+    # via masked/delta forms whose reductions XLA may fuse differently
+    np.testing.assert_allclose(np.asarray(st_ref.x["w"]),
+                               np.asarray(st.x["w"]),
+                               rtol=1e-5, atol=1e-6,
+                               err_msg=f"{label} params")
+
+
+# --------------------------------------------------------------------------- #
+# 1. Neutral settings reproduce sync — every algorithm, every shard count
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", ALGORITHMS)
+@pytest.mark.parametrize("pol_name,policy", NEUTRAL)
+def test_neutral_policy_matches_sync(name, pol_name, policy, sync_refs):
+    st_ref, m_ref = sync_refs[name]
+    st, m = run_fused(build(name, policy))
+    assert_matches_sync(m_ref, st_ref, m, st, f"{name}/{pol_name}")
+
+
+@pytest.mark.parametrize("pol_name,policy", NEUTRAL)
+def test_neutral_policy_matches_sync_on_mesh(pol_name, policy, sync_refs):
+    """Policy x §6 mesh cross-product: metrics bit-identical to the
+    unsharded sync reference at every realisable device count."""
+    for name in ("fedcomloc", "fedcomloc_drop", "feddyn"):
+        st_ref, m_ref = sync_refs[name]
+        for n_shards in usable_shard_counts(S):
+            alg = build(name, policy).use_mesh(make_client_mesh(n_shards))
+            st, m = run_fused(alg)
+            assert_matches_sync(m_ref, st_ref, m, st,
+                                f"{name}/{pol_name} D={n_shards}")
+
+
+@pytest.mark.parametrize("policy", [
+    AggregationPolicy.semi_sync(2),
+    AggregationPolicy.async_buffered(2, 0.5),
+])
+def test_non_neutral_policies_device_count_invariant(policy):
+    """Non-neutral policies: metrics bit-identical across shard counts
+    (the policy outcome is computed from replicated full vectors)."""
+    ref = None
+    for n_shards in usable_shard_counts(S):
+        alg = build("fedcomloc", policy).use_mesh(make_client_mesh(n_shards))
+        st, m = run_fused(alg)
+        if ref is None:
+            ref = (st, m)
+            continue
+        for k in m:
+            if k in APPROX_METRICS:
+                np.testing.assert_allclose(ref[1][k], m[k], rtol=1e-5,
+                                           atol=1e-7, err_msg=k)
+            else:
+                np.testing.assert_array_equal(ref[1][k], m[k], err_msg=k)
+        np.testing.assert_allclose(np.asarray(ref[0].x["w"]),
+                                   np.asarray(st.x["w"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_policy_matches_per_round_driver():
+    """Both drivers agree under a non-neutral policy (same key chain)."""
+    policy = AggregationPolicy.async_buffered(2, 0.5)
+    alg_a, alg_b = build("fedcomloc", policy), build("fedcomloc", policy)
+    sb, fused = run_fused(alg_b)
+    state = alg_a.init(P0)
+    key = jax.random.PRNGKey(9)
+    for r in range(ROUNDS):
+        key, sub = jax.random.split(key)
+        state, m = alg_a.round(state, sub)
+        assert m["uplink_bits"] == float(fused["uplink_bits"][r])
+        np.testing.assert_array_equal(m["client_staleness"],
+                                      fused["client_staleness"][r])
+    np.testing.assert_array_equal(np.asarray(state.x["w"]),
+                                  np.asarray(sb.x["w"]))
+    assert alg_a.meter.snapshot() == alg_b.meter.snapshot()
+
+
+# --------------------------------------------------------------------------- #
+# 2. Semi-sync semantics
+# --------------------------------------------------------------------------- #
+
+def test_semi_sync_waits_for_kth_finish(sync_refs):
+    """sim_time == K-th smallest finish; the K fastest aggregate, the rest
+    transmit nothing."""
+    k = 2
+    _, m = run_fused(build("fedcomloc", AggregationPolicy.semi_sync(k)))
+    _, m_sync = sync_refs["fedcomloc"]
+    for r in range(ROUNDS):
+        finish = np.sort(np.asarray(m["client_finish"][r]))
+        assert m["sim_time"][r] == finish[k - 1]
+        assert m["clients_aggregated"][r] == k      # generic float finishes
+        bits = np.asarray(m["client_uplink_bits"][r])
+        assert (bits == 0).sum() == S - k
+        assert m["uplink_bits"][r] == bits.sum()
+    # the server stops waiting for the tail: never slower than sync
+    assert (m["sim_time"] <= m_sync["sim_time"] + 1e-6).all()
+    assert m["sim_time"].sum() < 0.7 * m_sync["sim_time"].sum()
+
+
+def test_semi_sync_excluded_clients_keep_control_variates():
+    """An excluded straggler must look exactly like a §5 dropped one:
+    untouched h, no uplink payload."""
+    n, d = 5, 6
+    data = quadratic_data(n, d)
+    speed = np.ones(n, np.float32)
+    speed[0] = 1e-3                       # client 0 always finishes last
+    sched = ClientSchedule(
+        profile=ClientProfile(speed=jnp.asarray(speed),
+                              bandwidth=jnp.ones((n,), jnp.float32)))
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=n, batch_size=4, variant="com")
+    alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.5), schedule=sched,
+                    policy=AggregationPolicy.semi_sync(n - 1))
+    state = alg.init({"w": jnp.zeros((d,), jnp.float32)})
+    state, m = alg.round(state, jax.random.PRNGKey(0))
+    finish = np.asarray(m["client_finish"])
+    bits = np.asarray(m["client_uplink_bits"])
+    assert bits[np.argmax(finish)] == 0.0         # the slow client sent 0
+    assert m["clients_aggregated"] == n - 1
+    h = np.asarray(state.h["w"])                  # rows follow client ids
+    assert np.all(h[0] == 0.0)                    # variate untouched
+    assert np.all(np.any(h[1:] != 0.0, axis=1))
+
+
+def test_semi_sync_with_drops_counts_only_real_reports():
+    """A §5-dropped straggler never finishes, so its deadline-held finish
+    must not crowd a real report out of the K-fastest selection.  Two
+    clients drop at deadline=2.0 while the three participants' uplink
+    pushes their finish past it: semi_sync(2) must still aggregate 2
+    *real* updates, at the 2nd participant arrival on the clock."""
+    n, d = 5, 8
+    data = quadratic_data(n, d)
+    speed = np.asarray([1e-3, 1e-3, 1.0, 1.2, 1.4], np.float32)
+    sched = ClientSchedule(
+        profile=ClientProfile(speed=jnp.asarray(speed),
+                              bandwidth=jnp.full((n,), 0.01, jnp.float32)),
+        deadline=2.0, drop_stragglers=True, bit_cost=1e-1)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=n, batch_size=4, variant="com")
+    alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.5), schedule=sched,
+                    policy=AggregationPolicy.semi_sync(2))
+    state = alg.init({"w": jnp.ones((d,), jnp.float32)})
+    state, m = alg.round(state, jax.random.PRNGKey(0))
+    assert (np.asarray(m["client_steps"]) == 0).sum() == 2   # 2 dropped
+    assert m["clients_aggregated"] == 2.0                    # 2 real reports
+    bits = np.asarray(m["client_uplink_bits"])
+    assert (bits > 0).sum() == 2
+    # the clock stops at the 2nd-fastest *participant* arrival, which is
+    # later than the dropped clients' deadline-held 2.0
+    finish = np.asarray(m["client_finish"])
+    part_finish = np.sort(finish[np.asarray(m["client_steps"]) > 0])
+    assert m["sim_time"] == part_finish[1] > 2.0
+    # the server moved (participants were aggregated, not the empty set)
+    assert not np.allclose(np.asarray(state.x["w"]), 1.0)
+
+
+def test_semi_sync_fewer_participants_than_k_holds_to_deadline():
+    """K larger than the surviving cohort: every real report is applied
+    and the dropped stragglers hold the round until the deadline."""
+    n, d = 4, 6
+    data = quadratic_data(n, d)
+    speed = np.asarray([1e-3, 1e-3, 1e-3, 1.0], np.float32)
+    sched = ClientSchedule(
+        profile=ClientProfile(speed=jnp.asarray(speed),
+                              bandwidth=jnp.ones((n,), jnp.float32)),
+        deadline=10.0, drop_stragglers=True)
+    cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=n,
+                          clients_per_round=n, batch_size=4, variant="com")
+    alg = FedComLoc(sq_loss, data, cfg, TopK(density=0.5), schedule=sched,
+                    policy=AggregationPolicy.semi_sync(3))
+    state, m = alg.round(alg.init(P0), jax.random.PRNGKey(0))
+    assert (np.asarray(m["client_steps"]) == 0).sum() == 3
+    assert m["clients_aggregated"] == 1.0     # the one real report applied
+    assert m["sim_time"] == pytest.approx(10.0)   # deadline-held round
+
+
+def test_semi_sync_ties_all_kept():
+    """Homogeneous finishes: threshold semantics keeps every tie at the
+    K-th finish, so K < s degenerates to sync (all arrive together)."""
+    alg_k = build("fedavg", AggregationPolicy.semi_sync(2))
+    alg_k.sched = dataclasses.replace(
+        alg_k.sched, profile=ClientProfile.homogeneous(N_CLIENTS))
+    _, m = run_fused(alg_k)
+    np.testing.assert_array_equal(np.asarray(m["clients_aggregated"]),
+                                  np.full((ROUNDS,), float(S)))
+
+
+# --------------------------------------------------------------------------- #
+# 3. Async-buffered semantics
+# --------------------------------------------------------------------------- #
+
+def test_async_staleness_levels_follow_arrival_order():
+    """capacity=2 of s=4: the 2 earliest arrivals flush at staleness 0,
+    the next 2 at staleness 1; uplink bits match sync exactly."""
+    policy = AggregationPolicy.async_buffered(2, 0.5)
+    _, m = run_fused(build("fedcomloc", policy))
+    _, m_sync = run_fused(build("fedcomloc"))
+    for r in range(ROUNDS):
+        finish = np.asarray(m["client_finish"][r])
+        stale = np.asarray(m["client_staleness"][r])
+        order = np.argsort(finish)
+        np.testing.assert_array_equal(stale[order], [0.0, 0.0, 1.0, 1.0])
+    # buffering never changes what is on the wire
+    np.testing.assert_array_equal(m["uplink_bits"], m_sync["uplink_bits"])
+    np.testing.assert_array_equal(m["client_uplink_bits"],
+                                  m_sync["client_uplink_bits"])
+    np.testing.assert_array_equal(m["sim_time"], m_sync["sim_time"])
+
+
+def test_async_server_applies_staleness_weighted_flushes():
+    """Exact weighting algebra.  With capacity=2 of s=4 the server step is
+    ``mean_0 + 2^{-alpha} * mean_1`` (flush means, staleness weights
+    ``(1+j)^{-alpha}``).  Two alphas pin down mean_0/mean_1 — the model at
+    any third alpha must then be fully determined."""
+
+    def step(alpha):
+        alg = build("fedavg", AggregationPolicy.async_buffered(2, alpha))
+        state, _ = alg.round(alg.init(P0), jax.random.PRNGKey(5))
+        return np.asarray(state.x["w"], np.float64)
+
+    s0, s1 = step(0.0), step(1.0)             # mean0+mean1, mean0+mean1/2
+    mean1 = 2.0 * (s0 - s1)
+    mean0 = s0 - mean1
+    np.testing.assert_allclose(step(2.0), mean0 + 0.25 * mean1,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_async_alpha_zero_applies_full_cohort():
+    """alpha=0 with capacity<s: every flush at weight 1, so the server
+    takes s/capacity buffer-mean steps — from x0 = 0 with equal flush
+    sizes, exactly twice the single sync step."""
+    st_sync, _ = run_fused(build("fedavg"), rounds=1)
+    st, _ = run_fused(
+        build("fedavg", AggregationPolicy.async_buffered(2, 0.0)), rounds=1)
+    np.testing.assert_allclose(np.asarray(st.x["w"]),
+                               2.0 * np.asarray(st_sync.x["w"]),
+                               rtol=1e-5, atol=1e-7)
+
+
+# --------------------------------------------------------------------------- #
+# 4. Plumbing: server driver, engine rebinding, validation
+# --------------------------------------------------------------------------- #
+
+def test_run_federated_accepts_policy():
+    alg = build("fedcomloc")
+    hist = server.run_federated(
+        alg, P0, num_rounds=3, key=jax.random.PRNGKey(2),
+        policy=AggregationPolicy.semi_sync(2))
+    assert alg.policy.mode == "semi_sync"
+    assert alg.meter.rounds == 3
+    assert hist.final_params is not None
+
+
+def test_set_policy_rebinds_and_is_idempotent():
+    alg = build("fedcomloc")
+    assert alg.policy.is_sync
+    fused = alg._fused(2)
+    assert alg.set_policy(None) is alg          # no-op: cache kept
+    assert alg._fused(2) is fused
+    alg.set_policy(AggregationPolicy.semi_sync(2))
+    assert alg._fused(2) is not fused           # caches cleared
+    st, m = run_fused(alg)
+    assert (np.asarray(m["clients_aggregated"]) == 2.0).all()
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="wait_for"):
+        validate_policy(AggregationPolicy.semi_sync(S + 1), S)
+    with pytest.raises(ValueError, match="divide"):
+        validate_policy(AggregationPolicy.async_buffered(3), S)
+    with pytest.raises(ValueError, match="mode"):
+        AggregationPolicy(mode="nope")
+    with pytest.raises(ValueError):
+        AggregationPolicy(mode="sync", capacity=2)
+    with pytest.raises(ValueError):
+        AggregationPolicy(mode="async_buffered", alpha=-1.0)
+    with pytest.raises(TypeError):
+        validate_policy("semi_sync", S)
+    # defaults resolve to the neutral settings
+    assert validate_policy(
+        AggregationPolicy.async_buffered(), S).capacity == S
+    assert validate_policy(
+        AggregationPolicy(mode="semi_sync"), S).wait_for == S
+    # constructor-level validation fires through the algorithms too
+    with pytest.raises(ValueError, match="divide"):
+        build("fedcomloc", AggregationPolicy.async_buffered(3))
+
+
+def test_launch_config_policy_validation():
+    from repro.launch import fed_train
+    fed = fed_train.FedTrainConfig(aggregation="semi_sync", wait_for=2)
+    assert fed.aggregation_policy().mode == "semi_sync"
+    with pytest.raises(ValueError, match="unknown aggregation"):
+        fed_train.FedTrainConfig(aggregation="nope").aggregation_policy()
+    # stray knobs for a different mode fail fast, never silently drop
+    with pytest.raises(ValueError, match="wait_for"):
+        fed_train.FedTrainConfig(aggregation="sync",
+                                 wait_for=4).aggregation_policy()
+    with pytest.raises(ValueError, match="capacity"):
+        fed_train.FedTrainConfig(aggregation="semi_sync", wait_for=2,
+                                 buffer_capacity=2).aggregation_policy()
+    with pytest.raises(ValueError, match="wait_for"):
+        fed_train.FedTrainConfig(aggregation="async_buffered",
+                                 wait_for=2).aggregation_policy()

@@ -4,6 +4,11 @@ Covers operator semantics AND the exact in-graph bit accounting: every
 ``compress`` returns ``(tree, BitsReport)`` whose totals must equal the
 hand-computed paper formulas — (32+32)*nnz for TopK, (1+r)*n + 32/tensor
 for Q_r, (32+1+r)*nnz + 32 for the double compression.
+
+The property checks are plain functions driven two ways: a random
+hypothesis search when the optional dep is installed, and an always-on
+seeded parameter sweep — so the properties execute (not skip) in
+no-hypothesis environments and CI legs too.
 """
 
 import jax
@@ -11,9 +16,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="optional dep: property tests need hypothesis")
-st = pytest.importorskip("hypothesis.strategies")
+try:                       # optional dep: widens, never gates, the sweep
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:        # pragma: no cover - exercised on clean envs
+    hypothesis = st = None
 
 from repro.compress import (
     BitsReport, Compose, Identity, Int8Sync, QuantQr, TopK, available,
@@ -26,6 +33,53 @@ def tree_of(key, shapes):
     keys = jax.random.split(key, len(shapes))
     return {f"p{i}": jax.random.normal(k, s)
             for i, (k, s) in enumerate(zip(keys, shapes))}
+
+
+# --------------------------------------------------------------------------- #
+# Property bodies — shared by the hypothesis search and the seeded sweeps
+# --------------------------------------------------------------------------- #
+
+def check_best_k_approx(n, density, seed):
+    """TopK(x) is the best ||.||-approximation among k-sparse vectors:
+    the kept set has magnitudes >= every dropped one."""
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+    out = np.asarray(TopK(density=density).apply(
+        {"a": jnp.asarray(x)})["a"])
+    kept = np.abs(x[out != 0])
+    dropped = np.abs(x[out == 0])
+    if kept.size and dropped.size:
+        assert kept.min() >= dropped.max() - 1e-7
+    # kept values pass through unchanged
+    np.testing.assert_allclose(out[out != 0], x[out != 0])
+
+
+def check_topk_bits_formula(n, density, seed):
+    """BitsReport total == (32 + 32) * nnz of the actual mask."""
+    x = {"a": jax.random.normal(jax.random.PRNGKey(seed), (n,))}
+    out, rep = TopK(density=density).compress(x)
+    nnz = int((out["a"] != 0).sum())
+    assert float(rep.value_bits) == nnz * 32
+    assert float(rep.index_bits) == nnz * 32
+    assert float(rep.total_bits) == nnz * (32 + 32)
+
+
+def check_quant_error_bound(r, seed):
+    """|Q_r(x)_i - x_i| <= ||x|| / 2^r componentwise."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    out, _ = QuantQr(r=r).compress({"a": x}, jax.random.PRNGKey(seed + 1))
+    err = np.abs(np.asarray(out["a"]) - np.asarray(x))
+    bound = float(jnp.linalg.norm(x)) / 2 ** r + 1e-5
+    assert err.max() <= bound
+
+
+def check_quant_bits_formula(r, n_tensors, seed):
+    """BitsReport total == (1 + r) * n + 32 per tensor norm."""
+    shapes = [(8 * (i + 1),) for i in range(n_tensors)]
+    x = tree_of(jax.random.PRNGKey(seed), shapes)
+    n = sum(v.size for v in x.values())
+    _, rep = QuantQr(r=r).compress(x, jax.random.PRNGKey(seed + 1))
+    assert float(rep.total_bits) == n * (1 + r) + n_tensors * 32
+    assert QuantQr(r=r).expected_bits(x) == n * (1 + r) + n_tensors * 32
 
 
 class TestTopK:
@@ -65,34 +119,19 @@ class TestTopK:
         nnz = int((out["a"] != 0).sum())
         assert float(rep.total_bits) == nnz * 64
 
-    @hypothesis.given(
-        st.integers(10, 300), st.floats(0.05, 1.0),
-        st.integers(0, 2**31 - 1))
-    @hypothesis.settings(max_examples=30, deadline=None)
-    def test_best_k_approx_property(self, n, density, seed):
-        """TopK(x) is the best ||.||-approximation among k-sparse vectors:
-        the kept set has magnitudes >= every dropped one."""
-        x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
-        out = np.asarray(TopK(density=density).apply(
-            {"a": jnp.asarray(x)})["a"])
-        kept = np.abs(x[out != 0])
-        dropped = np.abs(x[out == 0])
-        if kept.size and dropped.size:
-            assert kept.min() >= dropped.max() - 1e-7
-        # kept values pass through unchanged
-        np.testing.assert_allclose(out[out != 0], x[out != 0])
+    @pytest.mark.parametrize("seed", range(6))
+    @pytest.mark.parametrize("n,density", [
+        (10, 0.05), (17, 0.3), (100, 0.1), (128, 0.5), (300, 1.0),
+    ])
+    def test_best_k_approx_seeded(self, n, density, seed):
+        check_best_k_approx(n, density, seed)
 
-    @hypothesis.given(st.integers(16, 200), st.floats(0.05, 0.9),
-                      st.integers(0, 2**31 - 1))
-    @hypothesis.settings(max_examples=30, deadline=None)
-    def test_bits_equal_nnz_formula(self, n, density, seed):
-        """BitsReport total == (32 + 32) * nnz of the actual mask."""
-        x = {"a": jax.random.normal(jax.random.PRNGKey(seed), (n,))}
-        out, rep = TopK(density=density).compress(x)
-        nnz = int((out["a"] != 0).sum())
-        assert float(rep.value_bits) == nnz * 32
-        assert float(rep.index_bits) == nnz * 32
-        assert float(rep.total_bits) == nnz * (32 + 32)
+    @pytest.mark.parametrize("seed", range(6))
+    @pytest.mark.parametrize("n,density", [
+        (16, 0.05), (33, 0.25), (100, 0.5), (200, 0.9),
+    ])
+    def test_bits_equal_nnz_formula_seeded(self, n, density, seed):
+        check_topk_bits_formula(n, density, seed)
 
     def test_expected_bits(self):
         x = {"a": jnp.zeros((1000,))}
@@ -129,27 +168,17 @@ class TestQuantQr:
             acc += np.asarray(comp.apply(x, k)["a"])
         np.testing.assert_allclose(acc / len(keys), x["a"], atol=0.02)
 
-    @hypothesis.given(st.integers(1, 10), st.integers(0, 2**31 - 1))
-    @hypothesis.settings(max_examples=25, deadline=None)
-    def test_error_bound(self, r, seed):
-        """|Q_r(x)_i - x_i| <= ||x|| / 2^r componentwise."""
-        x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
-        out, _ = QuantQr(r=r).compress({"a": x}, jax.random.PRNGKey(seed + 1))
-        err = np.abs(np.asarray(out["a"]) - np.asarray(x))
-        bound = float(jnp.linalg.norm(x)) / 2 ** r + 1e-5
-        assert err.max() <= bound
+    @pytest.mark.parametrize("seed", range(5))
+    @pytest.mark.parametrize("r", [1, 2, 4, 8, 10])
+    def test_error_bound_seeded(self, r, seed):
+        check_quant_error_bound(r, seed)
 
-    @hypothesis.given(st.integers(1, 12), st.integers(1, 4),
-                      st.integers(0, 2**31 - 1))
-    @hypothesis.settings(max_examples=25, deadline=None)
-    def test_bits_equal_formula(self, r, n_tensors, seed):
-        """BitsReport total == (1 + r) * n + 32 per tensor norm."""
-        shapes = [(8 * (i + 1),) for i in range(n_tensors)]
-        x = tree_of(jax.random.PRNGKey(seed), shapes)
-        n = sum(v.size for v in x.values())
-        _, rep = QuantQr(r=r).compress(x, jax.random.PRNGKey(seed + 1))
-        assert float(rep.total_bits) == n * (1 + r) + n_tensors * 32
-        assert QuantQr(r=r).expected_bits(x) == n * (1 + r) + n_tensors * 32
+    @pytest.mark.parametrize("seed", range(5))
+    @pytest.mark.parametrize("r,n_tensors", [
+        (1, 1), (4, 2), (8, 3), (12, 4),
+    ])
+    def test_bits_equal_formula_seeded(self, r, n_tensors, seed):
+        check_quant_bits_formula(r, n_tensors, seed)
 
     def test_bits_fewer_than_dense(self):
         x = {"a": jnp.zeros((1000,))}
@@ -229,3 +258,35 @@ def test_registry_extension():
     assert isinstance(make_compressor("test-noop"), Noop)
     with pytest.raises(ValueError):
         register("test-noop", Noop)
+
+
+# --------------------------------------------------------------------------- #
+# Hypothesis widening of the seeded sweeps (optional dep)
+# --------------------------------------------------------------------------- #
+
+if hypothesis is not None:
+
+    class TestProperties:
+        @hypothesis.given(
+            st.integers(10, 300), st.floats(0.05, 1.0),
+            st.integers(0, 2**31 - 1))
+        @hypothesis.settings(max_examples=30, deadline=None)
+        def test_best_k_approx_property(self, n, density, seed):
+            check_best_k_approx(n, density, seed)
+
+        @hypothesis.given(st.integers(16, 200), st.floats(0.05, 0.9),
+                          st.integers(0, 2**31 - 1))
+        @hypothesis.settings(max_examples=30, deadline=None)
+        def test_bits_equal_nnz_formula(self, n, density, seed):
+            check_topk_bits_formula(n, density, seed)
+
+        @hypothesis.given(st.integers(1, 10), st.integers(0, 2**31 - 1))
+        @hypothesis.settings(max_examples=25, deadline=None)
+        def test_error_bound(self, r, seed):
+            check_quant_error_bound(r, seed)
+
+        @hypothesis.given(st.integers(1, 12), st.integers(1, 4),
+                          st.integers(0, 2**31 - 1))
+        @hypothesis.settings(max_examples=25, deadline=None)
+        def test_bits_equal_formula(self, r, n_tensors, seed):
+            check_quant_bits_formula(r, n_tensors, seed)

@@ -1,12 +1,19 @@
-"""Data pipeline: Dirichlet partitioning properties + synthetic datasets."""
+"""Data pipeline: Dirichlet partitioning properties + synthetic datasets.
+
+The partition-cover property runs as an always-on seeded sweep; hypothesis
+(optional dep) only widens the search — it never gates the module, so the
+non-property tests execute on clean environments too.
+"""
 
 import jax
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="optional dep: property tests need hypothesis")
-st = pytest.importorskip("hypothesis.strategies")
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:        # pragma: no cover - exercised on clean envs
+    hypothesis = st = None
 
 from repro.core import fed_data
 from repro.data import dirichlet, synthetic
@@ -14,18 +21,23 @@ from repro.data import dirichlet, synthetic
 jax.config.update("jax_platform_name", "cpu")
 
 
+def check_partition_is_exact_cover(n_clients, alpha, seed):
+    labels = np.random.default_rng(seed).integers(0, 10, size=500)
+    parts = dirichlet.dirichlet_partition(labels, n_clients, alpha,
+                                          seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500          # no dup, no loss
+    assert all(len(p) >= 1 for p in parts)
+
+
 class TestDirichlet:
-    @hypothesis.given(st.integers(2, 20), st.floats(0.05, 10.0),
-                      st.integers(0, 1000))
-    @hypothesis.settings(max_examples=20, deadline=None)
-    def test_partition_is_exact_cover(self, n_clients, alpha, seed):
-        labels = np.random.default_rng(seed).integers(0, 10, size=500)
-        parts = dirichlet.dirichlet_partition(labels, n_clients, alpha,
-                                              seed=seed)
-        allidx = np.concatenate(parts)
-        assert len(allidx) == 500
-        assert len(np.unique(allidx)) == 500          # no dup, no loss
-        assert all(len(p) >= 1 for p in parts)
+    @pytest.mark.parametrize("seed", range(5))
+    @pytest.mark.parametrize("n_clients,alpha", [
+        (2, 0.05), (5, 0.5), (10, 1.0), (20, 10.0),
+    ])
+    def test_partition_is_exact_cover_seeded(self, n_clients, alpha, seed):
+        check_partition_is_exact_cover(n_clients, alpha, seed)
 
     def test_alpha_controls_heterogeneity(self):
         """Smaller alpha -> each client more concentrated on few classes."""
@@ -91,3 +103,13 @@ class TestSynthetic:
         toks = synthetic.make_lm_tokens(vocab=256, n_seqs=8, seq_len=64)
         assert toks.shape == (8, 64)
         assert toks.min() >= 0 and toks.max() < 256
+
+
+if hypothesis is not None:
+
+    class TestDirichletProperties:
+        @hypothesis.given(st.integers(2, 20), st.floats(0.05, 10.0),
+                          st.integers(0, 1000))
+        @hypothesis.settings(max_examples=20, deadline=None)
+        def test_partition_is_exact_cover(self, n_clients, alpha, seed):
+            check_partition_is_exact_cover(n_clients, alpha, seed)

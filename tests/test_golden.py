@@ -1,0 +1,140 @@
+"""Golden-trace regression tests: committed fixed-seed trajectories.
+
+``tests/golden/<algorithm>_<policy>.json`` holds a tiny 3-round metrics
+trajectory (fused ``run_rounds``, fixed seeds, lognormal client speeds)
+for all four algorithms x the three aggregation policies (DESIGN.md §7).
+Future refactors cannot silently shift the bit accounting, the RNG key
+chain, the straggler schedule or the policy semantics: any such change
+trips an exact comparison here and must be accompanied by a deliberate
+trace regeneration:
+
+    PYTHONPATH=src python tests/test_golden.py --write
+
+Per-metric tolerances: counting/accounting metrics (steps, bits,
+staleness, participation) compare **exactly**; sim-clock metrics compare
+at rtol 1e-6 (pure arithmetic on exact inputs); the trajectory-dependent
+``train_loss`` at rtol 2e-4 (XLA may re-fuse reductions across versions).
+"""
+
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import TopK
+from repro.core import fed_data
+from repro.core.aggregation import AggregationPolicy
+from repro.core.baselines import FedAvg, FedConfig, FedDyn, Scaffold
+from repro.core.clients import ClientProfile, ClientSchedule
+from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+N, D, S, ROUNDS, SEED = 6, 8, 4, 3, 123
+
+# metric -> (rtol, atol); None = exact
+TOLERANCES = {
+    "train_loss": (2e-4, 1e-6),
+    "sim_time": (1e-6, 0.0),
+    "client_finish": (1e-6, 0.0),
+}
+
+POLICIES = {
+    "sync": None,
+    "semi_sync": AggregationPolicy.semi_sync(2),
+    "async_buffered": AggregationPolicy.async_buffered(2, 0.5),
+}
+
+
+def quadratic_data():
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(N, D))
+    b = rng.normal(size=(N,))
+    reps = 8
+    x = np.repeat(A, reps, axis=0).astype(np.float32)
+    y = np.repeat(b, reps).astype(np.float32)
+    parts = [np.arange(i * reps, (i + 1) * reps) for i in range(N)]
+    return fed_data.from_numpy_partition(x, y, parts)
+
+
+def sq_loss(params, xb, yb):
+    return 0.5 * jnp.mean((xb @ params["w"] - yb) ** 2)
+
+
+def schedule():
+    return ClientSchedule(
+        profile=ClientProfile.lognormal(N, speed_sigma=1.0, seed=3),
+        bit_cost=1e-6)
+
+
+def build(algorithm, policy_name):
+    data, policy = quadratic_data(), POLICIES[policy_name]
+    if algorithm == "fedcomloc":
+        cfg = FedComLocConfig(gamma=0.05, p=0.25, n_clients=N,
+                              clients_per_round=S, batch_size=4,
+                              variant="com")
+        return FedComLoc(sq_loss, data, cfg, TopK(density=0.5),
+                         schedule=schedule(), policy=policy)
+    fed = FedConfig(gamma=0.05, local_steps=4, n_clients=N,
+                    clients_per_round=S, batch_size=4)
+    cls = {"fedavg": FedAvg, "scaffold": Scaffold, "feddyn": FedDyn}[algorithm]
+    kw = {"compressor": TopK(density=0.5)} if algorithm == "fedavg" else {}
+    return cls(sq_loss, data, fed, schedule=schedule(), policy=policy, **kw)
+
+
+def trace(algorithm, policy_name) -> dict:
+    alg = build(algorithm, policy_name)
+    state = alg.init({"w": jnp.zeros((D,), jnp.float32)})
+    _, metrics = alg.run_rounds(state, jax.random.PRNGKey(SEED), ROUNDS)
+    return {k: np.asarray(v, np.float64).tolist()
+            for k, v in sorted(metrics.items())}
+
+
+ALGORITHMS = ("fedcomloc", "fedavg", "scaffold", "feddyn")
+CASES = [(a, p) for a in ALGORITHMS for p in POLICIES]
+
+
+@pytest.mark.parametrize("algorithm,policy_name", CASES)
+def test_matches_golden_trace(algorithm, policy_name):
+    path = GOLDEN_DIR / f"{algorithm}_{policy_name}.json"
+    assert path.exists(), (
+        f"missing golden trace {path.name}; regenerate with "
+        f"`PYTHONPATH=src python tests/test_golden.py --write`")
+    golden = json.loads(path.read_text())
+    assert golden["rounds"] == ROUNDS
+    live = trace(algorithm, policy_name)
+    assert sorted(live) == sorted(golden["metrics"]), (
+        "metric set changed — regenerate the golden traces deliberately")
+    for k, want in golden["metrics"].items():
+        got = np.asarray(live[k], np.float64)
+        tol = TOLERANCES.get(k)
+        if tol is None:
+            np.testing.assert_array_equal(
+                got, np.asarray(want), err_msg=f"{path.name} metric {k}")
+        else:
+            np.testing.assert_allclose(
+                got, np.asarray(want), rtol=tol[0], atol=tol[1],
+                err_msg=f"{path.name} metric {k}")
+
+
+def write_golden() -> None:
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    for algorithm, policy_name in CASES:
+        path = GOLDEN_DIR / f"{algorithm}_{policy_name}.json"
+        path.write_text(json.dumps(
+            {"algorithm": algorithm, "policy": policy_name,
+             "rounds": ROUNDS, "seed": SEED,
+             "metrics": trace(algorithm, policy_name)},
+            indent=1, sort_keys=True) + "\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    if "--write" not in sys.argv:
+        sys.exit("usage: PYTHONPATH=src python tests/test_golden.py --write")
+    write_golden()

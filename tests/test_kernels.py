@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (flash_attention as fa, quantize, ref,
+from repro.kernels import (flash_attention as fa, ops, quantize, ref,
                            rglru_scan as rg, topk_compress, wkv6)
 
 jax.config.update("jax_platform_name", "cpu")
@@ -46,6 +46,57 @@ def test_topk_dtypes(dtype):
 
 
 # --------------------------------------------------------------------------- #
+# Sort-based dynamic-k TopK (traced k, DESIGN.md §5) vs the static oracle
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("n,k", [
+    # the edges the static sweep above misses: k=0 (clamped to 1, a TopK
+    # payload is never empty), k=n (dense: every entry kept), and their
+    # neighbours
+    (128, 0), (128, 1), (128, 127), (128, 128), (333, 0), (333, 333),
+])
+def test_topk_dynamic_k_edges_match_static(n, k):
+    x = jax.random.normal(jax.random.PRNGKey(n + k), (n,))
+    want = ref.topk_mask(x, min(max(k, 1), n))     # documented clamp
+    got = ref.topk_mask_dynamic(x, jnp.asarray(k, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    # the ops dispatcher must route a traced k onto the same path
+    via_ops = ops.topk_mask(x, jnp.asarray(k, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(via_ops))
+
+
+def test_topk_dynamic_k_equals_full_input_at_k_n():
+    """k = n is the dense payload: the mask keeps every entry, x == out."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (257,))
+    out = ref.topk_mask_dynamic(x, jnp.asarray(257, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(out))
+
+
+@pytest.mark.parametrize("k", [0, 7, 77, 777])
+def test_topk_dynamic_bf16_matches_static(k):
+    """bf16 inputs round many magnitudes onto ties; both paths use
+    threshold semantics on the same k-th value, so the masks agree."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (777,)).astype(jnp.bfloat16)
+    want = ref.topk_mask(x, min(max(k, 1), 777))
+    got = ref.topk_mask_dynamic(x, jnp.asarray(k, jnp.int32))
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(want, np.float32),
+                                  np.asarray(got, np.float32))
+
+
+def test_topk_dynamic_under_vmap_per_client_k():
+    """One vmapped call with per-client k values, edges included, equals
+    the per-row static masks (the §5 per-client density machinery)."""
+    xs = jax.random.normal(jax.random.PRNGKey(5), (4, 64))
+    ks = jnp.asarray([0, 1, 32, 64], jnp.int32)
+    got = jax.vmap(ref.topk_mask_dynamic)(xs, ks)
+    for i, k in enumerate([0, 1, 32, 64]):
+        want = ref.topk_mask(xs[i], min(max(k, 1), 64))
+        np.testing.assert_array_equal(np.asarray(want),
+                                      np.asarray(got[i]), err_msg=f"k={k}")
+
+
+# --------------------------------------------------------------------------- #
 # QSGD quantization
 # --------------------------------------------------------------------------- #
 
@@ -65,6 +116,28 @@ def test_quantize_zero_vector():
     u = jnp.full((256,), 0.5)
     b = quantize.quantize_qr_with_uniforms(x, 4, u, interpret=True)
     np.testing.assert_array_equal(np.asarray(b), 0.0)
+
+
+@pytest.mark.parametrize("r", [1, 4])
+def test_quantize_traced_r_matches_static(r):
+    """The §5 per-client override path traces r; at the same key it must
+    be bit-identical to the static-r oracle — r=1 (binary sign levels) is
+    the edge where 2**r arithmetic differences would show first."""
+    x = jax.random.normal(jax.random.PRNGKey(r), (513,))
+    key = jax.random.PRNGKey(r + 1)
+    want = ref.quantize_qr(x, r, key)
+    got = ops.quantize_qr(x, jnp.asarray(r, jnp.int32), key)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_quantize_r1_values_on_sign_grid():
+    """r=1 payloads live on the 2-level grid {0, ±norm/2, ±norm}."""
+    x = jax.random.normal(jax.random.PRNGKey(9), (256,))
+    out = np.asarray(ref.quantize_qr(x, 1, jax.random.PRNGKey(10)))
+    norm = float(jnp.linalg.norm(x))
+    levels = np.abs(out) / norm * 2
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-5)
+    assert levels.max() <= 2 + 1e-6
 
 
 # --------------------------------------------------------------------------- #
