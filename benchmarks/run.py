@@ -35,6 +35,7 @@ MODULES = [
     "het_system",
     "client_scaling",
     "async_rounds",
+    "wire_formats",
     "roofline",
 ]
 

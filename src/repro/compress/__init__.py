@@ -16,10 +16,13 @@ from repro.compress.compressors import (
     Compose, Compressor, Identity, Int8Sync, QuantQr, TopK)
 from repro.compress.registry import available, make_compressor, register
 from repro.compress.report import (
-    FLOAT_BITS, INDEX_BITS, BitsReport, dense_bits, dense_report, zero_report)
+    FLOAT_BITS, INDEX_BITS, BitsReport, dense_bits, dense_report,
+    leaf_value_bits, zero_report)
+from repro.compress import wire
 
 __all__ = [
     "BitsReport", "Compose", "Compressor", "FLOAT_BITS", "INDEX_BITS",
     "Identity", "Int8Sync", "QuantQr", "TopK", "available", "dense_bits",
-    "dense_report", "make_compressor", "register", "zero_report",
+    "dense_report", "leaf_value_bits", "make_compressor", "register",
+    "wire", "zero_report",
 ]

@@ -44,7 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compress.report import (
-    FLOAT_BITS, INDEX_BITS, BitsReport, dense_report)
+    FLOAT_BITS, INDEX_BITS, BitsReport, dense_bits, dense_report,
+    leaf_value_bits)
 from repro.kernels import ops as kops
 
 PyTree = Any
@@ -58,6 +59,18 @@ def _nnz(tree: PyTree) -> jax.Array:
     """In-graph nonzero count over all leaves (the transmitted support)."""
     return sum(jnp.sum(x != 0).astype(jnp.float32)
                for x in jax.tree_util.tree_leaves(tree))
+
+
+def _sparse_report(out: PyTree) -> BitsReport:
+    """(value + index) bits of a sparse payload, per leaf and in-graph:
+    each kept coordinate costs the leaf dtype's width (bf16 values ship 16
+    bits, fp32 ship 32) plus INDEX_BITS, nnz counted from the actual mask."""
+    vb = ib = 0.0
+    for x in jax.tree_util.tree_leaves(out):
+        nnz = jnp.sum(x != 0).astype(jnp.float32)
+        vb = vb + nnz * leaf_value_bits(x)
+        ib = ib + nnz * INDEX_BITS
+    return BitsReport(value_bits=vb, index_bits=ib)
 
 
 def _map_flat_global(tree: PyTree, fn) -> PyTree:
@@ -127,17 +140,19 @@ class Identity(Compressor):
         return tree, dense_report(tree)
 
     def expected_bits(self, tree: PyTree) -> float:
-        return float(_tree_size(tree)) * FLOAT_BITS
+        return dense_bits(tree)
 
 
 @dataclasses.dataclass(frozen=True)
 class TopK(Compressor):
     """Keep the ``density`` fraction of largest-|.| entries (Def. 3.1).
 
-    Bits: (FLOAT_BITS + INDEX_BITS) per coordinate of the *actual* support —
-    counted in-graph from the mask, so ties kept by threshold semantics and
-    already-zero inputs (error-feedback innovations) are accounted exactly.
-    At ``density >= 1`` the payload is dense and no indices are sent.
+    Bits: (leaf dtype width + INDEX_BITS) per coordinate of the *actual*
+    support — counted in-graph from the mask, so ties kept by threshold
+    semantics and already-zero inputs (error-feedback innovations) are
+    accounted exactly, and bf16 leaves ship 16-bit values (fp32 the
+    FLOAT_BITS default).  At ``density >= 1`` the payload is dense and no
+    indices are sent.
     """
 
     density: float = 0.1
@@ -192,9 +207,7 @@ class TopK(Compressor):
                 out = _map_flat_global(tree, self._mask_one)
             else:
                 out = jax.tree_util.tree_map(self._mask_one, tree)
-            nnz = _nnz(out)
-            return out, BitsReport(value_bits=nnz * FLOAT_BITS,
-                                   index_bits=nnz * INDEX_BITS)
+            return out, _sparse_report(out)
         # Traced density (DESIGN.md §5): same threshold semantics, but the
         # k / quantile is a traced function of ``density``, so one vmapped
         # compress batches per-client settings.  Bits stay exact per call:
@@ -206,18 +219,23 @@ class TopK(Compressor):
             out = _map_flat_global(tree, mask)
         else:
             out = jax.tree_util.tree_map(mask, tree)
-        nnz = _nnz(out)
-        n = float(_tree_size(tree))
+        sparse = _sparse_report(out)
         return out, BitsReport(
-            value_bits=jnp.where(d >= 1.0, n * FLOAT_BITS, nnz * FLOAT_BITS),
-            index_bits=jnp.where(d >= 1.0, 0.0, nnz * INDEX_BITS))
+            value_bits=jnp.where(d >= 1.0, dense_bits(tree),
+                                 sparse.value_bits),
+            index_bits=jnp.where(d >= 1.0, 0.0, sparse.index_bits))
 
     def expected_bits(self, tree: PyTree) -> float:
         if self.density >= 1.0:
-            return float(_tree_size(tree)) * FLOAT_BITS
+            return dense_bits(tree)
         if self.scope == "global":
-            return float(self._k(_tree_size(tree))) * (FLOAT_BITS + INDEX_BITS)
-        return float(sum(self._k(x.size) * (FLOAT_BITS + INDEX_BITS)
+            # where the k survivors land is data-dependent; estimate value
+            # width with the size-weighted mean leaf width (exact for
+            # single-dtype trees)
+            n = _tree_size(tree)
+            avg_vb = dense_bits(tree) / n
+            return float(self._k(n)) * (avg_vb + INDEX_BITS)
+        return float(sum(self._k(x.size) * (leaf_value_bits(x) + INDEX_BITS)
                          for x in jax.tree_util.tree_leaves(tree)))
 
 

@@ -26,8 +26,18 @@ import jax.numpy as jnp
 
 Scalar = Union[float, jax.Array]
 
-FLOAT_BITS = 32  # uncompressed scalar payload, as accounted in the paper
+FLOAT_BITS = 32  # uncompressed fp32 scalar payload, as accounted in the paper
 INDEX_BITS = 32  # index payload for sparse (value, index) encoding
+
+
+def leaf_value_bits(x: Any) -> int:
+    """Wire bits of one raw scalar of ``x``'s dtype (bf16 -> 16, fp32 -> 32).
+
+    Dense and TopK payloads transmit values at the leaf's own width; the
+    fp32 default is :data:`FLOAT_BITS`.  Accepts anything with a ``dtype``
+    (arrays and ShapeDtypeStructs alike).
+    """
+    return jnp.dtype(x.dtype).itemsize * 8
 
 
 @jax.tree_util.register_pytree_node_class
@@ -86,12 +96,14 @@ def zero_report() -> BitsReport:
 
 
 def dense_report(tree: Any) -> BitsReport:
-    """Bits to send ``tree`` uncompressed: FLOAT_BITS per scalar."""
-    n = sum(x.size for x in jax.tree_util.tree_leaves(tree))
-    return BitsReport(value_bits=float(n) * FLOAT_BITS)
+    """Bits to send ``tree`` uncompressed: the leaf dtype's width per
+    scalar (``leaf_value_bits`` — 32 for fp32, 16 for bf16)."""
+    return BitsReport(value_bits=float(
+        sum(x.size * leaf_value_bits(x)
+            for x in jax.tree_util.tree_leaves(tree))))
 
 
 def dense_bits(tree: Any) -> float:
     """Host-side scalar shortcut for ``dense_report(tree).total_bits``."""
-    n = sum(x.size for x in jax.tree_util.tree_leaves(tree))
-    return float(n) * FLOAT_BITS
+    return float(sum(x.size * leaf_value_bits(x)
+                     for x in jax.tree_util.tree_leaves(tree)))

@@ -1,0 +1,440 @@
+"""Wire codec layer: real packed payloads for compressed trees (DESIGN.md §8).
+
+The operators in :mod:`repro.compress.compressors` are *transforms* — they
+return a dense pytree whose zeros/levels merely *represent* the compressed
+message, plus a :class:`BitsReport` stating what the payload would cost.
+This module is the second layer the tentpole splits out: a **wire codec**
+whose ``encode(comp, tree, rng) -> (Payload, BitsReport)`` produces the
+physically packed buffers a collective actually moves, and whose
+``decode(payload)`` reconstructs the transform's output on the server side.
+
+Codecs (one per supported operator; ``check_supported`` names the mapping):
+
+* ``dense``   — ``Identity`` (and ``TopK(density >= 1)``): raw values at the
+  leaf dtype's width.
+* ``topk``    — ``TopK(impl="select")``: per unit, a static-capacity
+  ``cap = k(density)`` array of ``uint32`` indices plus ``cap`` values at
+  the leaf dtype.  Empty slots (input support smaller than ``cap``, e.g.
+  error-feedback innovations) carry the sentinel index ``n`` and are
+  dropped by the decode scatter.  The static-capacity rule is what keeps
+  payload shapes jit-stable inside the fused ``lax.scan``; magnitude ties
+  beyond ``cap`` (measure-zero for continuous data) keep the lowest-index
+  ``cap`` and drop the rest.
+* ``qr``      — ``QuantQr``: one (1+r)-bit code per scalar — sign bit plus
+  r level bits — bit-plane packed into ``uint32`` words by the
+  :mod:`repro.kernels` pack kernels, plus one fp32 norm per unit.  The top
+  level ``2**r`` (reachable only when one coordinate holds > ``(1-2^-r)²``
+  of the unit's energy) saturates to ``2**r - 1`` — the same rule
+  ``Int8Sync`` applies at 127; everywhere else the decode is bit-identical
+  to the transform.
+* ``topk_qr`` — ``Compose(TopK, QuantQr)``: indices as in ``topk``, the
+  survivors' quantizer codes packed as in ``qr``, one norm per unit.
+* ``int8``    — ``Int8Sync``: its existing int8-level + per-tensor-scale
+  format, expressed on this API (the launch layer consumes it here).
+
+``scope="tensor"`` codecs emit one *unit* per leaf; ``scope="global"``
+flattens the tree to a single unit first (packing at the promoted dtype —
+on mixed-dtype trees this is an extra, undocumented-elsewhere slack
+source vs the per-leaf-width accounting; single-dtype trees are exact),
+exactly mirroring the transforms.  The returned ``BitsReport`` is computed
+the same way the transform computes it, so account-only and wire rounds
+see identical bit metrics; ``Payload.nbytes`` is the *measured* packed
+size, and ``padding_bits`` exposes the (documented, bounded) slack between
+the two: empty sparse slots at ``(INDEX_BITS + value width)`` each, plus
+``< 32 * (1+r)`` bits of word padding per packed-code unit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.compressors import (
+    Compose, Compressor, Identity, Int8Sync, QuantQr, TopK)
+from repro.compress.report import (
+    FLOAT_BITS, INDEX_BITS, BitsReport, dense_report)
+from repro.kernels import ops as kops
+
+PyTree = Any
+
+#: Widest supported quantizer: codes must stay float32-exact integers and
+#: fit a uint32 word with their sign bit.
+MAX_R = 16
+
+
+# --------------------------------------------------------------------------- #
+# Payload
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Static (hashable) description of a packed payload — everything the
+    decoder needs: codec, tree structure, per-leaf shapes/dtypes, the
+    static sparse capacities, and the per-client packed byte count."""
+
+    codec: str                       # dense | topk | qr | topk_qr | int8
+    scope: str                       # tensor | global
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    caps: Tuple[int, ...] = ()       # per-unit sparse capacity (topk codecs)
+    r: int = 0                       # level bits (qr / topk_qr / int8)
+    nbytes: int = 0                  # packed payload bytes per client
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Payload:
+    """Packed wire buffers: ``data[unit]`` is that unit's buffer tuple in
+    codec-defined order.  A registered pytree (spec is static aux), so
+    payloads flow through ``jit`` / ``vmap`` / ``lax.scan`` / ``shard_map``
+    collectives like any array tree — a vmapped ``encode`` yields buffers
+    with a leading client axis."""
+
+    data: Tuple[Tuple[jax.Array, ...], ...]
+    spec: WireSpec
+
+    def tree_flatten(self):
+        return (self.data,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, children):
+        return cls(children[0], spec)
+
+    @property
+    def nbytes(self) -> int:
+        """Static packed size in bytes (per client — excludes any vmap
+        client axis, which multiplies buffers but not the spec)."""
+        return self.spec.nbytes
+
+
+def _buffers_nbytes(data) -> int:
+    return int(sum(b.size * jnp.dtype(b.dtype).itemsize
+                   for unit in data for b in unit))
+
+
+def measured_bits(payload: Payload):
+    """The packed payload's wire cost in bits (static scalar)."""
+    return float(payload.nbytes) * 8.0
+
+
+def padding_bits(payload: Payload, report: BitsReport):
+    """In-graph slack between measured and accounted bits.
+
+    Equals (a) ``(cap - nnz) * (INDEX_BITS + value width)`` for each
+    sparse unit whose support underfills its static capacity and (b)
+    ``< 32 * (1 + r)`` word-padding bits per packed-code unit; buffers are
+    byte-granular, so dense/int8 payloads have zero slack.  The §8
+    reconcile tests pin both closed forms.  Two edge cases can perturb the
+    sign/size: TopK threshold ties beyond ``cap`` (the transform's report
+    counts every tie but only ``cap`` slots ship, a *negative*
+    contribution — measure-zero for continuous data, reachable with
+    constant-valued tensors) and ``scope="global"`` over mixed-dtype
+    trees (values pack at the promoted dtype while the report accounts
+    each leaf at its own width).
+    """
+    return measured_bits(payload) - report.total_bits
+
+
+# --------------------------------------------------------------------------- #
+# codec resolution
+# --------------------------------------------------------------------------- #
+
+def check_supported(comp: Optional[Compressor]) -> str:
+    """Return the wire codec name for ``comp``, or raise ``ValueError``.
+
+    The static-capacity rule needs an exact-k support, so
+    ``TopK(impl="quantile")`` (approximate k) is rejected; ``Compose`` is
+    supported for the TopK -> QuantQr composition with matching scopes.
+    """
+    if comp is None or isinstance(comp, Identity):
+        return "dense"
+    if isinstance(comp, TopK):
+        if comp.density >= 1.0:
+            return "dense"
+        if comp.impl != "select":
+            raise ValueError(
+                'wire codecs need the exact-k support: TopK(impl="select") '
+                f'(got impl={comp.impl!r} — quantile keeps a data-dependent '
+                f'count, which has no static capacity)')
+        return "topk"
+    if isinstance(comp, QuantQr):
+        if comp.r > MAX_R:
+            raise ValueError(f"wire codec supports r <= {MAX_R}, "
+                             f"got r={comp.r}")
+        return "qr"
+    if isinstance(comp, Int8Sync):
+        return "int8"
+    if isinstance(comp, Compose):
+        if not (isinstance(comp.first, TopK)
+                and isinstance(comp.second, QuantQr)):
+            raise ValueError(
+                f"wire codec supports Compose(TopK, QuantQr) only, got "
+                f"{type(comp.first).__name__}->{type(comp.second).__name__}")
+        if comp.first.scope != comp.second.scope:
+            raise ValueError(
+                f"wire Compose needs matching scopes, got "
+                f"{comp.first.scope!r} -> {comp.second.scope!r}")
+        if comp.second.r > MAX_R:
+            raise ValueError(f"wire codec supports r <= {MAX_R}, "
+                             f"got r={comp.second.r}")
+        if comp.first.impl != "select":
+            raise ValueError('wire Compose needs TopK(impl="select")')
+        if comp.first.density >= 1.0:
+            return "qr"           # dense support: pure packed-code payload
+        return "topk_qr"
+    raise ValueError(
+        f"no wire codec for {type(comp).__name__}; supported: Identity, "
+        f"TopK(select), QuantQr, Compose(TopK, QuantQr), Int8Sync")
+
+
+def _scope_of(comp, codec: str) -> str:
+    if codec in ("dense", "int8"):
+        return "tensor" if not isinstance(comp, TopK) else comp.scope
+    if isinstance(comp, Compose):
+        return comp.first.scope
+    return comp.scope
+
+
+# --------------------------------------------------------------------------- #
+# unit plumbing (scope="tensor": one unit per leaf; "global": one flat unit)
+# --------------------------------------------------------------------------- #
+
+def _tree_units(tree: PyTree, scope: str):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if scope == "global":
+        units = [jnp.concatenate([l.reshape(-1) for l in leaves])]
+    else:
+        units = [l.reshape(-1) for l in leaves]
+    return leaves, treedef, units
+
+
+def _units_to_tree(units, spec: WireSpec) -> PyTree:
+    shapes, dtypes = spec.shapes, spec.dtypes
+    if spec.scope == "global":
+        flat, parts, off = units[0], [], 0
+        for shp, dt in zip(shapes, dtypes):
+            size = 1
+            for s in shp:
+                size *= s
+            parts.append(flat[off:off + size].reshape(shp).astype(dt))
+            off += size
+    else:
+        parts = [u.reshape(shp).astype(dt)
+                 for u, shp, dt in zip(units, shapes, dtypes)]
+    return jax.tree_util.tree_unflatten(spec.treedef, parts)
+
+
+# --------------------------------------------------------------------------- #
+# sparse (index, value) slots — static capacity, sentinel-padded
+# --------------------------------------------------------------------------- #
+
+def _support_slots(flat: jax.Array, cap: int):
+    """Indices of ``flat``'s support in ``cap`` static slots, lowest index
+    first; empty slots carry the sentinel ``n``.
+
+    No sort and no n-sized scatter (XLA scatters crawl on CPU): slot ``j``
+    holds the index of the (j+1)-th nonzero, found by binary search on the
+    nonzero-count cumsum — one O(n) streaming pass plus ``cap`` gathers.
+    Queries beyond the support return ``n`` (the sentinel) for free, and
+    tie-overflow beyond ``cap`` keeps the lowest-index ``cap``."""
+    csum = jnp.cumsum((flat != 0).astype(jnp.int32))
+    return jnp.searchsorted(
+        csum, jnp.arange(1, cap + 1, dtype=jnp.int32),
+        side="left").astype(jnp.int32)
+
+
+def _gather_slots(flat: jax.Array, idx: jax.Array) -> jax.Array:
+    n = flat.size
+    safe = jnp.clip(idx, 0, n - 1)
+    return jnp.where(idx < n, flat[safe], jnp.zeros((), flat.dtype))
+
+
+def _scatter_slots(idx: jax.Array, vals: jax.Array, n: int,
+                   dtype) -> jax.Array:
+    return jnp.zeros((n,), dtype).at[idx.astype(jnp.int32)].set(
+        vals, mode="drop")
+
+
+# --------------------------------------------------------------------------- #
+# quantizer codes (sign bit | r level bits), bit-identical to Def. 3.2
+# --------------------------------------------------------------------------- #
+
+def _qr_codes(flat: jax.Array, r: int, key: jax.Array):
+    """The transform's stochastic levels as (1+r)-bit integer codes.
+
+    Replays :func:`repro.kernels.ref.quantize_qr` exactly — same uniforms,
+    same arithmetic — but keeps the integer level instead of the float
+    value, so ``_qr_values`` reconstructs the transform's output
+    bit-for-bit (top-level saturation aside, see module docstring).
+    """
+    levels = jnp.asarray(2 ** r, jnp.float32)
+    xf = flat.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(xf * xf))
+    u = jax.random.uniform(key, flat.shape, dtype=jnp.float32)
+    y = jnp.abs(xf) / jnp.where(norm > 0, norm, 1.0)
+    scaled = levels * y
+    lo = jnp.floor(scaled)
+    code = (lo + (u < scaled - lo)).astype(jnp.uint32)
+    code = jnp.minimum(code, jnp.uint32(2 ** r - 1))     # saturate top level
+    sign = (xf < 0).astype(jnp.uint32)
+    return (sign << r) | code, norm
+
+
+def _qr_values(codes: jax.Array, norm: jax.Array, r: int) -> jax.Array:
+    """Decode (1+r)-bit codes back to float values (fp32)."""
+    levels = jnp.asarray(2 ** r, jnp.float32)
+    m = (codes & jnp.uint32(2 ** r - 1)).astype(jnp.float32)
+    sgn = jnp.where((codes >> r) & jnp.uint32(1), -1.0, 1.0)
+    out = norm * sgn * (m / levels)
+    return jnp.where(norm > 0, out, jnp.zeros_like(out))
+
+
+# --------------------------------------------------------------------------- #
+# encode / decode
+# --------------------------------------------------------------------------- #
+
+def encode(comp: Optional[Compressor], tree: PyTree,
+           rng: Optional[jax.Array] = None
+           ) -> Tuple[Payload, BitsReport]:
+    """Pack ``tree`` into the wire format of ``comp``.
+
+    Returns ``(payload, report)`` where ``report`` is computed exactly as
+    the transform computes it (account-only and wire rounds see identical
+    bit metrics) and ``decode(payload)`` reconstructs what
+    ``comp.compress(tree, rng)`` would have returned.  The rng contract
+    (split structure per leaf) matches the transforms', so wire and
+    account modes consume the same key chain.
+    """
+    codec = check_supported(comp)
+    scope = _scope_of(comp, codec)
+    leaves, treedef, units = _tree_units(tree, scope)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype).name for l in leaves)
+
+    def mkspec(data, **kw):
+        return WireSpec(codec=codec, scope=scope, treedef=treedef,
+                        shapes=shapes, dtypes=dtypes,
+                        nbytes=_buffers_nbytes(data), **kw)
+
+    if codec == "dense":
+        # Identity or TopK(density >= 1): raw values, leaf-dtype width.
+        data = tuple((u,) for u in units)
+        return Payload(data, mkspec(data)), dense_report(tree)
+
+    if codec == "topk":
+        out, report = comp.compress(tree)
+        _, _, out_units = _tree_units(out, scope)
+        caps, data = [], []
+        for u in out_units:
+            cap = comp._k(u.size)
+            idx = _support_slots(u, cap)
+            data.append((idx.astype(jnp.uint32), _gather_slots(u, idx)))
+            caps.append(cap)
+        data = tuple(data)
+        return Payload(data, mkspec(data, caps=tuple(caps))), report
+
+    if codec == "qr":
+        # QuantQr — or Compose(TopK(density>=1), QuantQr), whose rng chain
+        # first burns the compose split.
+        if rng is None:
+            raise ValueError("quantizer codecs need an rng key")
+        if isinstance(comp, Compose):
+            _, rng = jax.random.split(rng)
+            r = comp.second.r
+        else:
+            r = comp.r
+        keys = jax.random.split(rng, len(leaves))
+        data = []
+        for i, u in enumerate(units):
+            codes, norm = _qr_codes(u, r, keys[min(i, len(leaves) - 1)])
+            data.append((kops.pack_codes(codes, 1 + r), norm))
+        data = tuple(data)
+        n = sum(u.size for u in units)
+        report = BitsReport(
+            value_bits=jnp.asarray(float(n) * (1 + r), jnp.float32),
+            meta_bits=jnp.asarray(float(len(units)) * FLOAT_BITS))
+        return Payload(data, mkspec(data, r=r)), report
+
+    if codec == "topk_qr":
+        if rng is None:
+            raise ValueError("quantizer codecs need an rng key")
+        _, k2 = jax.random.split(rng)            # compose's (k1, k2) split
+        r = comp.second.r
+        mid, rep1 = comp.first.compress(tree)
+        _, _, mid_units = _tree_units(mid, scope)
+        keys = jax.random.split(k2, len(leaves))
+        caps, data = [], []
+        for i, u in enumerate(mid_units):
+            codes, norm = _qr_codes(u, r, keys[min(i, len(leaves) - 1)])
+            cap = comp.first._k(u.size)
+            idx = _support_slots(u, cap)
+            kept = _gather_slots(codes, idx)
+            data.append((idx.astype(jnp.uint32),
+                         kops.pack_codes(kept, 1 + r), norm))
+            caps.append(cap)
+        data = tuple(data)
+        nnz = rep1.index_bits / INDEX_BITS       # the transmitted support
+        report = BitsReport(
+            value_bits=nnz * (1 + r), index_bits=rep1.index_bits,
+            meta_bits=jnp.asarray(float(len(units)) * FLOAT_BITS))
+        return Payload(data, mkspec(data, caps=tuple(caps), r=r)), report
+
+    # codec == "int8" (Int8Sync; tensor scope by construction).  Level
+    # buffers keep the leaf's shape — byte-granular already, and the launch
+    # layer constrains their within-pod sharding like the dense params.
+    if rng is None:
+        raise ValueError("Int8Sync codec needs an rng key")
+    levels, scales = comp.encode(tree, rng)
+    lv = jax.tree_util.tree_leaves(levels)
+    sc = jax.tree_util.tree_leaves(scales)
+    data = tuple((q, s) for q, s in zip(lv, sc))
+    return (Payload(data, mkspec(data, r=comp.magnitude_bits)),
+            comp.report(tree))
+
+
+def decode(payload: Payload) -> PyTree:
+    """Unpack a :class:`Payload` back to the transform-output pytree."""
+    spec = payload.spec
+    sizes = []
+    for shp in spec.shapes:
+        size = 1
+        for s in shp:
+            size *= s
+        sizes.append(size)
+    unit_sizes = [sum(sizes)] if spec.scope == "global" else sizes
+
+    units = []
+    for i, (bufs, n) in enumerate(zip(payload.data, unit_sizes)):
+        if spec.codec == "dense":
+            units.append(bufs[0])
+        elif spec.codec == "topk":
+            idx, vals = bufs
+            units.append(_scatter_slots(idx, vals, n, vals.dtype))
+        elif spec.codec == "qr":
+            words, norm = bufs
+            codes = kops.unpack_codes(words, 1 + spec.r, n)
+            units.append(_qr_values(codes, norm, spec.r))
+        elif spec.codec == "topk_qr":
+            idx, words, norm = bufs
+            codes = kops.unpack_codes(words, 1 + spec.r, spec.caps[i])
+            vals = _qr_values(codes, norm, spec.r)
+            units.append(_scatter_slots(idx, vals, n, vals.dtype))
+        elif spec.codec == "int8":
+            q, s = bufs                       # q keeps the leaf's shape
+            units.append((q.astype(jnp.float32) * s).reshape(-1))
+        else:  # pragma: no cover - spec constructed by encode only
+            raise ValueError(f"unknown codec {spec.codec!r}")
+    return _units_to_tree(units, spec)
+
+
+def payload_nbytes(comp: Optional[Compressor], tree: PyTree) -> int:
+    """Static packed bytes of ``comp``'s wire format for ``tree`` — the
+    planning-side counterpart of ``Compressor.expected_bits`` (exact, since
+    packed shapes are static)."""
+    struct = jax.eval_shape(
+        lambda t: encode(comp, t, jax.random.PRNGKey(0))[0], tree)
+    return struct.spec.nbytes

@@ -25,9 +25,9 @@ import jax.numpy as jnp
 from repro.compress import Compressor, Identity, TopK, dense_bits
 from repro.core import aggregation, comm
 from repro.core.clients import (
-    NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
-    mean_over_active, per_client, tree_where, validate_schedule,
-    vmap_compress)
+    NULL_CTX, ClientAxisCtx, ClientSchedule, gather_decoded, keep_where,
+    masked_mean, mean_over_active, payload_metrics, per_client, tree_where,
+    validate_schedule, vmap_compress, vmap_encode)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
@@ -129,9 +129,11 @@ class FedAvg(RoundEngine):
                  compressor: Compressor | None = None,
                  schedule: ClientSchedule | None = None,
                  policy: aggregation.AggregationPolicy | None = None,
+                 wire: str = "account",
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.policy = policy
+        self.wire = wire
         self.comp = compressor if compressor is not None else Identity()
         self.sched = validate_schedule(
             schedule if schedule is not None
@@ -163,7 +165,17 @@ class FedAvg(RoundEngine):
         loss = loss_sum / (jnp.maximum(plan.steps.max(), 1) if het
                            else cfg.local_steps)
         comp_keys = ctx.shard(jax.random.split(k_comp, s))
-        x_fin, up_rep = vmap_compress(self.comp, plan_l, x_fin, comp_keys)
+        wire_on = self.wire == "packed"
+        payload = None
+        if wire_on:
+            # §8 packed uplink: encode at the client boundary.  FedAvg has
+            # no client-side state to update, so nothing reads a local
+            # decode — the server decodes the gathered payload below.
+            payload, up_rep = vmap_encode(self.comp, plan_l, x_fin,
+                                          comp_keys)
+        else:
+            x_fin, up_rep = vmap_compress(self.comp, plan_l, x_fin,
+                                          comp_keys)
         # aggregation policy (DESIGN.md §7): plan-masked bits feed the
         # finish clock; the outcome is replicated, device-count invariant
         pol = aggregation.resolve_policy(
@@ -171,7 +183,25 @@ class FedAvg(RoundEngine):
             ctx.all_clients(up_rep.total_bits) * partf_plan_full, ctx)
         out, partf, may_exclude = pol.out, pol.partf, pol.may_exclude
         client_up = pol.client_up             # excluded clients send nothing
-        if self.policy.mode == "async_buffered":
+        if wire_on:
+            # §8 wire aggregation: masked packed-payload gather, server-side
+            # decode, aggregate the full (s,) stack with the unsharded
+            # formula (see fedcomloc._round_impl)
+            xf_full = gather_decoded(payload, out.partf, ctx)
+            x0_full = _broadcast(state.x, s)
+            if self.policy.mode == "async_buffered":
+                delta = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
+                x_new = _tmap(
+                    lambda x_, u: x_ + u, state.x,
+                    aggregation.async_weighted_sum(out, delta, NULL_CTX))
+            elif may_exclude:
+                x_new = tree_where(out.n_selected > 0,
+                                   masked_mean(xf_full, out.partf, NULL_CTX,
+                                               weight_sum=out.n_selected),
+                                   state.x)
+            else:
+                x_new = _tmap(lambda t: t.mean(axis=0), xf_full)
+        elif self.policy.mode == "async_buffered":
             delta = _tmap(lambda yf, xs: yf - xs, x_fin, x0)
             x_new = _tmap(lambda x_, u: x_ + u, state.x,
                           aggregation.async_weighted_sum(out, delta, ctx))
@@ -192,14 +222,17 @@ class FedAvg(RoundEngine):
                    "client_finish": out.finish,
                    "sim_time": out.sim_time,
                    **aggregation.policy_metrics(out)}
+        if wire_on:
+            metrics.update(payload_metrics(payload, out.partf))
         return FedAvgState(x=x_new, round=state.round + 1), metrics
 
 
 def SparseFedAvg(loss_fn, data, cfg, density: float = 0.1,
                  schedule: ClientSchedule | None = None,
-                 policy: aggregation.AggregationPolicy | None = None):
+                 policy: aggregation.AggregationPolicy | None = None,
+                 wire: str = "account"):
     return FedAvg(loss_fn, data, cfg, compressor=TopK(density=density),
-                  schedule=schedule, policy=policy)
+                  schedule=schedule, policy=policy, wire=wire)
 
 
 # --------------------------------------------------------------------------- #
@@ -217,9 +250,11 @@ class Scaffold(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
                  schedule: ClientSchedule | None = None,
                  policy: aggregation.AggregationPolicy | None = None,
+                 wire: str = "account",
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.policy = policy
+        self.wire = wire
         self.sched = validate_schedule(
             schedule if schedule is not None
             else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
@@ -288,7 +323,31 @@ class Scaffold(RoundEngine):
         client_up = pol.client_up
         if may_exclude:   # excluded stragglers never report; keep ci
             ci_new = keep_where(part, ci_new, ci_s)
-        if self.policy.mode == "async_buffered":
+        wire_on = self.wire == "packed"
+        payload = None
+        if wire_on:
+            # §8 packed uplink: Scaffold transmits model + control variate
+            # (the 2x-dense accounting) — both ride one dense payload
+            payload, _ = vmap_encode(None, plan_l, (x_fin, ci_new))
+            xf_full, ci_new_full = gather_decoded(payload, out.partf, ctx)
+            x0_full = _broadcast(state.x, s)
+            ci_s_full = _tmap(lambda c: c[clients_full], state.ci)
+            dxs = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
+            dcs = _tmap(lambda cn, co: cn - co, ci_new_full, ci_s_full)
+            if self.policy.mode == "async_buffered":
+                dx = aggregation.async_weighted_sum(out, dxs, NULL_CTX)
+                dc = aggregation.async_weighted_sum(out, dcs, NULL_CTX)
+                s_eff = out.n_selected
+            elif may_exclude:
+                wsum = out.n_selected
+                dx = masked_mean(dxs, out.partf, NULL_CTX, weight_sum=wsum)
+                dc = masked_mean(dcs, out.partf, NULL_CTX, weight_sum=wsum)
+                s_eff = wsum
+            else:
+                dx = _tmap(lambda t: t.mean(axis=0), dxs)
+                dc = _tmap(lambda t: t.mean(axis=0), dcs)
+                s_eff = s
+        elif self.policy.mode == "async_buffered":
             dx = aggregation.async_weighted_sum(
                 out, _tmap(lambda yf, xs: yf - xs, x_fin, x0), ctx)
             dc = aggregation.async_weighted_sum(
@@ -319,6 +378,8 @@ class Scaffold(RoundEngine):
                    "client_finish": out.finish,
                    "sim_time": out.sim_time,
                    **aggregation.policy_metrics(out)}
+        if wire_on:
+            metrics.update(payload_metrics(payload, out.partf))
         return (ScaffoldState(x=x_new, c=c_new, ci=ci_all,
                               round=state.round + 1), metrics)
 
@@ -338,9 +399,11 @@ class FedDyn(RoundEngine):
     def __init__(self, loss_fn: LossFn, data: FederatedData, cfg: FedConfig,
                  schedule: ClientSchedule | None = None,
                  policy: aggregation.AggregationPolicy | None = None,
+                 wire: str = "account",
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.policy = policy
+        self.wire = wire
         self.sched = validate_schedule(
             schedule if schedule is not None
             else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
@@ -393,7 +456,47 @@ class FedDyn(RoundEngine):
         if may_exclude:   # excluded stragglers keep their dual variables
             g_new = keep_where(part, g_new, g_s)
         grads_all = ctx.scatter_rows(state.grads, clients, g_new)
-        if self.policy.mode == "async_buffered":
+        wire_on = self.wire == "packed"
+        payload = None
+        if wire_on:
+            # §8 packed (dense) uplink + replicated full-stack aggregation
+            payload, _ = vmap_encode(None, plan_l, x_fin)
+            xf_full = gather_decoded(payload, out.partf, ctx)
+            x0_full = _broadcast(state.x, s)
+            deltas = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
+            if self.policy.mode == "async_buffered":
+                dsum = _tmap(
+                    lambda d_: (d_ * per_client(out.discount, d_)
+                                ).sum(axis=0), deltas)
+                h_new = _tmap(
+                    lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients)
+                    * d_, state.h, dsum)
+                x_new = _tmap(
+                    lambda x_, u, h_: x_ + u - h_ / cfg.alpha, state.x,
+                    aggregation.async_weighted_sum(out, deltas, NULL_CTX),
+                    h_new)
+                if sched.may_drop:
+                    x_new = tree_where(out.n_selected > 0, x_new, state.x)
+            elif may_exclude:
+                delta = _tmap(
+                    lambda d_: (d_ * per_client(out.partf, d_)).sum(axis=0),
+                    deltas)
+                h_new = _tmap(
+                    lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients)
+                    * d_, state.h, delta)
+                x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
+                              masked_mean(xf_full, out.partf, NULL_CTX,
+                                          weight_sum=out.n_selected), h_new)
+                x_new = tree_where(out.n_selected > 0, x_new, state.x)
+            else:
+                dsum = _tmap(lambda d_: d_.sum(axis=0), deltas)
+                h_new = _tmap(
+                    lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients)
+                    * d_, state.h, dsum)
+                x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
+                              _tmap(lambda t: t.mean(axis=0), xf_full),
+                              h_new)
+        elif self.policy.mode == "async_buffered":
             # the server correction absorbs the staleness-discounted delta
             # *sum*; the average applies the per-flush buffer means
             disc = ctx.shard(out.discount)
@@ -439,5 +542,7 @@ class FedDyn(RoundEngine):
                    "client_finish": out.finish,
                    "sim_time": out.sim_time,
                    **aggregation.policy_metrics(out)}
+        if wire_on:
+            metrics.update(payload_metrics(payload, out.partf))
         return (FedDynState(x=x_new, h=h_new, grads=grads_all,
                             round=state.round + 1), metrics)

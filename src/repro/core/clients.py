@@ -288,6 +288,12 @@ class ClientAxisCtx:
         """Sum a value (array or pytree) across shards."""
         return x
 
+    def all_clients_tree(self, tree: PyTree) -> PyTree:
+        """``all_clients`` over every (s, ...) leaf — the §8 wire
+        collective: gathering a packed :class:`repro.compress.wire.Payload`
+        moves the packed buffers across shards, not dense trees."""
+        return tree
+
     def mean_clients(self, stacked: PyTree) -> PyTree:
         """Mean over the (local) client axis of a stacked tree."""
         return jax.tree_util.tree_map(lambda t: t.mean(axis=0), stacked)
@@ -365,6 +371,65 @@ def vmap_compress(comp, plan: RoundPlan, stacked: PyTree, keys: jax.Array):
     vals = [plan.comp_overrides[n] for n in names]
     fn = lambda t, k, *ov: comp.compress(t, k, **dict(zip(names, ov)))
     return jax.vmap(fn)(stacked, keys, *vals)
+
+
+def vmap_encode(comp, plan: RoundPlan, stacked: PyTree,
+                keys: Optional[jax.Array] = None):
+    """Wire-encode a stacked-client uplink tree, one client per vmap lane
+    (DESIGN.md §8): the packed-payload counterpart of :func:`vmap_compress`.
+
+    Returns ``(Payload, BitsReport)`` with a leading client axis on every
+    buffer/report leaf; the report is identical to the account-mode one, so
+    finish clocks and bit metrics don't change between modes.  Per-client
+    compressor overrides change payload *shapes*, which a static wire
+    format cannot carry — engines reject packed mode with overrides
+    (``engine.validate_wire``) and this guards the same invariant.
+    """
+    from repro.compress import wire
+    if plan.comp_overrides:
+        raise ValueError(
+            "packed wire mode cannot carry per-client compressor overrides "
+            "(static payload capacity); run them in account mode")
+    if keys is None:
+        return jax.vmap(lambda t: wire.encode(comp, t))(stacked)
+    return jax.vmap(lambda t, k: wire.encode(comp, t, k))(stacked, keys)
+
+
+def mask_payload(payload, partf: jax.Array):
+    """Zero the packed buffers of non-participating clients.
+
+    A deadline-dropped or policy-excluded straggler contributes a
+    *fully-masked* payload — not a packed buffer of zeros counted as
+    transmitted: its measured bytes are excluded by the same ``partf``
+    mask, and a masked payload decodes to an all-zero tree (sparse slots
+    at index 0 value 0, quantizer norms 0) that the aggregation masks are
+    already discarding.
+    """
+    keep = partf > 0
+    data = jax.tree_util.tree_map(
+        lambda b: jnp.where(per_client(keep, b), b, jnp.zeros((), b.dtype)),
+        payload.data)
+    return type(payload)(data, payload.spec)
+
+
+def payload_metrics(payload, partf_full: jax.Array) -> Dict[str, jax.Array]:
+    """The §8 measured-bytes metric entries every packed round emits: the
+    static per-client payload size masked by the final participation
+    vector — a dropped/excluded client's measured bytes are zero, matching
+    its zeroed accounted bits."""
+    pb = jnp.asarray(payload.nbytes, jnp.float32) * partf_full
+    return {"client_payload_bytes": pb, "uplink_payload_bytes": pb.sum()}
+
+
+def gather_decoded(payload, partf_full: jax.Array, ctx: ClientAxisCtx):
+    """The §8 server-side uplink: mask non-participants, gather the packed
+    buffers across shards (the only cross-shard traffic of a wire-mode
+    aggregation — ~32/r× fewer bytes than dense trees), decode to the full
+    (s, ...) stacked tree, replicated on every shard."""
+    from repro.compress import wire
+    masked = mask_payload(payload, ctx.shard(partf_full))
+    full = ctx.all_clients_tree(masked)
+    return jax.vmap(wire.decode)(full)
 
 
 def validate_schedule(schedule: ClientSchedule, n_clients: int,

@@ -87,6 +87,18 @@ class ShardCtx(ClientAxisCtx):
         return jax.tree_util.tree_map(
             lambda t: jax.lax.psum(t, self.axis), x)
 
+    def all_clients_tree(self, tree: PyTree) -> PyTree:
+        """Tiled all_gather of every (s/D, ...) leaf back to (s, ...).
+
+        This is the §8 wire-mode uplink collective: gathering a packed
+        ``Payload`` pytree moves its packed buffers — uint32 index/code
+        words, sub-byte level planes, int8 levels — across the mesh
+        instead of dense fp32 trees, which is where the ~32/r× wire saving
+        physically happens.  Row order matches ``shard``'s slicing, so the
+        reassembled client axis is identical to the unsharded one.
+        """
+        return jax.tree_util.tree_map(self.all_clients, tree)
+
     def mean_clients(self, stacked: PyTree) -> PyTree:
         return jax.tree_util.tree_map(
             lambda t: jax.lax.psum(t.sum(axis=0), self.axis)

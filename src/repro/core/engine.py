@@ -23,6 +23,12 @@ histories and bits-axes are identical whichever driver ran.
 ``sync`` / ``semi_sync(K)`` / ``async_buffered``); the round
 implementations read ``self.policy`` at trace time, so both drivers — and
 the ``shard_map`` mesh path — run the same policy-resolved graph.
+``set_wire`` binds the §8 wire mode the same way: ``"account"`` moves
+dense trees and only the ``BitsReport`` ledger claims compression;
+``"packed"`` makes the uplink move real packed payloads
+(``repro.compress.wire``) and adds measured ``uplink_payload_bytes`` /
+``client_payload_bytes`` metrics that must reconcile with the accounted
+bits in-graph.
 """
 
 from __future__ import annotations
@@ -34,6 +40,33 @@ import numpy as np
 
 PyTree = Any
 
+WIRE_MODES = ("account", "packed")
+
+
+def validate_wire(wire: Optional[str], compressor, schedule) -> str:
+    """Resolve + check a wire mode (DESIGN.md §8) at construction time.
+
+    ``"account"`` (default) keeps today's semantics: dense trees move,
+    only the ``BitsReport`` ledger claims compression.  ``"packed"``
+    requires a compressor the wire layer can pack
+    (``repro.compress.wire.check_supported``) and a schedule without
+    per-client compressor overrides — overrides change payload *shapes*,
+    which static packed buffers cannot carry.
+    """
+    wire = "account" if wire is None else wire
+    if wire not in WIRE_MODES:
+        raise ValueError(f"wire must be one of {WIRE_MODES}, got {wire!r}")
+    if wire == "packed":
+        from repro.compress import wire as wire_mod
+        wire_mod.check_supported(compressor)
+        if schedule is not None and schedule.profile.comp_params:
+            raise ValueError(
+                "packed wire mode cannot carry per-client compressor "
+                f"overrides {sorted(schedule.profile.comp_params)} (static "
+                "payload capacity); run per-client overrides in account "
+                "mode")
+    return wire
+
 
 class RoundEngine:
     """Mixin: host-stepped ``round`` + fused ``run_rounds`` over _round_impl."""
@@ -42,10 +75,52 @@ class RoundEngine:
         from repro.core import aggregation
         self.policy = aggregation.validate_policy(
             getattr(self, "policy", None), self.cfg.clients_per_round)
+        self.wire = validate_wire(getattr(self, "wire", None),
+                                  getattr(self, "comp", None),
+                                  getattr(self, "sched", None))
         self._mesh = None
-        self._impl = self._round_impl
-        self._round = jax.jit(self._impl)
+        self._mesh_axis = "clients"
         self._fused_cache: Dict[int, Any] = {}
+        self._rebind_impl()
+
+    # ------------------------------------------------------------------ #
+
+    def _rebind_impl(self) -> None:
+        """(Re)derive ``self._impl`` and clear the jit caches.
+
+        Always wraps the round in a *fresh* function object: pjit's trace
+        cache keys on the wrapped callable, and the ``self._round_impl``
+        bound method compares equal across accesses — re-jitting it
+        directly after a ``set_policy``/``set_wire`` rebind can silently
+        reuse a graph traced under the previous binding.
+        """
+        from repro.core import distributed
+        if self._mesh is None:
+            impl = lambda state, key: self._round_impl(state, key)
+        else:
+            impl = distributed.shard_round(
+                self._round_impl, self._mesh, self.cfg.clients_per_round,
+                self._mesh_axis)
+        self._impl = impl
+        self._round = jax.jit(impl)
+        self._fused_cache = {}
+
+    # ------------------------------------------------------------------ #
+
+    def set_wire(self, wire: str) -> "RoundEngine":
+        """Bind a wire mode (DESIGN.md §8) — ``"account"`` | ``"packed"``.
+
+        ``_round_impl`` reads ``self.wire`` at trace time, so switching
+        modes clears the jit caches (like ``set_policy``); rebinding the
+        mode already bound is a no-op.  Returns ``self``.
+        """
+        wire = validate_wire(wire, getattr(self, "comp", None),
+                             getattr(self, "sched", None))
+        if wire == self.wire:
+            return self
+        self.wire = wire
+        self._rebind_impl()
+        return self
 
     # ------------------------------------------------------------------ #
 
@@ -62,8 +137,7 @@ class RoundEngine:
         if policy == self.policy:
             return self
         self.policy = policy
-        self._round = jax.jit(self._impl)
-        self._fused_cache = {}
+        self._rebind_impl()
         return self
 
     # ------------------------------------------------------------------ #
@@ -81,19 +155,13 @@ class RoundEngine:
         on every call without triggering recompiles).  Returns ``self``
         for chaining.
         """
-        from repro.core import distributed
         if (mesh is self._mesh
                 or (mesh is not None and self._mesh is not None
                     and mesh == self._mesh)):
             return self
-        if mesh is None:
-            self._impl = self._round_impl
-        else:
-            self._impl = distributed.shard_round(
-                self._round_impl, mesh, self.cfg.clients_per_round, axis)
         self._mesh = mesh
-        self._round = jax.jit(self._impl)
-        self._fused_cache = {}
+        self._mesh_axis = axis
+        self._rebind_impl()
         return self
 
     # ------------------------------------------------------------------ #

@@ -43,9 +43,9 @@ import jax.numpy as jnp
 from repro.compress import Compressor, Identity, dense_bits
 from repro.core import aggregation, comm
 from repro.core.clients import (
-    NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
-    mean_over_active, per_client, tree_where, validate_schedule,
-    vmap_compress)
+    NULL_CTX, ClientAxisCtx, ClientSchedule, gather_decoded, keep_where,
+    masked_mean, mean_over_active, payload_metrics, per_client, tree_where,
+    validate_schedule, vmap_compress, vmap_encode)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
@@ -115,11 +115,13 @@ class FedComLoc(RoundEngine):
                  compressor: Compressor | None = None,
                  schedule: ClientSchedule | None = None,
                  policy: aggregation.AggregationPolicy | None = None,
+                 wire: str = "account",
                  meter_mode: str = "host"):
         self.loss_fn = loss_fn
         self.data = data
         self.cfg = config
         self.policy = policy
+        self.wire = wire
         self.comp = compressor if compressor is not None else Identity()
         if config.variant == "none" and not isinstance(self.comp, Identity):
             raise ValueError('variant="none" requires the Identity compressor')
@@ -220,7 +222,8 @@ class FedComLoc(RoundEngine):
         up_bits = jnp.asarray(s * dense)
         down_bits = jnp.asarray(s * dense)
         e_new = state.e
-        innov = sent = e_s = None
+        innov = sent = e_s = payload = None
+        wire_on = self.wire == "packed"
         if cfg.variant == "com":
             up_keys = ctx.shard(jax.random.split(k_up, s))
             if cfg.error_feedback:
@@ -234,15 +237,30 @@ class FedComLoc(RoundEngine):
                 innov = jax.tree_util.tree_map(
                     lambda xh, x0_, e: xh - x0_[None] + e,
                     x_hat, state.x, e_s)
-                sent, up_rep = vmap_compress(self.comp, plan_l, innov,
-                                             up_keys)
-                x_hat = jax.tree_util.tree_map(
-                    lambda x0_, snt: x0_[None] + snt, state.x, sent)
+                if wire_on:
+                    # decode happens once, server-side, after the gather —
+                    # the client rows the h/e updates need are sliced back
+                    # out of the full decoded stack below
+                    payload, up_rep = vmap_encode(self.comp, plan_l, innov,
+                                                  up_keys)
+                else:
+                    sent, up_rep = vmap_compress(self.comp, plan_l, innov,
+                                                 up_keys)
+                    x_hat = jax.tree_util.tree_map(
+                        lambda x0_, snt: x0_[None] + snt, state.x, sent)
+            elif wire_on:
+                # §8 packed uplink: the client boundary emits the wire
+                # payload; the round carries on with its (gathered) decode.
+                payload, up_rep = vmap_encode(self.comp, plan_l, x_hat,
+                                              up_keys)
             else:
                 x_hat, up_rep = vmap_compress(self.comp, plan_l, x_hat,
                                               up_keys)
             client_up = up_rep.total_bits      # (s_loc,) — vmap axis on leaves
             up_bits = None                     # recomputed from client_up
+        elif wire_on:
+            # uncompressed-uplink variants still move a real (dense) buffer
+            payload, _ = vmap_encode(None, plan_l, x_hat)
 
         # --- aggregation policy (DESIGN.md §7) --------------------------- #
         # The full (s,) bits each plan-participant would transmit feed the
@@ -257,6 +275,25 @@ class FedComLoc(RoundEngine):
         client_up = pol.client_up             # excluded clients send nothing
         if up_bits is None or may_exclude:
             up_bits = client_up.sum()
+        if wire_on:
+            # §8 packed uplink: the only cross-shard traffic is the masked
+            # packed-payload gather; decode happens ONCE, server-side, on
+            # the full (s,) stack — the client rows the h/e updates need
+            # are sliced back out of it (an excluded client's masked zero
+            # row never lands in state: the §5/§7 keep-old guards below
+            # are gated on the same participation mask).
+            dec_full = gather_decoded(payload, out.partf, ctx)
+            if cfg.variant == "com" and cfg.error_feedback:
+                sent = ctx.shard_tree(dec_full)
+                srv_hat = jax.tree_util.tree_map(
+                    lambda x0_, sf: x0_[None] + sf, state.x, dec_full)
+                x_hat = ctx.shard_tree(srv_hat)
+            else:
+                # non-com variants ship the raw iterate: decode is the
+                # identity and the local x_hat already equals its rows
+                srv_hat = dec_full
+                if cfg.variant == "com":
+                    x_hat = ctx.shard_tree(srv_hat)
         if cfg.variant == "com" and cfg.error_feedback:
             # leaky memory: undecayed EF diverges inside Scaffnew (the
             # residual integrates against the control variates — see the
@@ -266,7 +303,24 @@ class FedComLoc(RoundEngine):
             if may_exclude:    # an excluded client never transmitted
                 e_s_new = keep_where(part, e_s_new, e_s)
             e_new = ctx.scatter_rows(state.e, clients, e_s_new)
-        if self.policy.mode == "async_buffered":
+        if wire_on:
+            # server aggregation from the decoded full stack, with the
+            # unsharded formula (bit-identical at any device count)
+            if self.policy.mode == "async_buffered":
+                delta = jax.tree_util.tree_map(
+                    lambda xh, x0_: xh - x0_[None], srv_hat, state.x)
+                x_bar = jax.tree_util.tree_map(
+                    lambda x0_, u: x0_ + u, state.x,
+                    aggregation.async_weighted_sum(out, delta, NULL_CTX))
+            elif may_exclude:
+                x_bar = tree_where(out.n_selected > 0,
+                                   masked_mean(srv_hat, out.partf, NULL_CTX,
+                                               weight_sum=out.n_selected),
+                                   state.x)
+            else:
+                x_bar = jax.tree_util.tree_map(
+                    lambda t: t.mean(axis=0), srv_hat)
+        elif self.policy.mode == "async_buffered":
             # FedBuff server application in delta form: each buffer flush
             # applies its staleness-discounted mean of anchor deltas
             delta = jax.tree_util.tree_map(
@@ -319,5 +373,10 @@ class FedComLoc(RoundEngine):
             "sim_time": out.sim_time,
             **aggregation.policy_metrics(out),
         }
+        if wire_on:
+            # measured packed bytes (§8): the static payload size, masked
+            # in-graph by participation — a dropped client transmits a
+            # zero-length payload, not a buffer of zeros counted as sent
+            metrics.update(payload_metrics(payload, out.partf))
         return (FedComLocState(x=x_bar, h=h_new, round=state.round + 1,
                                e=e_new, mom=mom_new), metrics)

@@ -79,6 +79,7 @@ def run_federated(
     fuse: bool = True,
     mesh: Optional[Any] = None,
     policy: Optional[Any] = None,
+    wire: Optional[str] = None,
 ) -> History:
     """Drive ``algorithm`` (anything with .init/.round/.meter) for R rounds.
 
@@ -93,12 +94,15 @@ def run_federated(
     ``repro.launch.mesh.make_client_mesh``) binds the algorithm's rounds to
     the client-sharded ``shard_map`` path (DESIGN.md §6) before driving.
     ``policy`` (a ``repro.core.aggregation.AggregationPolicy``) rebinds the
-    aggregation policy (DESIGN.md §7) the same way.
+    aggregation policy (DESIGN.md §7) the same way; ``wire``
+    (``"account"`` | ``"packed"``) rebinds the wire mode (DESIGN.md §8).
     """
     if mesh is not None:
         algorithm.use_mesh(mesh)
     if policy is not None:
         algorithm.set_policy(policy)
+    if wire is not None:
+        algorithm.set_wire(wire)
     state = algorithm.init(params0)
     hist = History()
     t0 = time.time()

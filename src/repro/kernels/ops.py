@@ -22,6 +22,7 @@ import jax
 import numpy as np
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import pack_codes as _pack
 from repro.kernels import quantize as _quant
 from repro.kernels import ref as _ref
 from repro.kernels import rglru_scan as _rg
@@ -74,6 +75,23 @@ def quantize_qr(x: jax.Array, r, key: jax.Array) -> jax.Array:
         # kernel needs a static level count.
         return _ref.quantize_qr(x, r, key)
     return _quant.quantize_qr(x, int(r), key, interpret=(mode == "interpret"))
+
+
+def pack_codes(codes: jax.Array, b: int) -> jax.Array:
+    """Bit-plane pack b-bit codes into uint32 words (wire formats, §8)."""
+    mode = _resolve()
+    if mode == "ref":
+        return _ref.pack_codes(codes, int(b))
+    return _pack.pack_codes(codes, int(b), interpret=(mode == "interpret"))
+
+
+def unpack_codes(words: jax.Array, b: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack_codes` — recover ``n`` b-bit codes."""
+    mode = _resolve()
+    if mode == "ref":
+        return _ref.unpack_codes(words, int(b), int(n))
+    return _pack.unpack_codes(words, int(b), int(n),
+                              interpret=(mode == "interpret"))
 
 
 def mha_attention(q, k, v, *, causal: bool = True,

@@ -1,0 +1,109 @@
+"""Pallas TPU kernels for sub-byte code packing (wire formats, DESIGN.md §8).
+
+The wire codec stores one ``b``-bit code per scalar (sign + level for Q_r).
+Packing uses a *bit-plane* layout: codes are grouped 32 at a time and group
+``j`` emits ``b`` consecutive uint32 words, word ``j*b + t`` holding bit
+``t`` of each of the group's 32 codes (code ``j*32 + l`` at bit ``l``).  No
+code ever straddles a word boundary, so both directions are pure
+elementwise shift/mask/reduce streams — VPU-only, one read + one write of
+~``b/32`` the dense traffic, i.e. genuinely memory-bound (the roofline the
+ISSUE's uplink path needs).  Matches :func:`repro.kernels.ref.pack_codes`
+bit-for-bit.
+
+Tiling: codes stream through VMEM in (8, 128) blocks = 4 lane-groups of 32
+per sublane row; the word block is the matching (8, 4*b) slab, so the
+flattened output is word-index-major exactly like the reference layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK_ROWS = 8
+_BLOCK_COLS = 128
+_BLOCK = _BLOCK_ROWS * _BLOCK_COLS
+_GROUPS = _BLOCK_COLS // 32      # lane-groups of 32 per sublane row
+
+
+def _pack_kernel(codes_ref, out_ref, *, b: int):
+    c = codes_ref[...]                                   # (8, 128) uint32
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (_BLOCK_ROWS, 32), 1)
+    cols = []
+    for g in range(_GROUPS):
+        seg = c[:, g * 32:(g + 1) * 32]                  # (8, 32)
+        for t in range(b):
+            bits = ((seg >> jnp.uint32(t)) & jnp.uint32(1)) << lane
+            cols.append(jnp.sum(bits, axis=1))           # (8,)
+    out_ref[...] = jnp.stack(cols, axis=1)               # (8, 4*b)
+
+
+def _unpack_kernel(words_ref, out_ref, *, b: int):
+    w = words_ref[...]                                   # (8, 4*b) uint32
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (_BLOCK_ROWS, 32), 1)
+    segs = []
+    for g in range(_GROUPS):
+        acc = jnp.zeros((_BLOCK_ROWS, 32), jnp.uint32)
+        for t in range(b):
+            word = w[:, g * b + t][:, None]              # (8, 1)
+            acc += ((word >> lane) & jnp.uint32(1)) << jnp.uint32(t)
+        segs.append(acc)
+    out_ref[...] = jnp.concatenate(segs, axis=1)         # (8, 128)
+
+
+def _rows_for(n: int) -> int:
+    return pl.cdiv(max(int(n), 1), _BLOCK) * _BLOCK_ROWS
+
+
+@functools.partial(jax.jit, static_argnames=("b", "interpret"))
+def pack_codes(codes: jax.Array, b: int, *,
+               interpret: bool = False) -> jax.Array:
+    """Pack ``n`` b-bit codes into ``ceil(n/32) * b`` uint32 words."""
+    if codes.ndim != 1:
+        raise ValueError(f"expects 1-D input, got {codes.shape}")
+    b = int(b)
+    if not (1 <= b <= 32):
+        raise ValueError(f"code width must be in [1, 32], got {b}")
+    n = codes.size
+    n32 = pl.cdiv(n, 32)
+    rows = _rows_for(n)
+    c2d = jnp.pad(codes.astype(jnp.uint32),
+                  (0, rows * _BLOCK_COLS - n)).reshape(rows, _BLOCK_COLS)
+    words2d = pl.pallas_call(
+        functools.partial(_pack_kernel, b=b),
+        grid=(rows // _BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, _GROUPS * b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _GROUPS * b), jnp.uint32),
+        interpret=interpret,
+    )(c2d)
+    return words2d.reshape(-1)[: n32 * b]
+
+
+@functools.partial(jax.jit, static_argnames=("b", "n", "interpret"))
+def unpack_codes(words: jax.Array, b: int, n: int, *,
+                 interpret: bool = False) -> jax.Array:
+    """Inverse of :func:`pack_codes`: recover ``n`` b-bit codes (uint32)."""
+    if words.ndim != 1:
+        raise ValueError(f"expects 1-D input, got {words.shape}")
+    b, n = int(b), int(n)
+    n32 = pl.cdiv(n, 32)
+    if words.size != n32 * b:
+        raise ValueError(
+            f"expected {n32 * b} words for n={n}, b={b}, got {words.size}")
+    rows = _rows_for(n)
+    w2d = jnp.pad(words.astype(jnp.uint32),
+                  (0, rows * _GROUPS * b - words.size)
+                  ).reshape(rows, _GROUPS * b)
+    codes2d = pl.pallas_call(
+        functools.partial(_unpack_kernel, b=b),
+        grid=(rows // _BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((_BLOCK_ROWS, _GROUPS * b), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _BLOCK_COLS), jnp.uint32),
+        interpret=interpret,
+    )(w2d)
+    return codes2d.reshape(-1)[:n]

@@ -80,6 +80,54 @@ def quantize_qr(x: jax.Array, r: int, key: jax.Array) -> jax.Array:
 
 
 # --------------------------------------------------------------------------- #
+# Sub-byte code packing (wire formats, DESIGN.md §8)
+# --------------------------------------------------------------------------- #
+
+def pack_codes(codes: jax.Array, b: int) -> jax.Array:
+    """Bit-plane pack ``n`` b-bit codes into ``ceil(n/32) * b`` uint32 words.
+
+    Layout: codes are grouped 32 at a time; group ``j`` emits ``b``
+    consecutive words, and word ``j*b + t`` holds bit ``t`` of each of the
+    32 codes in the group, one code per lane bit (code ``j*32 + l`` at bit
+    ``l``).  No code ever straddles a word boundary, so pack and unpack are
+    pure elementwise shift/mask streams — the memory-bound layout the
+    Pallas kernel (:mod:`repro.kernels.pack_codes`) tiles through VMEM.
+    Padding slack is bounded: ``(32*ceil(n/32) - n) * b < 32*b`` bits.
+    """
+    if codes.ndim != 1:
+        raise ValueError(f"pack_codes expects 1-D input, got {codes.shape}")
+    b = int(b)
+    if not (1 <= b <= 32):
+        raise ValueError(f"code width must be in [1, 32], got {b}")
+    n = codes.size
+    n32 = -(-n // 32)
+    c = jnp.pad(codes.astype(jnp.uint32), (0, n32 * 32 - n))
+    c = c.reshape(n32, 32)
+    lanes = jnp.arange(32, dtype=jnp.uint32)[None, :]
+    planes = [jnp.sum(((c >> jnp.uint32(t)) & jnp.uint32(1)) << lanes,
+                      axis=1, dtype=jnp.uint32)
+              for t in range(b)]
+    return jnp.stack(planes, axis=1).reshape(n32 * b)
+
+
+def unpack_codes(words: jax.Array, b: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`: recover ``n`` b-bit codes (uint32)."""
+    if words.ndim != 1:
+        raise ValueError(f"unpack_codes expects 1-D input, got {words.shape}")
+    b = int(b)
+    n32 = -(-int(n) // 32)
+    if words.size != n32 * b:
+        raise ValueError(
+            f"expected {n32 * b} words for n={n}, b={b}, got {words.size}")
+    w = words.reshape(n32, b)
+    lanes = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    bits = (w[:, None, :] >> lanes) & jnp.uint32(1)       # (n32, 32, b)
+    shifts = jnp.arange(b, dtype=jnp.uint32)[None, None, :]
+    codes = jnp.sum(bits << shifts, axis=2, dtype=jnp.uint32)
+    return codes.reshape(n32 * 32)[:n]
+
+
+# --------------------------------------------------------------------------- #
 # Flash attention (naive oracle)
 # --------------------------------------------------------------------------- #
 

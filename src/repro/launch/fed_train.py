@@ -22,11 +22,14 @@ DESIGN.md §3) — no local reimplementation.  TopK at 10^9-parameter scale
 uses the ``impl="quantile"`` threshold finder (the kth magnitude via
 jnp.quantile on |w|) rather than an explicit top_k sort — the Pallas
 radix-select kernel implements the same threshold semantics exactly on
-TPU; see kernels/topk_compress.py.  The ``sync_mode="int8"`` path is the
-registry's ``Int8Sync`` codec: the cross-pod collective moves an int8
-payload (levels) + per-tensor scales, shrinking the HLO collective 4x vs
-syncing dense f32/bf16.  Each round also returns ``comm_bits`` — the exact
-in-graph wire cost of that round's cross-pod payload (BitsReport totals).
+TPU; see kernels/topk_compress.py.  The ``sync_mode="int8"`` path rides
+the wire codec layer (repro.compress.wire, DESIGN.md §8): ``wire.encode``
+emits the packed Payload (leaf-shaped int8 levels + per-tensor f32
+scales) whose cross-pod collective moves one byte per scalar, and the
+server side is ``wire.decode`` + mean — the same encode/decode API the
+simulator's packed rounds use, no hand-rolled encoding here.  Each round
+also returns ``comm_bits`` — the exact in-graph wire cost of that round's
+cross-pod payload (BitsReport totals).
 """
 
 from __future__ import annotations
@@ -200,29 +203,33 @@ def build_fed_round(spec: ArchSpec, shape: InputShape, mesh: Mesh,
         # Default: the dense cross-pod all-reduce moves every scalar.
         comm_bits = jnp.asarray(cx.dense_bits(x_hat))
         if fed.variant == "com" and fed.sync_mode == "int8":
-            # Int8Sync codec: level index * sign in int8, one f32 scale
-            # (norm / 2^r) per tensor.  The cross-pod gather moves int8;
-            # dequant + mean are pod-local.
+            # Int8Sync on the unified wire API (DESIGN.md §8): encode emits
+            # the packed Payload (leaf-shaped int8 levels + one f32 scale
+            # per tensor per client), decode + mean are pod-local.
             up_keys = jax.random.split(keys[-1], n_clients)
-            payload, scales = jax.vmap(int8.encode)(x_hat, up_keys)
+            payload, up_rep = jax.vmap(
+                lambda t, k: cx.wire.encode(int8, t, k))(x_hat, up_keys)
             # gather over `pod` ONLY (keep within-pod FSDP/TP sharding):
             # the wire collective is an int8 cross-pod all-gather.
-            payload = jax.tree_util.tree_map(
-                lambda t_, ns: jax.lax.with_sharding_constraint(
-                    t_, P(None, *ns.spec[1:])), payload, pshard)
-            x_bar = jax.tree_util.tree_map(
-                lambda q_, s_, xh: (q_.astype(jnp.float32)
-                                    * s_.reshape((-1,) + (1,) * (q_.ndim - 1))
-                                    ).mean(axis=0).astype(xh.dtype),
-                payload, scales, x_hat)
-            x_hat = jax.tree_util.tree_map(
-                lambda q_, s_, xh: (q_.astype(jnp.float32)
-                                    * s_.reshape((-1,) + (1,) * (q_.ndim - 1))
-                                    ).astype(xh.dtype),
-                payload, scales, x_hat)
+            data = tuple(
+                (jax.lax.with_sharding_constraint(q_, P(None, *ns.spec[1:])),
+                 s_)
+                for (q_, s_), ns in zip(payload.data,
+                                        jax.tree_util.tree_leaves(pshard)))
+            payload = cx.wire.Payload(data, payload.spec)
+            x_hat = jax.vmap(cx.wire.decode)(payload)
+            # mean in f32 straight from the payload (dequant -> mean -> one
+            # cast): per-client bf16 rounding before the mean would change
+            # the cross-pod average vs the dense path
+            x_bar = jax.tree_util.tree_unflatten(
+                payload.spec.treedef,
+                [(q_.astype(jnp.float32)
+                  * s_.reshape((-1,) + (1,) * (q_.ndim - 1))
+                  ).mean(axis=0).astype(dt)
+                 for (q_, s_), dt in zip(payload.data, payload.spec.dtypes)])
             # per-client codec report (one scale per tensor per client),
             # summed over the real leading client axis
-            comm_bits = jax.vmap(int8.report)(x_hat).reduce_sum().total_bits
+            comm_bits = up_rep.reduce_sum().total_bits
         else:
             if fed.variant == "com":
                 x_hat, up_rep = jax.vmap(comp.compress)(

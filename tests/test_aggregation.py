@@ -385,6 +385,22 @@ def test_set_policy_rebinds_and_is_idempotent():
     assert (np.asarray(m["clients_aggregated"]) == 2.0).all()
 
 
+def test_set_policy_after_traced_round_retraces():
+    """Regression: pjit's trace cache keys on the wrapped callable, and a
+    bound ``_round_impl`` compares equal across accesses — a rebind after
+    the first traced round must not silently reuse the old policy's graph
+    (``RoundEngine._rebind_impl`` wraps a fresh closure per rebind)."""
+    alg = build("fedcomloc")
+    _, m_sync = alg.round(alg.init(P0), jax.random.PRNGKey(0))
+    alg.set_policy(AggregationPolicy.semi_sync(1))
+    _, m_rebound = alg.round(alg.init(P0), jax.random.PRNGKey(0))
+    ref = build("fedcomloc", AggregationPolicy.semi_sync(1))
+    _, m_fresh = ref.round(ref.init(P0), jax.random.PRNGKey(0))
+    assert m_rebound["clients_aggregated"] == m_fresh["clients_aggregated"]
+    assert m_rebound["sim_time"] == m_fresh["sim_time"]
+    assert m_rebound["sim_time"] != m_sync["sim_time"]
+
+
 def test_policy_validation():
     with pytest.raises(ValueError, match="wait_for"):
         validate_policy(AggregationPolicy.semi_sync(S + 1), S)

@@ -80,6 +80,27 @@ def test_identity_and_int8_formulas():
     assert float(rep8.total_bits) == n * 8 + len(x) * 32
 
 
+def test_value_bits_follow_leaf_dtype():
+    """Dense/TopK value bits derive from the leaf dtype (DESIGN.md §3.2 /
+    §8 satellite): bf16 leaves ship 16-bit values, fp32 stays at the
+    FLOAT_BITS default — and mixed trees account each leaf at its own
+    width.  Q_r/int8 level codes are dtype-independent."""
+    from repro.compress import QuantQr, dense_report
+
+    bf = tree_of(1, [(40,), (6, 6)])
+    bf = {k: v.astype(jnp.bfloat16) for k, v in bf.items()}
+    assert float(dense_report(bf).total_bits) == 76 * 16
+    out, rep = TopK(density=0.25).compress(bf)
+    nnz = sum(int((v != 0).sum()) for v in out.values())
+    assert float(rep.value_bits) == nnz * 16
+    assert float(rep.index_bits) == nnz * 32
+    assert TopK(density=0.25).expected_bits(bf) == (10 + 9) * (16 + 32)
+    mixed = {"a": jnp.ones((8,), jnp.bfloat16), "b": jnp.ones((8,))}
+    assert float(dense_report(mixed).total_bits) == 8 * 16 + 8 * 32
+    _, repq = QuantQr(r=4).compress(bf, jax.random.PRNGKey(2))
+    assert float(repq.total_bits) == 76 * 5 + 2 * 32
+
+
 # --------------------------------------------------------------------------- #
 # 2. run_rounds == per-round loop, exactly
 # --------------------------------------------------------------------------- #
