@@ -6,6 +6,13 @@ Per (arch x shape x mesh):
   memory term     = HLO_bytes_total / (chips x 819e9 B/s)
   collective term = collective_bytes_total / (chips x 50e9 B/s per link)
 
+The **wire section** rooflines the uplink encode/decode the same way: per
+codec (from ``artifacts/wire_formats.json``), the streamed bytes (dense
+tree one side, packed payload the other) set a floor of ``bytes / HBM_BW``
+per encode on TPU, and the measured ``pack_bytes_per_s`` is reported as a
+fraction of that platform's stream roof — the distance the fused
+select+pack kernels still leave on the table.
+
 HLO flops/bytes from ``compiled.cost_analysis()`` are per-partition; the
 collective bytes are parsed from the partitioned HLO (also per-partition),
 so each term is per-chip time directly.  MODEL_FLOPS = 6*N*D (dense) or
@@ -18,6 +25,7 @@ import json
 from pathlib import Path
 
 ART_DIR = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+WIRE_ART = Path(__file__).resolve().parent / "artifacts" / "wire_formats.json"
 
 PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
 HBM_BW = 819e9               # B/s / chip
@@ -91,9 +99,59 @@ def format_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def wire_rows() -> list[dict]:
+    """Roofline the wire codecs from the committed wire_formats artifact.
+
+    Per codec: bytes streamed per encode (dense in + payload out), the
+    HBM-roof floor that traffic implies on TPU, and the measured pack /
+    unpack throughput as a fraction of the artifact platform's stream
+    bandwidth.  Missing artifact (or a pre-throughput one) yields [].
+    """
+    if not WIRE_ART.exists():
+        return []
+    data = json.loads(WIRE_ART.read_text())
+    rows = []
+    for r in data.get("rows", []):
+        if "pack_bytes_per_s" not in r:
+            continue    # round_overhead row / artifact predating the cols
+        codec = r["name"].split("/", 1)[1]
+        streamed = r["dense_bytes"] + r["payload_bytes"]
+        rows.append({
+            "codec": codec,
+            "platform": data.get("platform", "?"),
+            "streamed_bytes": streamed,
+            "t_hbm_floor_s": streamed / HBM_BW,
+            "pack_bytes_per_s": r["pack_bytes_per_s"],
+            "unpack_bytes_per_s": r["unpack_bytes_per_s"],
+            "pack_pct_stream_bw": r["pack_pct_stream_bw"],
+            "unpack_pct_stream_bw": r["unpack_pct_stream_bw"],
+        })
+    return rows
+
+
+def format_wire_table(rows: list[dict]) -> str:
+    if not rows:
+        return "wire: no wire_formats.json artifact with throughput columns"
+    out = [f"{'codec':18s} {'streamed':>10s} {'HBM floor':>10s} "
+           f"{'pack GB/s':>10s} {'%roof':>6s} {'unpack GB/s':>12s} "
+           f"{'%roof':>6s}"]
+    for r in rows:
+        out.append(
+            f"{r['codec']:18s} {r['streamed_bytes']/1e6:8.2f}MB "
+            f"{r['t_hbm_floor_s']*1e6:8.2f}us "
+            f"{r['pack_bytes_per_s']/1e9:10.3f} "
+            f"{r['pack_pct_stream_bw']:5.1f}% "
+            f"{r['unpack_bytes_per_s']/1e9:12.3f} "
+            f"{r['unpack_pct_stream_bw']:5.1f}%")
+    return "\n".join(out)
+
+
 def run(fast: bool = False):
     rows = load_all()
     print(format_table(rows))
+    wrows = wire_rows()
+    print("\n-- wire encode/decode vs stream roof --")
+    print(format_wire_table(wrows))
     return [
         {"name": f"roofline/{r['arch']}__{r['shape']}",
          "us_per_round": round(max(r["t_compute_s"], r["t_memory_s"],
@@ -102,8 +160,17 @@ def run(fast: bool = False):
          "bottleneck": r["bottleneck"],
          "useful": round(r["useful_flops_ratio"], 3)}
         for r in rows if r.get("status") == "ok"
+    ] + [
+        {"name": f"roofline/wire__{w['codec']}",
+         "us_per_round": round(w["t_hbm_floor_s"] * 1e6, 1),
+         "best_acc": "", "total_mbits": "",
+         "bottleneck": "memory",
+         "useful": round(w["pack_pct_stream_bw"] / 100, 3)}
+        for w in wrows
     ]
 
 
 if __name__ == "__main__":
     print(format_table(load_all()))
+    print("\n-- wire encode/decode vs stream roof --")
+    print(format_wire_table(wire_rows()))

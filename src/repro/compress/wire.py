@@ -55,7 +55,7 @@ import jax.numpy as jnp
 from repro.compress.compressors import (
     Compose, Compressor, Identity, Int8Sync, QuantQr, TopK)
 from repro.compress.report import (
-    FLOAT_BITS, INDEX_BITS, BitsReport, dense_report)
+    FLOAT_BITS, INDEX_BITS, BitsReport, dense_report, leaf_value_bits)
 from repro.kernels import ops as kops
 
 PyTree = Any
@@ -231,57 +231,53 @@ def _units_to_tree(units, spec: WireSpec) -> PyTree:
 # --------------------------------------------------------------------------- #
 # sparse (index, value) slots — static capacity, sentinel-padded
 # --------------------------------------------------------------------------- #
+#
+# Slot *extraction* lives in the fused kernels now
+# (``kops.topk_slots`` / ``kops.topk_qr_slots``: threshold select +
+# streaming compaction, no sort and no n-sized cumsum on the Pallas
+# backends); this module keeps only the decode-side scatter.
 
-def _support_slots(flat: jax.Array, cap: int):
-    """Indices of ``flat``'s support in ``cap`` static slots, lowest index
-    first; empty slots carry the sentinel ``n``.
+def _scatter_units(entries, unit_sizes, dtype):
+    """Decode-side placement: one masked scatter for the whole payload.
 
-    No sort and no n-sized scatter (XLA scatters crawl on CPU): slot ``j``
-    holds the index of the (j+1)-th nonzero, found by binary search on the
-    nonzero-count cumsum — one O(n) streaming pass plus ``cap`` gathers.
-    Queries beyond the support return ``n`` (the sentinel) for free, and
-    tie-overflow beyond ``cap`` keeps the lowest-index ``cap``."""
-    csum = jnp.cumsum((flat != 0).astype(jnp.int32))
-    return jnp.searchsorted(
-        csum, jnp.arange(1, cap + 1, dtype=jnp.int32),
-        side="left").astype(jnp.int32)
-
-
-def _gather_slots(flat: jax.Array, idx: jax.Array) -> jax.Array:
-    n = flat.size
-    safe = jnp.clip(idx, 0, n - 1)
-    return jnp.where(idx < n, flat[safe], jnp.zeros((), flat.dtype))
-
-
-def _scatter_slots(idx: jax.Array, vals: jax.Array, n: int,
-                   dtype) -> jax.Array:
-    return jnp.zeros((n,), dtype).at[idx.astype(jnp.int32)].set(
-        vals, mode="drop")
+    ``entries`` is one ``(idx, vals)`` pair per sparse unit (sentinel-``n``
+    indices mark empty slots).  Unit indices are offset into a single
+    concatenated index space — sentinels map to ``total`` so one
+    ``mode="drop"`` scatter places every unit's survivors at once (one
+    XLA scatter instead of one per leaf), then the flat result is split
+    back into units."""
+    total = sum(unit_sizes)
+    offs, off = [], 0
+    for n in unit_sizes:
+        offs.append(off)
+        off += n
+    idx_all = jnp.concatenate([
+        jnp.where(idx < n, idx.astype(jnp.int32) + off, total)
+        for (idx, _), n, off in zip(entries, unit_sizes, offs)])
+    val_all = jnp.concatenate([v.astype(dtype) for _, v in entries])
+    flat = jnp.zeros((total,), dtype).at[idx_all].set(val_all, mode="drop")
+    return [flat[off:off + n] for off, n in zip(offs, unit_sizes)]
 
 
-# --------------------------------------------------------------------------- #
-# quantizer codes (sign bit | r level bits), bit-identical to Def. 3.2
-# --------------------------------------------------------------------------- #
-
-def _qr_codes(flat: jax.Array, r: int, key: jax.Array):
-    """The transform's stochastic levels as (1+r)-bit integer codes.
-
-    Replays :func:`repro.kernels.ref.quantize_qr` exactly — same uniforms,
-    same arithmetic — but keeps the integer level instead of the float
-    value, so ``_qr_values`` reconstructs the transform's output
-    bit-for-bit (top-level saturation aside, see module docstring).
-    """
-    levels = jnp.asarray(2 ** r, jnp.float32)
-    xf = flat.astype(jnp.float32)
-    norm = jnp.sqrt(jnp.sum(xf * xf))
-    u = jax.random.uniform(key, flat.shape, dtype=jnp.float32)
-    y = jnp.abs(xf) / jnp.where(norm > 0, norm, 1.0)
-    scaled = levels * y
-    lo = jnp.floor(scaled)
-    code = (lo + (u < scaled - lo)).astype(jnp.uint32)
-    code = jnp.minimum(code, jnp.uint32(2 ** r - 1))     # saturate top level
-    sign = (xf < 0).astype(jnp.uint32)
-    return (sign << r) | code, norm
+def _sparse_report_from_support(leaves, supports, scope: str) -> BitsReport:
+    """The TopK transform's bit accounting, from the fused kernels' support
+    masks — per leaf and in the leaf order, replicating
+    ``compressors._sparse_report`` exactly (same accumulation order, nnz
+    from the same kept-support set) so account-only and wire rounds see
+    identical bit metrics without materialising the masked tree."""
+    if scope == "global":
+        segs, off = [], 0
+        for leaf in leaves:
+            segs.append(supports[0][off:off + leaf.size])
+            off += leaf.size
+    else:
+        segs = supports
+    vb = ib = 0.0
+    for leaf, seg in zip(leaves, segs):
+        nnz = jnp.sum(seg).astype(jnp.float32)
+        vb = vb + nnz * leaf_value_bits(leaf)
+        ib = ib + nnz * INDEX_BITS
+    return BitsReport(value_bits=vb, index_bits=ib)
 
 
 def _qr_values(codes: jax.Array, norm: jax.Array, r: int) -> jax.Array:
@@ -326,15 +322,18 @@ def encode(comp: Optional[Compressor], tree: PyTree,
         return Payload(data, mkspec(data)), dense_report(tree)
 
     if codec == "topk":
-        out, report = comp.compress(tree)
-        _, _, out_units = _tree_units(out, scope)
-        caps, data = [], []
-        for u in out_units:
+        # Fused select+pack: per unit, one threshold select + one streaming
+        # compaction emits the (idx, vals) slots directly — the masked tree
+        # is never materialised; the report comes from the support masks.
+        caps, data, sups = [], [], []
+        for u in units:
             cap = comp._k(u.size)
-            idx = _support_slots(u, cap)
-            data.append((idx.astype(jnp.uint32), _gather_slots(u, idx)))
+            idx, vals, support = kops.topk_slots(u, cap, cap)
+            data.append((idx, vals))
             caps.append(cap)
+            sups.append(support)
         data = tuple(data)
+        report = _sparse_report_from_support(leaves, sups, scope)
         return Payload(data, mkspec(data, caps=tuple(caps))), report
 
     if codec == "qr":
@@ -350,8 +349,8 @@ def encode(comp: Optional[Compressor], tree: PyTree,
         keys = jax.random.split(rng, len(leaves))
         data = []
         for i, u in enumerate(units):
-            codes, norm = _qr_codes(u, r, keys[min(i, len(leaves) - 1)])
-            data.append((kops.pack_codes(codes, 1 + r), norm))
+            words, norm = kops.quantize_pack(u, r, keys[min(i, len(leaves) - 1)])
+            data.append((words, norm))
         data = tuple(data)
         n = sum(u.size for u in units)
         report = BitsReport(
@@ -364,19 +363,17 @@ def encode(comp: Optional[Compressor], tree: PyTree,
             raise ValueError("quantizer codecs need an rng key")
         _, k2 = jax.random.split(rng)            # compose's (k1, k2) split
         r = comp.second.r
-        mid, rep1 = comp.first.compress(tree)
-        _, _, mid_units = _tree_units(mid, scope)
         keys = jax.random.split(k2, len(leaves))
-        caps, data = [], []
-        for i, u in enumerate(mid_units):
-            codes, norm = _qr_codes(u, r, keys[min(i, len(leaves) - 1)])
+        caps, data, sups = [], [], []
+        for i, u in enumerate(units):
             cap = comp.first._k(u.size)
-            idx = _support_slots(u, cap)
-            kept = _gather_slots(codes, idx)
-            data.append((idx.astype(jnp.uint32),
-                         kops.pack_codes(kept, 1 + r), norm))
+            idx, words, norm, support = kops.topk_qr_slots(
+                u, cap, cap, r, keys[min(i, len(leaves) - 1)])
+            data.append((idx, words, norm))
             caps.append(cap)
+            sups.append(support)
         data = tuple(data)
+        rep1 = _sparse_report_from_support(leaves, sups, scope)
         nnz = rep1.index_bits / INDEX_BITS       # the transmitted support
         report = BitsReport(
             value_bits=nnz * (1 + r), index_bits=rep1.index_bits,
@@ -407,22 +404,31 @@ def decode(payload: Payload) -> PyTree:
         sizes.append(size)
     unit_sizes = [sum(sizes)] if spec.scope == "global" else sizes
 
+    if spec.codec in ("topk", "topk_qr"):
+        # One masked scatter for the whole payload: unit slots concatenate
+        # into a single offset index space (sentinels drop), so the decode
+        # issues one XLA scatter instead of one ``.at[].set`` per unit.
+        entries = []
+        for i, bufs in enumerate(payload.data):
+            if spec.codec == "topk":
+                idx, vals = bufs
+            else:
+                idx, words, norm = bufs
+                codes = kops.unpack_codes(words, 1 + spec.r, spec.caps[i])
+                vals = _qr_values(codes, norm, spec.r)
+            entries.append((idx, vals))
+        vtype = jnp.result_type(*[v.dtype for _, v in entries])
+        units = _scatter_units(entries, unit_sizes, vtype)
+        return _units_to_tree(units, spec)
+
     units = []
-    for i, (bufs, n) in enumerate(zip(payload.data, unit_sizes)):
+    for bufs, n in zip(payload.data, unit_sizes):
         if spec.codec == "dense":
             units.append(bufs[0])
-        elif spec.codec == "topk":
-            idx, vals = bufs
-            units.append(_scatter_slots(idx, vals, n, vals.dtype))
         elif spec.codec == "qr":
             words, norm = bufs
             codes = kops.unpack_codes(words, 1 + spec.r, n)
             units.append(_qr_values(codes, norm, spec.r))
-        elif spec.codec == "topk_qr":
-            idx, words, norm = bufs
-            codes = kops.unpack_codes(words, 1 + spec.r, spec.caps[i])
-            vals = _qr_values(codes, norm, spec.r)
-            units.append(_scatter_slots(idx, vals, n, vals.dtype))
         elif spec.codec == "int8":
             q, s = bufs                       # q keeps the leaf's shape
             units.append((q.astype(jnp.float32) * s).reshape(-1))
@@ -431,10 +437,49 @@ def decode(payload: Payload) -> PyTree:
     return _units_to_tree(units, spec)
 
 
+_NBYTES_CACHE: dict = {}
+
+
+def _static_wire_key(comp: Optional[Compressor], tree: PyTree):
+    """The static tuple packed sizes depend on:
+    ``(codec, scope, shapes, dtypes, caps, r)``."""
+    codec = check_supported(comp)
+    scope = _scope_of(comp, codec)
+    leaves = jax.tree_util.tree_leaves(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype).name for l in leaves)
+    sizes = [l.size for l in leaves]
+    unit_sizes = [sum(sizes)] if scope == "global" else sizes
+    if codec == "topk":
+        caps = tuple(comp._k(n) for n in unit_sizes)
+    elif codec == "topk_qr":
+        caps = tuple(comp.first._k(n) for n in unit_sizes)
+    else:
+        caps = ()
+    if codec == "qr":
+        r = comp.second.r if isinstance(comp, Compose) else comp.r
+    elif codec == "topk_qr":
+        r = comp.second.r
+    elif codec == "int8":
+        r = comp.magnitude_bits
+    else:
+        r = 0
+    return (codec, scope, shapes, dtypes, caps, r)
+
+
 def payload_nbytes(comp: Optional[Compressor], tree: PyTree) -> int:
     """Static packed bytes of ``comp``'s wire format for ``tree`` — the
     planning-side counterpart of ``Compressor.expected_bits`` (exact, since
-    packed shapes are static)."""
-    struct = jax.eval_shape(
-        lambda t: encode(comp, t, jax.random.PRNGKey(0))[0], tree)
-    return struct.spec.nbytes
+    packed shapes are static).
+
+    Memoized on ``(codec, scope, shapes, dtypes, caps, r)``: schedule
+    builders query this per round, and the abstract ``jax.eval_shape``
+    trace of ``encode`` only runs on the first sighting of a
+    configuration — every later call is a dict lookup."""
+    key = _static_wire_key(comp, tree)
+    nbytes = _NBYTES_CACHE.get(key)
+    if nbytes is None:
+        struct = jax.eval_shape(
+            lambda t: encode(comp, t, jax.random.PRNGKey(0))[0], tree)
+        nbytes = _NBYTES_CACHE[key] = struct.spec.nbytes
+    return nbytes

@@ -21,11 +21,15 @@ from typing import Literal, Optional
 import jax
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.kernels import flash_attention as _fa
 from repro.kernels import pack_codes as _pack
+from repro.kernels import qr_pack as _qr_pack
 from repro.kernels import quantize as _quant
 from repro.kernels import ref as _ref
 from repro.kernels import rglru_scan as _rg
+from repro.kernels import select_slots as _sel
 from repro.kernels import topk_compress as _topk
 from repro.kernels import wkv6 as _wkv
 
@@ -75,6 +79,79 @@ def quantize_qr(x: jax.Array, r, key: jax.Array) -> jax.Array:
         # kernel needs a static level count.
         return _ref.quantize_qr(x, r, key)
     return _quant.quantize_qr(x, int(r), key, interpret=(mode == "interpret"))
+
+
+def topk_slots(x: jax.Array, k, cap: int):
+    """Fused TopK select + slot extraction (the ``topk`` wire codec).
+
+    Returns ``(idx, vals, support)``: ``cap`` uint32 slot indices (sentinel
+    ``x.size`` in empty slots), the gathered values at ``x.dtype``, and the
+    n-sized kept-support mask the bit accounting counts.  Pallas backends
+    run the radix threshold + the streaming compaction kernel; traced ``k``
+    (per-client densities) falls back to the jnp oracle, whose binary-search
+    threshold keeps ``k`` in-graph.
+    """
+    mode = _resolve()
+    if mode == "ref" or _is_traced(k):
+        return _ref.topk_slots(x, k, int(cap))
+    interp = mode == "interpret"
+    t = _topk.threshold_bits(x, int(k), interpret=interp)
+    bits = _ref._mag_bits(x)
+    support = (bits >= t) & (bits != jnp.uint32(0))
+    idx, vals = _sel.compact_slots(x, t, int(cap), interpret=interp)
+    return idx.astype(jnp.uint32), vals.astype(x.dtype), support
+
+
+def quantize_pack(x: jax.Array, r: int, key: jax.Array):
+    """Fused Q_r quantize + bit-plane pack (the ``qr`` wire codec).
+
+    Returns ``(words, norm)``: the (1+r)-bit sign+level codes packed into
+    ``ceil(n/32) * (1+r)`` uint32 words, and the l2 norm (the quantizer's
+    scale).  Uniforms come from ``key`` exactly as ``quantize_qr`` draws
+    them, and each backend computes the norm the way its transform path
+    does (jnp sum on ref, the grid-accumulated sum-of-squares kernel on
+    Pallas), so ``decode(encode(x))`` is bit-identical to the transform on
+    every backend.  ``r`` must be static (the pack width is a shape).
+    """
+    mode = _resolve()
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    if mode == "ref":
+        xf = x.astype(jnp.float32)
+        norm = jnp.sqrt(jnp.sum(xf * xf))
+        return _ref.quantize_pack_with_uniforms(x, int(r), u, norm), norm
+    interp = mode == "interpret"
+    norm = _quant.l2_norm(x, interpret=interp)
+    words = _qr_pack.quantize_pack_with_uniforms(
+        x, int(r), u, norm, interpret=interp)
+    return words, norm
+
+
+def topk_qr_slots(x: jax.Array, k, cap: int, r: int, key: jax.Array):
+    """Fused TopK -> Q_r -> packed slots (the ``topk_qr`` wire codec).
+
+    Returns ``(idx, words, norm, support)`` — see
+    :func:`repro.kernels.ref.topk_qr_slots`.  On Pallas backends the
+    survivor codes are computed and compacted in one kernel pass
+    (:func:`repro.kernels.select_slots.compact_code_slots`) and packed at
+    the static capacity; the norm is the masked vector's, via the same
+    reduction as the transform's quantizer.
+    """
+    mode = _resolve()
+    u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+    if mode == "ref" or _is_traced(k):
+        return _ref.topk_qr_slots(x, k, int(cap), int(r), u)
+    interp = mode == "interpret"
+    k, cap, r = int(k), int(cap), int(r)
+    t = _topk.threshold_bits(x, k, interpret=interp)
+    bits = _ref._mag_bits(x)
+    keep = bits >= t
+    support = keep & (bits != jnp.uint32(0))
+    masked = jnp.where(keep, x.astype(jnp.float32), 0.0)
+    norm = _quant.l2_norm(masked, interpret=interp)
+    idx, codes = _sel.compact_code_slots(x, u, norm, t, r, cap,
+                                         interpret=interp)
+    words = _pack.pack_codes(codes, 1 + r, interpret=interp)
+    return idx.astype(jnp.uint32), words, norm, support
 
 
 def pack_codes(codes: jax.Array, b: int) -> jax.Array:

@@ -64,6 +64,35 @@ def _block_spec():
 _SCALAR_SPEC = pl.BlockSpec((1, 1), lambda i: (0, 0))
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def l2_norm(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """l2 norm of a 1-D vector via the streaming sum-of-squares kernel.
+
+    The quantizer's scale.  Exposed so the fused wire-encode ops
+    (:mod:`repro.kernels.ops`) compute the *same* grid-accumulated
+    reduction the transform kernel uses — bit-identical norms between
+    transform and wire payload on the Pallas backends.
+    """
+    if x.ndim != 1:
+        raise ValueError(f"expects 1-D input, got {x.shape}")
+    n = x.size
+    x2d = _pad_to_block(x.astype(jnp.float32))
+    rows = x2d.shape[0]
+    idx = (jax.lax.broadcasted_iota(jnp.int32, (rows, _BLOCK_COLS), 0)
+           * _BLOCK_COLS
+           + jax.lax.broadcasted_iota(jnp.int32, (rows, _BLOCK_COLS), 1))
+    valid = (idx < n).astype(jnp.int32)
+    sumsq = pl.pallas_call(
+        _sumsq_kernel,
+        grid=(rows // _BLOCK_ROWS,),
+        in_specs=[_block_spec(), _block_spec()],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x2d, valid)
+    return jnp.sqrt(sumsq)[0, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("r", "interpret"))
 def quantize_qr_with_uniforms(
     x: jax.Array, r: int, u: jax.Array, *, interpret: bool = False
@@ -77,21 +106,8 @@ def quantize_qr_with_uniforms(
     x2d = _pad_to_block(xf)
     u2d = _pad_to_block(u.astype(jnp.float32))
     rows = x2d.shape[0]
-    idx = (jax.lax.broadcasted_iota(jnp.int32, (rows, _BLOCK_COLS), 0)
-           * _BLOCK_COLS
-           + jax.lax.broadcasted_iota(jnp.int32, (rows, _BLOCK_COLS), 1))
-    valid = (idx < n).astype(jnp.int32)
     grid = rows // _BLOCK_ROWS
-
-    sumsq = pl.pallas_call(
-        _sumsq_kernel,
-        grid=(grid,),
-        in_specs=[_block_spec(), _block_spec()],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        interpret=interpret,
-    )(x2d, valid)
-    norm = jnp.sqrt(sumsq)
+    norm = l2_norm(x, interpret=interpret).reshape(1, 1)
 
     out2d = pl.pallas_call(
         functools.partial(_quant_kernel, levels=float(2 ** r)),

@@ -14,6 +14,46 @@ import jax.numpy as jnp
 # TopK masking (paper Definition 3.1, threshold semantics)
 # --------------------------------------------------------------------------- #
 
+def _mag_bits(x: jax.Array) -> jax.Array:
+    """|x| as uint32 bit patterns (after an f32 cast).
+
+    For finite non-negative floats the uint32 order equals the float order,
+    so magnitude selection runs on integer bit patterns.  The f32 cast is an
+    exact order-embedding for bf16/f16 inputs, so masks computed on the cast
+    bits equal masks computed on the original dtype.
+    """
+    xf = x.astype(jnp.float32)
+    return jax.lax.bitcast_convert_type(jnp.abs(xf), jnp.uint32)
+
+
+def topk_threshold_bits(x: jax.Array, k) -> jax.Array:
+    """uint32 bit pattern of the k-th largest |x_i| (the TopK threshold).
+
+    A 32-pass binary search on the magnitude bit patterns: pass ``i``
+    tentatively sets bit ``31 - i`` of the candidate threshold and keeps it
+    iff at least ``k`` elements compare >= the candidate.  The result is the
+    largest ``t`` with ``count(bits >= t) >= k`` — exactly the k-th largest
+    magnitude's bit pattern, ties included.  Each pass is one compare + one
+    reduce (O(n) streaming), replacing the O(n log n) sort / ``lax.top_k``
+    the transform path used before; ``k`` may be traced (clipped to
+    ``[0, n]``; ``k == 0`` yields the all-ones pattern, i.e. empty support).
+    Same answer as the Pallas radix-histogram walk in
+    :mod:`repro.kernels.topk_compress`.
+    """
+    if x.ndim != 1:
+        raise ValueError(
+            f"topk_threshold_bits expects 1-D input, got shape {x.shape}")
+    bits = _mag_bits(x)
+    kc = jnp.clip(jnp.asarray(k, jnp.int32), 0, x.size)
+
+    def body(i, t):
+        cand = t | (jnp.uint32(1) << (jnp.uint32(31) - jnp.uint32(i)))
+        cnt = jnp.sum((bits >= cand).astype(jnp.int32))
+        return jnp.where(cnt >= kc, cand, t)
+
+    return jax.lax.fori_loop(0, 32, body, jnp.uint32(0))
+
+
 def topk_mask(x: jax.Array, k: int) -> jax.Array:
     """Zero all but the k largest-magnitude entries of the 1-D vector ``x``.
 
@@ -21,34 +61,73 @@ def topk_mask(x: jax.Array, k: int) -> jax.Array:
     k-th largest magnitude.  Ties at t are all kept (Def. 3.1 allows an
     arbitrary minimiser; threshold semantics is the one implementable without
     a data-dependent output shape, and the one the Pallas radix-select kernel
-    produces).
+    produces).  The threshold comes from :func:`topk_threshold_bits` — a
+    bit-pattern binary search, not a sort.
     """
     if x.ndim != 1:
         raise ValueError(f"topk_mask expects 1-D input, got shape {x.shape}")
     k = int(k)
     if k >= x.size:
         return x
-    mag = jnp.abs(x)
-    kth = jax.lax.top_k(mag, k)[0][k - 1]
-    return jnp.where(mag >= kth, x, jnp.zeros_like(x))
+    t = topk_threshold_bits(x, k)
+    return jnp.where(_mag_bits(x) >= t, x, jnp.zeros_like(x))
 
 
 def topk_mask_dynamic(x: jax.Array, k: jax.Array) -> jax.Array:
     """``topk_mask`` with a *traced* k (per-client densities under ``vmap``).
 
-    Same threshold semantics as :func:`topk_mask` — the k-th largest
-    magnitude is found by a full descending sort plus a dynamic gather, so
-    the output shape stays static while k varies per trace.  At k >= size
-    every entry is kept (dense payload).
+    Same threshold semantics as :func:`topk_mask` via the same bit-pattern
+    binary search, so the output shape stays static while k varies per
+    trace.  At k >= size every entry is kept (dense payload).
     """
     if x.ndim != 1:
         raise ValueError(
             f"topk_mask_dynamic expects 1-D input, got shape {x.shape}")
-    mag = jnp.abs(x)
-    desc = jnp.sort(mag)[::-1]
     kc = jnp.clip(jnp.asarray(k, jnp.int32), 1, x.size)
-    kth = desc[kc - 1]
-    return jnp.where(mag >= kth, x, jnp.zeros_like(x))
+    t = topk_threshold_bits(x, kc)
+    return jnp.where(_mag_bits(x) >= t, x, jnp.zeros_like(x))
+
+
+# --------------------------------------------------------------------------- #
+# Fused select -> slots (wire uplink, DESIGN.md §8)
+# --------------------------------------------------------------------------- #
+
+def support_slots(support: jax.Array, cap: int) -> jax.Array:
+    """Indices of the ``cap`` lowest-index True entries of ``support``
+    (int32); empty slots carry the sentinel ``n = support.size``.
+
+    Slot ``j`` holds the index of the (j+1)-th True entry, found by binary
+    search on the support-count cumsum — one O(n) streaming pass plus
+    ``cap`` gathers, no sort and no n-sized scatter.  Queries beyond the
+    support return ``n`` for free; overflow beyond ``cap`` keeps the
+    lowest-index ``cap``."""
+    csum = jnp.cumsum(support.astype(jnp.int32))
+    return jnp.searchsorted(
+        csum, jnp.arange(1, cap + 1, dtype=jnp.int32),
+        side="left").astype(jnp.int32)
+
+
+def topk_slots(x: jax.Array, k, cap: int):
+    """Fused TopK select + slot extraction: the wire codec's sparse payload.
+
+    Returns ``(idx, vals, support)`` where ``idx`` is ``cap`` uint32 slot
+    indices (sentinel ``n`` when the support underfills the capacity),
+    ``vals`` the gathered values at ``x.dtype`` (0 in empty slots), and
+    ``support`` the n-sized kept-support mask — exactly the nonzero set of
+    the TopK-masked vector, i.e. ``|x_i| >= t`` *and* ``x_i != 0`` (the
+    conjunction matters when the k-th magnitude is 0: already-zero entries,
+    e.g. error-feedback innovations, never ship).
+    """
+    if x.ndim != 1:
+        raise ValueError(f"topk_slots expects 1-D input, got shape {x.shape}")
+    n = x.size
+    bits = _mag_bits(x)
+    t = topk_threshold_bits(x, k)    # k >= n: t = min bits, all nonzero kept
+    support = (bits >= t) & (bits != 0)
+    idx = support_slots(support, cap)
+    safe = jnp.clip(idx, 0, n - 1)
+    vals = jnp.where(idx < n, x[safe], jnp.zeros((), x.dtype))
+    return idx.astype(jnp.uint32), vals, support
 
 
 # --------------------------------------------------------------------------- #
@@ -125,6 +204,71 @@ def unpack_codes(words: jax.Array, b: int, n: int) -> jax.Array:
     shifts = jnp.arange(b, dtype=jnp.uint32)[None, None, :]
     codes = jnp.sum(bits << shifts, axis=2, dtype=jnp.uint32)
     return codes.reshape(n32 * 32)[:n]
+
+
+# --------------------------------------------------------------------------- #
+# Fused quantize -> pack and select -> quantize -> pack (wire uplink, §8)
+# --------------------------------------------------------------------------- #
+
+def qr_codes_with_uniforms(x: jax.Array, r: int, u: jax.Array,
+                           norm: jax.Array) -> jax.Array:
+    """The transform's stochastic Q_r levels as (1+r)-bit integer codes.
+
+    Same uniforms and arithmetic as :func:`quantize_qr_with_uniforms`, but
+    keeps the integer level (sign bit ``<< r`` | r level bits) instead of
+    the float value.  The top level ``2**r`` saturates to ``2**r - 1`` so
+    codes fit their r bits — the wire codec's documented divergence from
+    the transform.  ``norm`` is taken as an operand (not recomputed) so
+    kernel and oracle stay bit-identical for the same reduction.
+    """
+    levels = jnp.asarray(2 ** r, jnp.float32)
+    xf = x.astype(jnp.float32)
+    y = jnp.abs(xf) / jnp.where(norm > 0, norm, 1.0)
+    scaled = levels * y
+    lo = jnp.floor(scaled)
+    code = (lo + (u < scaled - lo)).astype(jnp.uint32)
+    code = jnp.minimum(code, jnp.uint32(2 ** r - 1))     # saturate top level
+    sign = (xf < 0).astype(jnp.uint32)
+    return (sign << r) | code
+
+
+def quantize_pack_with_uniforms(x: jax.Array, r: int, u: jax.Array,
+                                norm: jax.Array) -> jax.Array:
+    """Fused Q_r quantize + bit-plane pack: codes straight to uint32 words.
+
+    Oracle for the fused Pallas kernel (:mod:`repro.kernels.qr_pack`),
+    which never materialises the dense code array in HBM.
+    """
+    return pack_codes(qr_codes_with_uniforms(x, r, u, norm), 1 + int(r))
+
+
+def topk_qr_slots(x: jax.Array, k, cap: int, r: int, u: jax.Array):
+    """Fused TopK -> Q_r -> packed slots (the ``topk_qr`` wire codec).
+
+    Returns ``(idx, words, norm, support)``: ``cap`` uint32 slot indices
+    (sentinel ``n``), the survivors' (1+r)-bit codes bit-plane packed into
+    ``ceil(cap/32) * (1+r)`` uint32 words (code 0 in empty slots), the l2
+    norm of the TopK-masked vector (the quantizer's scale, computed over
+    the n-sized masked array so the reduction order matches the
+    transform's), and the kept-support mask as in :func:`topk_slots`.
+    """
+    if x.ndim != 1:
+        raise ValueError(
+            f"topk_qr_slots expects 1-D input, got shape {x.shape}")
+    n = x.size
+    bits = _mag_bits(x)
+    t = topk_threshold_bits(x, k)
+    keep = bits >= t
+    support = keep & (bits != 0)
+    xf = x.astype(jnp.float32)
+    masked = jnp.where(keep, xf, 0.0)
+    norm = jnp.sqrt(jnp.sum(masked * masked))
+    codes = qr_codes_with_uniforms(masked, r, u, norm)
+    idx = support_slots(support, cap)
+    safe = jnp.clip(idx, 0, n - 1)
+    kept = jnp.where(idx < n, codes[safe], jnp.uint32(0))
+    words = pack_codes(kept, 1 + int(r))
+    return idx.astype(jnp.uint32), words, norm, support
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,223 @@
+"""Pallas TPU kernels for fused select -> slot compaction (DESIGN.md §8).
+
+The wire codec's sparse payload is a static-capacity array of
+``(uint32 index, value)`` slots.  PR 5 built it from the TopK transform
+output with an n-sized cumsum + ``searchsorted`` + gathers; the kernels
+here emit the slots directly from the threshold in one streaming pass:
+
+  1. the k-th-magnitude threshold ``t`` comes from the radix walk
+     (:func:`repro.kernels.topk_compress.threshold_bits`) — 4 histogram
+     passes, shared with the TopK transform path;
+  2. a single compaction pass tiles x through VMEM; each (8, 128) block
+     computes its survivors' block-local prefix sum (two triangular-matrix
+     dots: inclusive lane prefix per sublane row, then row offsets), adds
+     the running survivor count carried across the sequential grid, and
+     one-hot accumulates ``(index, payload)`` into the revisited
+     ``(1, cap_pad)`` output slabs.
+
+Survivors are assigned slots in index order and the carried count is
+monotone, so tie overflow beyond ``cap`` keeps the lowest-index ``cap`` —
+exactly the searchsorted semantics.  Empty slots keep their sentinel-``n``
+init (index) and 0 (payload).
+
+Two payload flavours share the machinery: ``compact_slots`` carries the
+values themselves (the ``topk`` codec), ``compact_code_slots`` fuses the
+Q_r code computation (sign + stochastic level, saturated) into the block
+body and compacts the *codes* (the ``topk_qr`` codec), so the dense code
+array never exists — survivors leave VMEM already quantized.
+
+Counts and prefix sums accumulate in float32 (exact below 2^24, the same
+envelope as the histogram kernel); one ``cap_pad``-wide one-hot per
+sublane row bounds the block temporaries to ``128 * cap_pad`` lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK_ROWS = 8
+_BLOCK_COLS = 128
+_BLOCK = _BLOCK_ROWS * _BLOCK_COLS
+
+
+def _pad_to_block(x: jax.Array):
+    n = x.size
+    padded = pl.cdiv(n, _BLOCK) * _BLOCK
+    return jnp.pad(x, (0, padded - n)).reshape(-1, _BLOCK_COLS)
+
+
+def _block_spec():
+    return pl.BlockSpec((_BLOCK_ROWS, _BLOCK_COLS), lambda i: (i, 0))
+
+
+_SCALAR_SPEC = pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def _block_positions(keep):
+    """Global slot position assignment for a block's survivors.
+
+    Returns the (8, 128) inclusive prefix sum of ``keep`` in row-major
+    order, as float32.  Two MXU-friendly triangular dots instead of an
+    in-kernel cumsum: lane-prefix within each sublane row, then each row
+    offset by the full rows above it.
+    """
+    kf = keep.astype(jnp.float32)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (_BLOCK_COLS, _BLOCK_COLS), 0)
+           <= jax.lax.broadcasted_iota(
+               jnp.int32, (_BLOCK_COLS, _BLOCK_COLS), 1)).astype(jnp.float32)
+    row_incl = jax.lax.dot(kf, tri)                    # (8, 128) lane prefix
+    row_tot = row_incl[:, _BLOCK_COLS - 1:]            # (8, 1) row sums
+    strict = (jax.lax.broadcasted_iota(jnp.int32, (_BLOCK_ROWS, _BLOCK_ROWS), 1)
+              < jax.lax.broadcasted_iota(
+                  jnp.int32, (_BLOCK_ROWS, _BLOCK_ROWS), 0)).astype(jnp.float32)
+    row_off = jax.lax.dot(strict, row_tot)             # (8, 1) rows above
+    return row_incl + row_off
+
+
+def _scatter_rows(pos, keep, gidx, payload, idx_ref, pay_ref, *,
+                  n: int, cap_pad: int):
+    """One-hot accumulate (index, payload) into the revisited output slabs,
+    one sublane row at a time to bound the (128, cap_pad) temporaries."""
+    slot = jax.lax.broadcasted_iota(jnp.int32, (_BLOCK_COLS, cap_pad), 1)
+    for rr in range(_BLOCK_ROWS):
+        hit = (pos[rr][:, None] == slot) & keep[rr][:, None]
+        # sentinel-n init + (g - n) contribution = g for the filled slot
+        idx_ref[...] += jnp.sum(
+            jnp.where(hit, (gidx[rr] - n)[:, None].astype(jnp.float32), 0.0),
+            axis=0, keepdims=True)
+        pay_ref[...] += jnp.sum(
+            jnp.where(hit, payload[rr][:, None], 0.0),
+            axis=0, keepdims=True)
+
+
+def _compact_kernel(bits_ref, pay_ref, valid_ref, thr_ref,
+                    idx_ref, out_ref, cnt_ref, *, n: int, cap_pad: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        idx_ref[...] = jnp.full_like(idx_ref, float(n))
+        out_ref[...] = jnp.zeros_like(out_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    bits = bits_ref[...]
+    t = thr_ref[0, 0]
+    keep = (bits >= t) & (bits != jnp.uint32(0)) & (valid_ref[...] != 0)
+    base = cnt_ref[0, 0]
+    pos = (base + _block_positions(keep) - 1.0).astype(jnp.int32)
+    gidx = (step * _BLOCK
+            + jax.lax.broadcasted_iota(jnp.int32, keep.shape, 0) * _BLOCK_COLS
+            + jax.lax.broadcasted_iota(jnp.int32, keep.shape, 1))
+    _scatter_rows(pos, keep, gidx, pay_ref[...], idx_ref, out_ref,
+                  n=n, cap_pad=cap_pad)
+    cnt_ref[0, 0] = base + jnp.sum(keep.astype(jnp.float32))
+
+
+def _compact_code_kernel(bits_ref, x_ref, u_ref, valid_ref, thr_ref, norm_ref,
+                         idx_ref, out_ref, cnt_ref, *,
+                         levels: float, n: int, cap_pad: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        idx_ref[...] = jnp.full_like(idx_ref, float(n))
+        out_ref[...] = jnp.zeros_like(out_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    bits = bits_ref[...]
+    t = thr_ref[0, 0]
+    valid = valid_ref[...] != 0
+    mask = (bits >= t) & valid                   # the TopK-masked support
+    keep = mask & (bits != jnp.uint32(0))        # minus already-zero entries
+    # Q_r codes of the masked block (ref.qr_codes_with_uniforms arithmetic).
+    x = jnp.where(mask, x_ref[...], 0.0)
+    norm = norm_ref[0, 0]
+    y = jnp.abs(x) / jnp.where(norm > 0, norm, 1.0)
+    scaled = levels * y
+    lo = jnp.floor(scaled)
+    code = lo + (u_ref[...] < scaled - lo).astype(jnp.float32)
+    code = jnp.minimum(code, levels - 1.0)       # saturate top level
+    code = code + jnp.where(x < 0, levels, 0.0)  # sign bit << r
+    base = cnt_ref[0, 0]
+    pos = (base + _block_positions(keep) - 1.0).astype(jnp.int32)
+    gidx = (step * _BLOCK
+            + jax.lax.broadcasted_iota(jnp.int32, keep.shape, 0) * _BLOCK_COLS
+            + jax.lax.broadcasted_iota(jnp.int32, keep.shape, 1))
+    _scatter_rows(pos, keep, gidx, code, idx_ref, out_ref,
+                  n=n, cap_pad=cap_pad)
+    cnt_ref[0, 0] = base + jnp.sum(keep.astype(jnp.float32))
+
+
+def _run_compact(kernel, operands, n: int, cap: int, interpret: bool):
+    cap_pad = pl.cdiv(cap, _BLOCK_COLS) * _BLOCK_COLS
+    grid = operands[0].shape[0] // _BLOCK_ROWS
+    out_spec = pl.BlockSpec((1, cap_pad), lambda i: (0, 0))
+    idx2d, pay2d, _ = pl.pallas_call(
+        functools.partial(kernel, n=n, cap_pad=cap_pad),
+        grid=(grid,),
+        in_specs=[_SCALAR_SPEC if op.shape == (1, 1) else _block_spec()
+                  for op in operands],
+        out_specs=(out_spec, out_spec, _SCALAR_SPEC),
+        out_shape=(jax.ShapeDtypeStruct((1, cap_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((1, cap_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)),
+        interpret=interpret,
+    )(*operands)
+    idx = idx2d.reshape(-1)[:cap].astype(jnp.int32)
+    return idx, pay2d.reshape(-1)[:cap]
+
+
+def _prep(x: jax.Array):
+    n = x.size
+    xf = x.astype(jnp.float32)
+    bits2d = _pad_to_block(jnp.abs(xf).view(jnp.uint32))
+    x2d = _pad_to_block(xf)
+    rows = bits2d.shape[0]
+    idx = (jax.lax.broadcasted_iota(jnp.int32, (rows, _BLOCK_COLS), 0)
+           * _BLOCK_COLS
+           + jax.lax.broadcasted_iota(jnp.int32, (rows, _BLOCK_COLS), 1))
+    valid = (idx < n).astype(jnp.int32)
+    return bits2d, x2d, valid
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def compact_slots(x: jax.Array, thr: jax.Array, cap: int, *,
+                  interpret: bool = False):
+    """Slots of ``x``'s kept support given threshold bit pattern ``thr``.
+
+    Returns ``(idx, vals)``: ``cap`` int32 indices (sentinel ``n``) and the
+    float32 survivor values (0 in empty slots), lowest index first.
+    """
+    if x.ndim != 1:
+        raise ValueError(f"expects 1-D input, got {x.shape}")
+    bits2d, x2d, valid = _prep(x)
+    return _run_compact(
+        _compact_kernel,
+        (bits2d, x2d, valid, thr.reshape(1, 1)),
+        x.size, int(cap), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "cap", "interpret"))
+def compact_code_slots(x: jax.Array, u: jax.Array, norm: jax.Array,
+                       thr: jax.Array, r: int, cap: int, *,
+                       interpret: bool = False):
+    """Fused Q_r-code + compaction for the ``topk_qr`` codec.
+
+    Returns ``(idx, codes)``: slot indices as above and the survivors'
+    (1+r)-bit codes (uint32; 0 in empty slots), computed in-block from the
+    masked values, uniforms ``u`` and the masked-vector ``norm``.
+    """
+    if x.ndim != 1:
+        raise ValueError(f"expects 1-D input, got {x.shape}")
+    bits2d, x2d, valid = _prep(x)
+    u2d = _pad_to_block(u.astype(jnp.float32))
+    idx, codes = _run_compact(
+        functools.partial(_compact_code_kernel, levels=float(2 ** int(r))),
+        (bits2d, x2d, u2d, valid, thr.reshape(1, 1),
+         jnp.asarray(norm, jnp.float32).reshape(1, 1)),
+        x.size, int(cap), interpret)
+    return idx, codes.astype(jnp.uint32)

@@ -91,18 +91,28 @@ def _block_spec():
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def topk_mask(x: jax.Array, k: int, *, interpret: bool = False) -> jax.Array:
-    """Exact TopK masking of a 1-D vector via TPU radix threshold select."""
+def threshold_bits(x: jax.Array, k: int, *,
+                   interpret: bool = False) -> jax.Array:
+    """uint32 bit pattern of the k-th largest |x_i| via the radix walk.
+
+    Steps 1-3 of the module docstring, exposed on their own so the fused
+    select+pack kernels (:mod:`repro.kernels.select_slots`) can reuse the
+    threshold without re-deriving it.  Same value as the jnp binary search
+    (:func:`repro.kernels.ref.topk_threshold_bits`): the exact bit pattern
+    of the k-th largest magnitude, ties included.  ``k >= n`` returns 0
+    (every entry compares >= the threshold); ``k == 0`` returns the
+    all-ones pattern (empty support).
+    """
     if x.ndim != 1:
         raise ValueError(f"expects 1-D input, got {x.shape}")
     k = int(k)
     if k >= x.size:
-        return x
-    orig_dtype = x.dtype
-    xf = x.astype(jnp.float32)
+        return jnp.zeros((), jnp.uint32)
+    if k <= 0:
+        return jnp.full((), 0xFFFFFFFF, jnp.uint32)
     n = x.size
+    xf = x.astype(jnp.float32)
     bits2d = _pad_to_block(jnp.abs(xf).view(jnp.uint32))
-    x2d = _pad_to_block(xf)
     rows = bits2d.shape[0]
     idx = (jax.lax.broadcasted_iota(jnp.int32, (rows, _BLOCK_COLS), 0)
            * _BLOCK_COLS
@@ -132,6 +142,25 @@ def topk_mask(x: jax.Array, k: int, *, interpret: bool = False) -> jax.Array:
         gt = jnp.where(digit < 255, ge[jnp.clip(digit + 1, 0, 255)], 0.0)
         k_rem = k_rem - gt
         prefix = prefix | (digit.astype(jnp.uint32) << shift)
+    return prefix
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_mask(x: jax.Array, k: int, *, interpret: bool = False) -> jax.Array:
+    """Exact TopK masking of a 1-D vector via TPU radix threshold select."""
+    if x.ndim != 1:
+        raise ValueError(f"expects 1-D input, got {x.shape}")
+    k = int(k)
+    if k >= x.size:
+        return x
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    n = x.size
+    bits2d = _pad_to_block(jnp.abs(xf).view(jnp.uint32))
+    x2d = _pad_to_block(xf)
+    rows = bits2d.shape[0]
+    grid = rows // _BLOCK_ROWS
+    t = threshold_bits(x, k, interpret=interpret)
 
     out2d = pl.pallas_call(
         _mask_kernel,
@@ -140,5 +169,5 @@ def topk_mask(x: jax.Array, k: int, *, interpret: bool = False) -> jax.Array:
         out_specs=_block_spec(),
         out_shape=jax.ShapeDtypeStruct((rows, _BLOCK_COLS), jnp.float32),
         interpret=interpret,
-    )(bits2d, x2d, prefix.reshape(1, 1))
+    )(bits2d, x2d, t.reshape(1, 1))
     return out2d.reshape(-1)[:n].astype(orig_dtype)
