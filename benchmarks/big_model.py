@@ -1,0 +1,237 @@
+"""Federated big-model sweep: composed clients x model meshes (DESIGN.md §9,
+EXPERIMENTS.md §BigModel).
+
+Trains a real transformer architecture federated end-to-end — FedAvg +
+TopK, ``wire="packed"`` — on composed ``(clients, data, model)`` meshes,
+sweeping the model-shard factor ``m``.  The sweep demonstrates the §9
+sharded wire path: per-round metrics stay allclose at every ``m`` (the
+GSPMD round graph is the unsharded one), bits/bytes accounting comes from
+psum'd integer nnz (identical up to threshold-tie flips when the float
+trajectories diverge in the last ulp), and the per-device share of the
+packed uplink shrinks ~1/m while total wire bytes are conserved.
+
+Scales:
+
+* ``--fast`` (the CI smoke): ``reduced(qwen2-0.5b)`` — the real qwen2
+  topology (GQA, tied embeddings, qkv bias) at CI-sized dims;
+* default: same topology, more rounds and longer sequences;
+* ``BIG_MODEL_FULL=1``: the full qwen2-0.5b config (0.5B params — needs a
+  real accelerator mesh; gated so host runs stay feasible).
+
+Run on 8 host devices (the CI leg does)::
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.run --fast --only big_model
+
+Writes ``benchmarks/artifacts/big_model.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import TopK, wire
+from repro.configs import get_spec, reduced
+from repro.core import fed_data
+from repro.core.baselines import FedAvg, FedConfig
+from repro.core.clients import RoundPlan
+from repro.core.distributed import ModelShardCtx
+from repro.launch.mesh import make_client_mesh
+from repro.models import transformer as tfm
+from repro.sharding import specs as sspecs
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+ARCH = "qwen2-0.5b"
+DENSITY = 0.05
+CLIENTS_PER_ROUND = 4
+N_CLIENTS = 8
+
+
+def _arch_spec(fast: bool):
+    spec = get_spec(ARCH)
+    if os.environ.get("BIG_MODEL_FULL"):
+        return spec, "full"
+    return reduced(spec), "reduced"
+
+
+def _model_shard_sweep(n_devices: int, spec) -> list[int]:
+    """Model-shard factors realisable on this host: divisors of the device
+    count whose complement leaves a clients axis dividing the round."""
+    out = []
+    for m in (1, 2, 4, 8):
+        if m > n_devices or n_devices % m:
+            continue
+        clients = min(n_devices // m, CLIENTS_PER_ROUND)
+        if CLIENTS_PER_ROUND % clients:
+            continue
+        if m > 1:
+            cfg = spec.model
+            dims = (cfg.n_heads * cfg.head_dim,
+                    cfg.n_kv_heads * cfg.head_dim, cfg.d_ff, cfg.vocab)
+            if any(d % m for d in dims):
+                continue
+        out.append(m)
+    return out
+
+
+def _make_data(cfg_m, seq_len: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    per = 8
+    x = rng.integers(0, cfg_m.vocab,
+                     (N_CLIENTS * per, seq_len)).astype(np.int32)
+    y = np.zeros((N_CLIENTS * per,), np.float32)
+    parts = [np.arange(i * per, (i + 1) * per) for i in range(N_CLIENTS)]
+    return fed_data.from_numpy_partition(x, y, parts)
+
+
+def _time_encode(mesh, spec_arch, comp, stacked, reps: int = 3) -> float:
+    """Best-of-reps seconds for one jitted sharded encode of ``stacked``
+    (the fixed per-client innovation tree) — the per-device pack cost."""
+    ctx = ModelShardCtx(mesh)
+    s = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    plan = RoundPlan(steps=jnp.ones((s,), jnp.int32),
+                     participating=jnp.ones((s,), bool),
+                     speed=jnp.ones((s,)), bandwidth=jnp.ones((s,)),
+                     comp_overrides={})
+    fn = jax.jit(lambda t: ctx.encode_payload(comp, plan, t))
+    payload, _ = fn(stacked)
+    jax.block_until_ready(jax.tree_util.tree_leaves(payload.data))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        payload, _ = fn(stacked)
+        jax.block_until_ready(jax.tree_util.tree_leaves(payload.data))
+        best = min(best, time.time() - t0)
+    return best, payload.spec
+
+
+def run(fast: bool = False):
+    spec, scale = _arch_spec(fast)
+    cfg_m = spec.model
+    rounds = 2 if fast else 4
+    seq_len = 16 if fast else 64
+    n_dev = len(jax.devices())
+
+    params0 = tfm.init_params(jax.random.PRNGKey(0), cfg_m)
+    n_params = int(sum(x.size for x in jax.tree_util.tree_leaves(params0)))
+    data = _make_data(cfg_m, seq_len)
+    loss_fn = lambda p, xb, yb: tfm.loss(p, cfg_m, xb, loss_chunk=seq_len)
+    fcfg = FedConfig(gamma=0.05, local_steps=2, n_clients=N_CLIENTS,
+                     clients_per_round=CLIENTS_PER_ROUND, batch_size=2)
+    comp = TopK(DENSITY)
+
+    # fixed innovation tree for the isolated encode timing (same input at
+    # every m, so the timing sweep measures the per-device pack cost only)
+    leaves, treedef = jax.tree_util.tree_flatten(params0)
+    ks = jax.random.split(jax.random.PRNGKey(7), len(leaves))
+    innov = jax.tree_util.tree_unflatten(treedef, [
+        jax.random.normal(k, (CLIENTS_PER_ROUND,) + l.shape, jnp.float32)
+        for k, l in zip(ks, leaves)])
+
+    sweep, traj = [], {}
+    for m in _model_shard_sweep(n_dev, spec):
+        clients = min(n_dev // m, CLIENTS_PER_ROUND)
+        mesh = (make_client_mesh(clients) if m == 1 else
+                make_client_mesh(clients, model=m, config=spec))
+        alg = FedAvg(loss_fn, data, fcfg, comp, wire="packed")
+        alg.use_mesh(mesh)
+        p0 = params0
+        if m > 1:
+            p0 = jax.device_put(params0,
+                                sspecs.param_shardings(params0, mesh))
+        state = alg.init(p0)
+        t0 = time.time()
+        state, ms = alg.run_rounds(state, jax.random.PRNGKey(3), rounds)
+        jax.block_until_ready(state.x)
+        total = time.time() - t0
+        t1 = time.time()
+        state, ms2 = alg.run_rounds(state, jax.random.PRNGKey(4), rounds)
+        jax.block_until_ready(state.x)
+        timed = time.time() - t1
+
+        encode_s, wspec = _time_encode(mesh, spec, comp, innov)
+        per_dev = wire.per_device_payload_nbytes(wspec)
+        traj[m] = {k: np.asarray(v) for k, v in ms.items()}
+        sweep.append({
+            "name": f"big_model/m{m}",
+            "model_shards": m,
+            "clients_axis": clients,
+            "rounds": rounds,
+            "us_per_round": round(timed / rounds * 1e6, 1),
+            "compile_plus_first_s": round(total, 2),
+            "encode_us_per_call": round(encode_s * 1e6, 1),
+            "uplink_bits_per_round": float(
+                np.asarray(ms["uplink_bits"]).mean()),
+            "payload_bytes_per_round": float(
+                np.asarray(ms["uplink_payload_bytes"]).mean()),
+            "per_device_payload_bytes_per_client": per_dev,
+            "train_loss": [round(float(x), 5)
+                           for x in np.asarray(ms["train_loss"])]
+            if "train_loss" in ms else None,
+            "useful": per_dev,
+        })
+
+    # -- §9 consistency checks across the sweep --------------------------- #
+    ms1 = traj.get(1)
+    checks = {"bits_max_rel_delta": 0.0, "loss_max_rel_delta": 0.0}
+    failures = []
+    if ms1 is not None:
+        for m, msm in traj.items():
+            if m == 1:
+                continue
+            b1, bm = ms1["uplink_bits"], msm["uplink_bits"]
+            # identical up to ties: different mesh layouts reorder float
+            # reductions, so trajectories diverge in the last ulp and an
+            # exact 32-bit magnitude tie at the TopK threshold can flip a
+            # handful of slots (64 bits each) either way
+            rel = float(np.max(np.abs(bm - b1) / np.maximum(b1, 1.0)))
+            checks["bits_max_rel_delta"] = max(
+                checks["bits_max_rel_delta"], rel)
+            if rel > 1e-4:
+                failures.append(
+                    f"m={m} bits accounting diverged beyond tie noise: "
+                    f"{b1} vs {bm}")
+            if "train_loss" in ms1:
+                l1 = np.asarray(ms1["train_loss"], np.float64)
+                lm = np.asarray(msm["train_loss"], np.float64)
+                lrel = float(np.max(np.abs(lm - l1) / np.maximum(
+                    np.abs(l1), 1e-6)))
+                checks["loss_max_rel_delta"] = max(
+                    checks["loss_max_rel_delta"], lrel)
+                if lrel > 0.05:
+                    failures.append(
+                        f"m={m} training trajectory diverged: {l1} vs {lm}")
+        # per-device uplink bytes must shrink with the model-shard factor
+        by_m = {r["model_shards"]: r["per_device_payload_bytes_per_client"]
+                for r in sweep}
+        for m in sorted(by_m):
+            if m > 1 and not by_m[m] < by_m[1]:
+                failures.append(
+                    f"per-device payload did not shrink: m=1 {by_m[1]}B "
+                    f"vs m={m} {by_m[m]}B")
+    checks["failures"] = failures
+
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / "big_model.json").write_text(json.dumps({
+        "devices": n_dev,
+        "platform": jax.devices()[0].platform,
+        "arch": ARCH,
+        "scale": scale,
+        "n_params": n_params,
+        "seq_len": seq_len,
+        "rounds": rounds,
+        "density": DENSITY,
+        "checks": checks,
+        "sweep": sweep,
+    }, indent=2))
+    if failures:                     # after the artifact, so evidence lands
+        raise AssertionError("; ".join(failures))
+    return sweep

@@ -34,6 +34,7 @@ MODULES = [
     "beyond_ef",
     "het_system",
     "client_scaling",
+    "big_model",
     "async_rounds",
     "wire_formats",
     "roofline",

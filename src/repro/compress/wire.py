@@ -47,6 +47,7 @@ the two: empty sparse slots at ``(INDEX_BITS + value width)`` each, plus
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Optional, Tuple
 
 import jax
@@ -83,6 +84,15 @@ class WireSpec:
     caps: Tuple[int, ...] = ()       # per-unit sparse capacity (topk codecs)
     r: int = 0                       # level bits (qr / topk_qr / int8)
     nbytes: int = 0                  # packed payload bytes per client
+    # Sharded wire path (§9): >1 when the payload was encoded shard-local
+    # over a model mesh axis.  ``model_dims[i]`` is leaf i's sharded
+    # dimension index (None = replicated leaf); ``caps`` are then
+    # *per-shard* capacities for sharded units, and ``shapes`` stay the
+    # GLOBAL leaf shapes.  Buffers of sharded units concatenate the shards
+    # along their slot/word axis in an opaque, shard-local layout — only
+    # ``decode_shard_local`` (under the same shard_map) interprets them.
+    model_shards: int = 1
+    model_dims: Tuple[Optional[int], ...] = ()
 
 
 @jax.tree_util.register_pytree_node_class
@@ -435,6 +445,281 @@ def decode(payload: Payload) -> PyTree:
         else:  # pragma: no cover - spec constructed by encode only
             raise ValueError(f"unknown codec {spec.codec!r}")
     return _units_to_tree(units, spec)
+
+
+# --------------------------------------------------------------------------- #
+# sharded wire path (§9): shard-local encode/decode over a model mesh axis
+# --------------------------------------------------------------------------- #
+#
+# When clients are composed with a model axis, each model shard packs the
+# slots of ITS slice of every sharded leaf — against the exact *global*
+# TopK threshold (per-pass psum of the radix walk's counts, no gather of
+# magnitudes) or the exact *global* l2 norm (one psum'd sum of squares).
+# The gathered uplink then moves per-shard packed buffers, so both encode
+# work and gather volume scale with ``1/model_shards``.  Replicated leaves
+# (biases, norms — anything ``param_shardings`` leaves unsharded) are
+# packed identically on every shard and counted/shipped once.
+
+def shard_cap(k_global: int, model_shards: int, n_local: int) -> int:
+    """Static per-shard slot capacity for a sharded sparse unit.
+
+    The global TopK support splits across shards hypergeometrically —
+    ``k/m`` expected slots per shard — so each shard gets ``ceil(k/m)``
+    plus ``max(64, ceil(4*sqrt(k/m)))`` slack (≈4σ of the binomial
+    fluctuation, floored so small units get absolute headroom).  Whenever
+    ``cap >= k_global`` overflow is impossible; beyond that, a shard whose
+    local support exceeds its capacity keeps the lowest-index ``cap``
+    (the §8 static-capacity ties rule, applied per shard) — the bit
+    *accounting* stays exact either way, since it counts the psum'd
+    support, not the slots.
+    """
+    base = -(-int(k_global) // int(model_shards))
+    slack = max(64, math.ceil(4.0 * math.sqrt(max(base, 1))))
+    return int(min(int(n_local), base + slack))
+
+
+def check_sharded_supported(comp: Optional[Compressor],
+                            model_shards: int) -> str:
+    """``check_supported`` plus the shard-local feasibility rules.
+
+    ``dense``, ``topk`` and ``qr`` have shard-local formats (elementwise,
+    psum'd threshold, psum'd norm).  ``topk_qr`` does not (the survivor
+    quantizer's norm is the *masked* vector's, which would need the global
+    support before any shard can code), nor does ``int8`` (its scales come
+    from ``Compressor.encode`` on whole leaves), nor ``scope="global"``
+    (one flat unit cannot straddle sharded and replicated leaves).  Those
+    raise with the workaround spelled out.
+    """
+    codec = check_supported(comp)
+    if model_shards <= 1:
+        return codec
+    if isinstance(comp, Compose) or codec in ("topk_qr", "int8"):
+        raise ValueError(
+            f"codec {codec!r} has no shard-local wire format (survivor "
+            f"quantization / int8 scales need whole leaves before coding); "
+            f"run wire='account' or a model=1 mesh, or use TopK(select) / "
+            f"QuantQr / dense on the sharded path")
+    if _scope_of(comp, codec) != "tensor":
+        raise ValueError(
+            'scope="global" flattens the tree to one unit, which cannot '
+            "straddle model-sharded and replicated leaves; use "
+            'scope="tensor" (or wire="account" / a model=1 mesh)')
+    return codec
+
+
+def sharded_wire_spec(comp: Optional[Compressor], tree: PyTree,
+                      model_dims: Tuple[Optional[int], ...],
+                      model_shards: int) -> WireSpec:
+    """Build the static :class:`WireSpec` for a shard-local payload.
+
+    ``tree`` carries the GLOBAL leaf shapes (arrays or ShapeDtypeStructs —
+    built in the outer, model-auto region where leaves are logically
+    global); ``model_dims[i]`` names leaf i's sharded dimension (None =
+    replicated; the dimension size must divide ``model_shards``).
+    Capacities are per shard for sharded units and the full ``k`` for
+    replicated ones; ``nbytes`` is the true global wire size — sharded
+    buffers counted ``model_shards`` times, replicated buffers (and qr
+    norms, which every shard computes identically) once.  Everything here
+    is static, so construction is trace-time only.
+    """
+    m = int(model_shards)
+    codec = check_sharded_supported(comp, m)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if len(model_dims) != len(leaves):
+        raise ValueError(f"model_dims has {len(model_dims)} entries for "
+                         f"{len(leaves)} leaves")
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype).name for l in leaves)
+    r = 0
+    if codec == "qr":
+        r = comp.r
+    caps, nbytes = [], 0
+    for shp, dt, mdim in zip(shapes, dtypes, model_dims):
+        n_glob = 1
+        for s in shp:
+            n_glob *= s
+        itemsize = jnp.dtype(dt).itemsize
+        if mdim is not None:
+            if not (0 <= mdim < len(shp)) or shp[mdim] % m:
+                raise ValueError(
+                    f"leaf shape {shp}: model dim {mdim} does not divide "
+                    f"into {m} shards")
+            n_loc = n_glob // m
+        else:
+            n_loc = n_glob
+        if codec == "dense":
+            nbytes += n_glob * itemsize       # sharded or not: global bytes
+        elif codec == "topk":
+            k_glob = comp._k(n_glob)
+            if mdim is not None:
+                cap = shard_cap(k_glob, m, n_loc)
+                nbytes += m * cap * (INDEX_BITS // 8 + itemsize)
+            else:
+                cap = k_glob
+                nbytes += cap * (INDEX_BITS // 8 + itemsize)
+            caps.append(cap)
+        else:                                 # qr
+            words = -(-n_loc // 32) * (1 + r)
+            copies = m if mdim is not None else 1
+            nbytes += copies * words * 4 + FLOAT_BITS // 8
+    return WireSpec(codec=codec, scope="tensor", treedef=treedef,
+                    shapes=shapes, dtypes=dtypes, caps=tuple(caps), r=r,
+                    nbytes=int(nbytes), model_shards=m,
+                    model_dims=tuple(model_dims))
+
+
+def per_device_payload_nbytes(spec: WireSpec) -> int:
+    """One model shard's share of one client's packed payload, in bytes.
+
+    This is what a single device physically ships per client on the §9
+    sharded uplink: sharded units contribute their per-shard buffers only,
+    replicated units (and qr norms) ride along in full on every shard.
+    For an unsharded spec this is exactly ``spec.nbytes``; across the
+    model axis, ``model_shards * (sharded part) + replicated part ==
+    spec.nbytes``, so total wire bytes are conserved while per-device
+    bytes shrink ~1/m.
+    """
+    if spec.model_shards <= 1:
+        return spec.nbytes
+    m = spec.model_shards
+    total = 0
+    ci = 0
+    for shp, dt, mdim in zip(spec.shapes, spec.dtypes, spec.model_dims):
+        n_glob = _prod(shp)
+        n_loc = n_glob // m if mdim is not None else n_glob
+        itemsize = jnp.dtype(dt).itemsize
+        if spec.codec == "dense":
+            total += n_loc * itemsize
+        elif spec.codec == "topk":
+            total += spec.caps[ci] * (INDEX_BITS // 8 + itemsize)
+            ci += 1
+        else:                                 # qr
+            total += -(-n_loc // 32) * (1 + spec.r) * 4 + FLOAT_BITS // 8
+    return int(total)
+
+
+def _local_sizes(spec: WireSpec):
+    """Per-leaf local flat sizes under ``spec``'s sharding."""
+    sizes = []
+    for shp, mdim in zip(spec.shapes, spec.model_dims):
+        n = 1
+        for s in shp:
+            n *= s
+        sizes.append(n // spec.model_shards if mdim is not None else n)
+    return sizes
+
+
+def _local_shape(shp, mdim, m):
+    if mdim is None:
+        return shp
+    return tuple(s // m if d == mdim else s for d, s in enumerate(shp))
+
+
+def encode_shard_local(comp: Optional[Compressor], tree_loc: PyTree,
+                       spec: WireSpec, axis: str,
+                       rng: Optional[jax.Array] = None):
+    """One client's shard-local encode, inside ``shard_map`` manual over
+    mesh axis ``axis`` (callers vmap the client dimension outside).
+
+    ``tree_loc`` holds this shard's slices of the leaves named sharded in
+    ``spec`` (replicated leaves arrive whole).  Returns ``(data, report)``:
+    ``data`` matches ``spec``'s unit structure with this shard's buffers,
+    and ``report`` is the *global* :class:`BitsReport` — sparse counts are
+    psum'd int32 nnz per leaf, accumulated in leaf order exactly like
+    ``_sparse_report_from_support``, so the accounting is bit-identical to
+    the unsharded encode at every shard count.
+    """
+    leaves, _ = jax.tree_util.tree_flatten(tree_loc)
+    units = [l.reshape(-1) for l in leaves]
+
+    if spec.codec == "dense":
+        data = tuple((u,) for u in units)
+        vb = float(sum(
+            _prod(shp) * jnp.dtype(dt).itemsize * 8
+            for shp, dt in zip(spec.shapes, spec.dtypes)))
+        return data, BitsReport(value_bits=vb)
+
+    if spec.codec == "topk":
+        data, vb, ib = [], 0.0, 0.0
+        for i, u in enumerate(units):
+            n_glob = _prod(spec.shapes[i])
+            if spec.model_dims[i] is not None:
+                k_glob = comp._k(n_glob)
+                idx, vals, support = kops.topk_slots_sharded(
+                    u, k_glob, spec.caps[i], axis, n_glob)
+                nnz = jax.lax.psum(
+                    jnp.sum(support.astype(jnp.int32)), axis)
+            else:
+                cap = spec.caps[i]
+                idx, vals, support = kops.topk_slots(u, cap, cap)
+                nnz = jnp.sum(support.astype(jnp.int32))
+            data.append((idx, vals))
+            nnzf = nnz.astype(jnp.float32)
+            vb = vb + nnzf * (jnp.dtype(spec.dtypes[i]).itemsize * 8)
+            ib = ib + nnzf * INDEX_BITS
+        return tuple(data), BitsReport(value_bits=vb, index_bits=ib)
+
+    # codec == "qr"
+    if rng is None:
+        raise ValueError("quantizer codecs need an rng key")
+    keys = jax.random.split(rng, len(leaves))
+    data = []
+    for i, u in enumerate(units):
+        xf = u.astype(jnp.float32)
+        ss = jnp.sum(xf * xf)
+        if spec.model_dims[i] is not None:
+            # Global norm from one psum'd sum of squares; each shard's
+            # rounding uniforms come from its own fold_in'd key (draws
+            # differ from the unsharded run — same quantizer, different
+            # dither; bits accounting is width-static either way).
+            ss = jax.lax.psum(ss, axis)
+            key = jax.random.fold_in(keys[i], jax.lax.axis_index(axis))
+        else:
+            key = keys[i]
+        norm = jnp.sqrt(ss)
+        u_draw = jax.random.uniform(key, u.shape, dtype=jnp.float32)
+        words = kops.quantize_pack_global_norm(u, spec.r, u_draw, norm)
+        data.append((words, norm))
+    n = sum(_prod(s) for s in spec.shapes)
+    report = BitsReport(
+        value_bits=jnp.asarray(float(n) * (1 + spec.r), jnp.float32),
+        meta_bits=jnp.asarray(float(len(units)) * FLOAT_BITS))
+    return tuple(data), report
+
+
+def _prod(shp) -> int:
+    n = 1
+    for s in shp:
+        n *= s
+    return n
+
+
+def decode_shard_local(data, spec: WireSpec) -> PyTree:
+    """Decode one client's shard-local buffers back to the local tree.
+
+    The inverse of :func:`encode_shard_local` for the same shard: sparse
+    indices are local, so the scatter lands in this shard's flat slice;
+    leaves come back at their LOCAL shapes (global shape with the model
+    dimension divided by ``model_shards``) and the caller's ``out_specs``
+    place them into the global tree.
+    """
+    sizes = _local_sizes(spec)
+    if spec.codec == "topk":
+        entries = list(data)
+        vtype = jnp.result_type(*[v.dtype for _, v in entries])
+        units = _scatter_units(entries, sizes, vtype)
+    elif spec.codec == "qr":
+        units = []
+        for (words, norm), n in zip(data, sizes):
+            codes = kops.unpack_codes(words, 1 + spec.r, n)
+            units.append(_qr_values(codes, norm, spec.r))
+    else:                                     # dense
+        units = [bufs[0] for bufs in data]
+    parts = [
+        u.reshape(_local_shape(shp, mdim, spec.model_shards)).astype(dt)
+        for u, shp, dt, mdim in zip(units, spec.shapes, spec.dtypes,
+                                    spec.model_dims)]
+    return jax.tree_util.tree_unflatten(spec.treedef, parts)
 
 
 _NBYTES_CACHE: dict = {}

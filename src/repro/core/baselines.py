@@ -25,9 +25,9 @@ import jax.numpy as jnp
 from repro.compress import Compressor, Identity, TopK, dense_bits
 from repro.core import aggregation, comm
 from repro.core.clients import (
-    NULL_CTX, ClientAxisCtx, ClientSchedule, gather_decoded, keep_where,
-    masked_mean, mean_over_active, payload_metrics, per_client, tree_where,
-    validate_schedule, vmap_compress, vmap_encode)
+    NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
+    mean_over_active, payload_metrics, per_client, tree_where,
+    validate_schedule, vmap_compress)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
@@ -171,8 +171,8 @@ class FedAvg(RoundEngine):
             # §8 packed uplink: encode at the client boundary.  FedAvg has
             # no client-side state to update, so nothing reads a local
             # decode — the server decodes the gathered payload below.
-            payload, up_rep = vmap_encode(self.comp, plan_l, x_fin,
-                                          comp_keys)
+            payload, up_rep = ctx.encode_payload(self.comp, plan_l, x_fin,
+                                                 comp_keys)
         else:
             x_fin, up_rep = vmap_compress(self.comp, plan_l, x_fin,
                                           comp_keys)
@@ -187,7 +187,7 @@ class FedAvg(RoundEngine):
             # §8 wire aggregation: masked packed-payload gather, server-side
             # decode, aggregate the full (s,) stack with the unsharded
             # formula (see fedcomloc._round_impl)
-            xf_full = gather_decoded(payload, out.partf, ctx)
+            xf_full = ctx.gather_decoded_payload(payload, out.partf)
             x0_full = _broadcast(state.x, s)
             if self.policy.mode == "async_buffered":
                 delta = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
@@ -328,8 +328,9 @@ class Scaffold(RoundEngine):
         if wire_on:
             # §8 packed uplink: Scaffold transmits model + control variate
             # (the 2x-dense accounting) — both ride one dense payload
-            payload, _ = vmap_encode(None, plan_l, (x_fin, ci_new))
-            xf_full, ci_new_full = gather_decoded(payload, out.partf, ctx)
+            payload, _ = ctx.encode_payload(None, plan_l, (x_fin, ci_new))
+            xf_full, ci_new_full = ctx.gather_decoded_payload(
+                payload, out.partf)
             x0_full = _broadcast(state.x, s)
             ci_s_full = _tmap(lambda c: c[clients_full], state.ci)
             dxs = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
@@ -460,8 +461,8 @@ class FedDyn(RoundEngine):
         payload = None
         if wire_on:
             # §8 packed (dense) uplink + replicated full-stack aggregation
-            payload, _ = vmap_encode(None, plan_l, x_fin)
-            xf_full = gather_decoded(payload, out.partf, ctx)
+            payload, _ = ctx.encode_payload(None, plan_l, x_fin)
+            xf_full = ctx.gather_decoded_payload(payload, out.partf)
             x0_full = _broadcast(state.x, s)
             deltas = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
             if self.policy.mode == "async_buffered":

@@ -309,6 +309,26 @@ class ClientAxisCtx:
         return jax.tree_util.tree_map(
             lambda all_, up_: all_.at[idx].set(up_), full, upd)
 
+    def encode_payload(self, comp, plan: RoundPlan, stacked: PyTree,
+                       keys: Optional[jax.Array] = None):
+        """Wire-encode the stacked uplink tree under this ctx's placement.
+
+        The base ctx is plain :func:`vmap_encode`;
+        :class:`repro.core.distributed.ModelShardCtx` overrides this with
+        the shard-local encode (each model shard packs the slots of its
+        slice against psum'd global thresholds/norms, DESIGN.md §9).
+        Round bodies call this instead of ``vmap_encode`` directly so one
+        implementation serves every mesh composition.
+        """
+        return vmap_encode(comp, plan, stacked, keys)
+
+    def gather_decoded_payload(self, payload, partf_full: jax.Array):
+        """Server-side uplink under this ctx's placement — the companion
+        of :meth:`encode_payload` (base: :func:`gather_decoded`; model
+        shards gather packed buffers over clients inside their own
+        manual region and decode shard-local)."""
+        return gather_decoded(payload, partf_full, self)
+
 
 #: The default (unsharded) client-axis context.
 NULL_CTX = ClientAxisCtx()

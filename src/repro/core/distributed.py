@@ -70,9 +70,13 @@ class ShardCtx(ClientAxisCtx):
     def local_count(self, s: int) -> int:
         return s // self.n_shards
 
+    def axis_index(self) -> jax.Array:
+        """This shard's position on the client axis."""
+        return jax.lax.axis_index(self.axis)
+
     def shard(self, arr: jax.Array) -> jax.Array:
         nl = arr.shape[0] // self.n_shards
-        start = jax.lax.axis_index(self.axis) * nl
+        start = self.axis_index() * nl
         return jax.lax.dynamic_slice_in_dim(arr, start, nl, axis=0)
 
     def shard_tree(self, tree: PyTree) -> PyTree:
@@ -130,6 +134,215 @@ class ShardCtx(ClientAxisCtx):
 
 
 # --------------------------------------------------------------------------- #
+# composed clients x model meshes (DESIGN.md §9)
+# --------------------------------------------------------------------------- #
+#
+# With extra mesh axes the round does NOT run inside ``shard_map`` at all:
+# transformer training bodies are full of ``lax.scan`` (flash-attention KV
+# chunks, the chunked loss, scanned layer stacks), and XLA's sharding
+# propagation cannot carry a while loop whose carries/xs touch sharded
+# values through a partially-manual (manual ``clients`` + auto ``model``)
+# region — it aborts on a manual-subgroup check.  Scalar-only loops pass;
+# anything real does not, with or without sharding constraints, and
+# ``unroll=True`` doesn't save it (the unrolled slicing hits the same
+# check).  So the composed regime is a plain GSPMD program:
+#
+# * per-client compute keeps the base :class:`ClientAxisCtx` global
+#   semantics — the graph is exactly the unsharded one; ``shard``/
+#   ``shard_tree`` become placement *hints* (client axis over ``clients``,
+#   every other dim unconstrained) so GSPMD splits the vmapped local SGD
+#   across client devices while ``param_shardings`` splits the math over
+#   ``model``;
+# * ALL wire work (encode -> mask -> decode) runs in top-level fully-manual
+#   ``shard_map`` regions over the whole mesh, where each device packs /
+#   unpacks its model shard of its clients' payloads — the §9 shard-local
+#   wire path (psum'd radix-walk thresholds, psum'd norms, psum'd nnz
+#   accounting);
+# * the decoded uplink comes back clients x model sharded, so the server
+#   aggregation's cross-device traffic is GSPMD reductions of shard-local
+#   dense trees — per-device bytes scale with ``1/model_shards``.
+
+class ModelShardCtx(ClientAxisCtx):
+    """Client-axis ctx for composed clients x model meshes (GSPMD regime).
+
+    Per-client compute sees logically-global, physically-sharded leaves;
+    the wire path runs shard-local per model shard: each shard packs the
+    slots of its slice of every sharded leaf against the exact *global*
+    TopK threshold (per-pass psum'd radix-walk counts) or *global* l2 norm
+    (one psum'd sum of squares).  Encode work and uplink bytes per device
+    scale with ``1/model_shards``; bit accounting stays bit-identical to
+    the unsharded path (psum'd integer nnz).
+    """
+
+    def __init__(self, mesh: Mesh, axis: str = CLIENT_AXIS,
+                 model_axis: str = "model"):
+        self.mesh = mesh
+        self.axis = axis
+        self.client_shards = mesh.shape[axis]
+        self.model_axis = model_axis if model_axis in mesh.axis_names else None
+        self.model_shards = (mesh.shape[model_axis]
+                             if self.model_axis is not None else 1)
+
+    # -- per-client compute: global semantics + placement hints ----------- #
+
+    def shard(self, arr: jax.Array) -> jax.Array:
+        """No slicing — pin the client axis over the ``clients`` devices
+        and leave every other dim to GSPMD (fail-soft on indivisible or
+        scalar leaves, mirroring ``sharding.constrain``)."""
+        if arr.ndim == 0 or arr.shape[0] % self.client_shards:
+            return arr
+        spec = P(self.axis, *([P.UNCONSTRAINED] * (arr.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            arr, jax.sharding.NamedSharding(self.mesh, spec))
+
+    def shard_tree(self, tree: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(self.shard, tree)
+
+    # -- shard-local wire path -------------------------------------------- #
+
+    def _manual(self, fn, in_specs, out_specs):
+        """Run ``fn`` in a fully-manual ``shard_map`` region over the whole
+        mesh (the only non-GSPMD islands of the composed regime)."""
+        return _shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                          out_specs=out_specs, **_SM_KWARGS)
+
+    def _leaf_model_dims(self, flat):
+        """Per-leaf sharded-dim index from the path rules (None when the
+        rules replicate the leaf or its dim doesn't divide the axis)."""
+        from repro.sharding import specs as sspecs
+        return tuple(
+            sspecs.model_dim_index(path, leaf.shape[1:], self.model_shards)
+            for path, leaf in flat)
+
+    def _buffer_specs(self, spec):
+        """Wire-region PartitionSpecs of one unit's buffers, per unit:
+        axis 0 is the client dim; slot/word buffers of sharded units split
+        over the model axis on axis 1 (the opaque shard-concatenated
+        layout), replicated units' buffers and qr norms are identical on
+        every model shard."""
+        shard_p = P(self.axis, self.model_axis)
+        repl_p = P(self.axis, None)
+        out = []
+        for i, mdim in enumerate(spec.model_dims):
+            b = shard_p if mdim is not None else repl_p
+            if spec.codec == "topk":
+                out.append((b, b))
+            elif spec.codec == "qr":
+                out.append((b, P(self.axis)))
+            else:                             # dense
+                out.append((b,))
+        return tuple(out)
+
+    def _leaf_specs(self, spec, mdims):
+        """Per-leaf specs of the stacked (client-leading) global tree."""
+        specs = []
+        for shp, mdim in zip(spec.shapes, mdims):
+            ent = [None] * (len(shp) + 1)
+            ent[0] = self.axis
+            if mdim is not None:
+                ent[mdim + 1] = self.model_axis
+            specs.append(P(*ent))
+        return jax.tree_util.tree_unflatten(spec.treedef, specs)
+
+    def encode_payload(self, comp, plan, stacked, keys=None):
+        from repro.compress import wire
+        if self.model_shards <= 1:
+            # clients x data composition: payload layout and collectives
+            # are the unsharded ones; GSPMD places the vmapped encode.
+            return super().encode_payload(comp, plan, stacked, keys)
+        if plan.comp_overrides:
+            raise ValueError(
+                "packed wire mode cannot carry per-client compressor "
+                "overrides (static payload capacity); run them in account "
+                "mode")
+        flat, treedef = jax.tree_util.tree_flatten_with_path(stacked)
+        mdims = self._leaf_model_dims(flat)
+        structs = jax.tree_util.tree_unflatten(
+            treedef, [jax.ShapeDtypeStruct(l.shape[1:], l.dtype)
+                      for _, l in flat])
+        spec = wire.sharded_wire_spec(comp, structs, mdims,
+                                      self.model_shards)
+        rep_p = jax.tree_util.tree_map(lambda _: P(self.axis),
+                                       wire.BitsReport(0., 0., 0.))
+        out_specs = (self._buffer_specs(spec), rep_p)
+        leaf_specs = self._leaf_specs(spec, mdims)
+
+        if keys is None:
+            def body(tree_loc):
+                enc = lambda t: wire.encode_shard_local(
+                    comp, t, spec, self.model_axis)
+                return jax.vmap(enc)(tree_loc)
+            data, report = self._manual(
+                body, in_specs=(leaf_specs,), out_specs=out_specs)(stacked)
+        else:
+            def body(tree_loc, ks):
+                enc = lambda t, k: wire.encode_shard_local(
+                    comp, t, spec, self.model_axis, k)
+                return jax.vmap(enc)(tree_loc, ks)
+            data, report = self._manual(
+                body, in_specs=(leaf_specs, P(self.axis)),
+                out_specs=out_specs)(stacked, keys)
+        return wire.Payload(data, spec), report
+
+    def gather_decoded_payload(self, payload, partf_full):
+        from repro.compress import wire
+        spec = payload.spec
+        if spec.model_shards <= 1:
+            from repro.core.clients import gather_decoded
+            return gather_decoded(payload, partf_full, self)
+        out_specs = self._leaf_specs(spec, spec.model_dims)
+
+        def body(data, partf):
+            # partf arrives pre-sliced to this shard's clients by in_specs;
+            # no gather: each device decodes its own clients' buffers and
+            # the out_specs reassemble the clients x model sharded tree.
+            keep = partf > 0
+            masked = jax.tree_util.tree_map(
+                lambda b: jnp.where(per_client(keep, b), b,
+                                    jnp.zeros((), b.dtype)), data)
+            return jax.vmap(
+                lambda d: wire.decode_shard_local(d, spec))(masked)
+
+        return self._manual(
+            body, in_specs=(self._buffer_specs(spec), P(self.axis)),
+            out_specs=out_specs)(payload.data, partf_full)
+
+
+# --------------------------------------------------------------------------- #
+
+
+def validate_model_axis(mesh: Mesh, model_cfg, axis: str = "model") -> int:
+    """Check the mesh's model axis divides the config's sharded dims.
+
+    ``model_cfg`` is a ``ModelConfig`` or an ``ArchSpec`` (unwrapped).
+    Without this, a bad composition surfaces as a deep XLA sharding
+    failure; here it names the offending dimensions and the shard counts
+    that would work.  Returns the model-axis size (1 when absent).
+    """
+    if axis not in mesh.axis_names:
+        return 1
+    m = mesh.shape[axis]
+    if m == 1:
+        return 1
+    cfg = getattr(model_cfg, "model", model_cfg)
+    hd = getattr(cfg, "hd", None) or cfg.head_dim
+    dims = {
+        "n_heads*head_dim (q/o projections)": cfg.n_heads * hd,
+        "n_kv_heads*head_dim (k/v projections)": cfg.n_kv_heads * hd,
+        "d_ff (mlp wi/wo)": cfg.d_ff,
+        "vocab (embed/unembed)": cfg.vocab,
+    }
+    bad = {name: d for name, d in dims.items() if d % m}
+    if bad:
+        usable = [k for k in range(1, m + 1)
+                  if all(d % k == 0 for d in dims.values())]
+        lines = ", ".join(f"{name}={d}" for name, d in bad.items())
+        raise ValueError(
+            f"model mesh axis of {m} devices does not divide {lines} for "
+            f"arch {getattr(model_cfg, 'arch_id', type(cfg).__name__)!r}; "
+            f"usable {axis!r} sizes here: {usable} (pick one, or drop the "
+            f"model axis)")
+    return m
 
 
 def validate_client_mesh(mesh: Mesh, clients_per_round: int,
@@ -156,8 +369,25 @@ def shard_round(round_impl: Callable, mesh: Mesh, clients_per_round: int,
     ``ShardCtx`` (axis_index-based), and every output is either psum- or
     all_gather-reassembled, so the wrapper composes with ``jax.jit`` and
     ``lax.scan`` exactly like the unsharded implementation.
+
+    With extra mesh axes of size > 1 (a composed clients x data x model
+    mesh) there is no ``shard_map`` wrapper at all — the round runs as a
+    plain GSPMD program under a :class:`ModelShardCtx`: model-sharded
+    parameters placed by ``sharding.specs.param_shardings`` stay sharded
+    through the per-client math (sharded ``lax.scan`` only works outside
+    manual regions — see the §9 comment block above), and the wire path
+    runs shard-local in fully-manual islands.
     """
     n = validate_client_mesh(mesh, clients_per_round, axis)
+    extra = tuple(a for a in mesh.axis_names if a != axis)
+    if any(mesh.shape[a] > 1 for a in extra):
+        gctx = ModelShardCtx(mesh, axis)
+
+        def run_gspmd(state, key):
+            return round_impl(state, key, ctx=gctx)
+
+        return run_gspmd
+
     ctx = ShardCtx(axis, n)
 
     def run(state, key):

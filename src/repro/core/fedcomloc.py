@@ -43,9 +43,9 @@ import jax.numpy as jnp
 from repro.compress import Compressor, Identity, dense_bits
 from repro.core import aggregation, comm
 from repro.core.clients import (
-    NULL_CTX, ClientAxisCtx, ClientSchedule, gather_decoded, keep_where,
-    masked_mean, mean_over_active, payload_metrics, per_client, tree_where,
-    validate_schedule, vmap_compress, vmap_encode)
+    NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
+    mean_over_active, payload_metrics, per_client, tree_where,
+    validate_schedule, vmap_compress)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
 
@@ -241,8 +241,8 @@ class FedComLoc(RoundEngine):
                     # decode happens once, server-side, after the gather —
                     # the client rows the h/e updates need are sliced back
                     # out of the full decoded stack below
-                    payload, up_rep = vmap_encode(self.comp, plan_l, innov,
-                                                  up_keys)
+                    payload, up_rep = ctx.encode_payload(
+                        self.comp, plan_l, innov, up_keys)
                 else:
                     sent, up_rep = vmap_compress(self.comp, plan_l, innov,
                                                  up_keys)
@@ -251,8 +251,8 @@ class FedComLoc(RoundEngine):
             elif wire_on:
                 # §8 packed uplink: the client boundary emits the wire
                 # payload; the round carries on with its (gathered) decode.
-                payload, up_rep = vmap_encode(self.comp, plan_l, x_hat,
-                                              up_keys)
+                payload, up_rep = ctx.encode_payload(
+                    self.comp, plan_l, x_hat, up_keys)
             else:
                 x_hat, up_rep = vmap_compress(self.comp, plan_l, x_hat,
                                               up_keys)
@@ -260,7 +260,7 @@ class FedComLoc(RoundEngine):
             up_bits = None                     # recomputed from client_up
         elif wire_on:
             # uncompressed-uplink variants still move a real (dense) buffer
-            payload, _ = vmap_encode(None, plan_l, x_hat)
+            payload, _ = ctx.encode_payload(None, plan_l, x_hat)
 
         # --- aggregation policy (DESIGN.md §7) --------------------------- #
         # The full (s,) bits each plan-participant would transmit feed the
@@ -282,7 +282,7 @@ class FedComLoc(RoundEngine):
             # are sliced back out of it (an excluded client's masked zero
             # row never lands in state: the §5/§7 keep-old guards below
             # are gated on the same participation mask).
-            dec_full = gather_decoded(payload, out.partf, ctx)
+            dec_full = ctx.gather_decoded_payload(payload, out.partf)
             if cfg.variant == "com" and cfg.error_feedback:
                 sent = ctx.shard_tree(dec_full)
                 srv_hat = jax.tree_util.tree_map(

@@ -102,6 +102,25 @@ def topk_slots(x: jax.Array, k, cap: int):
     return idx.astype(jnp.uint32), vals.astype(x.dtype), support
 
 
+def topk_slots_sharded(x: jax.Array, k_global, cap: int, axis: str,
+                       n_total: int):
+    """Shard-local slots of the exact global TopK, inside ``shard_map``.
+
+    ``x`` is one model shard of a unit of global size ``n_total``; the
+    threshold walk psums its per-pass counts over mesh axis ``axis`` so the
+    union of local supports is the exact global-TopK support without
+    gathering magnitudes (DESIGN.md §9).  Digit width is picked per
+    backend: 8-bit psum'd histograms on TPU (4 collective rounds), the
+    scatter-free 1-bit walk on CPU where jnp scatter histograms lose to
+    compare+reduce (EXPERIMENTS.md §Perf).  Always the jnp path — the op
+    runs inside a manual shard_map region, where the collective is part of
+    the op itself.
+    """
+    digit_bits = 8 if jax.default_backend() == "tpu" else 1
+    return _ref.topk_slots_sharded(x, k_global, int(cap), axis,
+                                   int(n_total), digit_bits=digit_bits)
+
+
 def quantize_pack(x: jax.Array, r: int, key: jax.Array):
     """Fused Q_r quantize + bit-plane pack (the ``qr`` wire codec).
 
@@ -124,6 +143,22 @@ def quantize_pack(x: jax.Array, r: int, key: jax.Array):
     words = _qr_pack.quantize_pack_with_uniforms(
         x, int(r), u, norm, interpret=interp)
     return words, norm
+
+
+def quantize_pack_global_norm(x: jax.Array, r: int, u: jax.Array,
+                              norm: jax.Array):
+    """``quantize_pack`` with the norm (and uniforms) supplied externally.
+
+    The sharded qr path computes the *global* l2 norm by psum-ing local
+    sums of squares across the model axis, then packs each shard's slice
+    against that shared scale; uniforms are drawn by the caller (per-shard
+    ``fold_in`` keys) so each shard's rounding draws are independent.
+    """
+    mode = _resolve()
+    if mode == "ref":
+        return _ref.quantize_pack_with_uniforms(x, int(r), u, norm)
+    return _qr_pack.quantize_pack_with_uniforms(
+        x, int(r), u, norm, interpret=(mode == "interpret"))
 
 
 def topk_qr_slots(x: jax.Array, k, cap: int, r: int, key: jax.Array):

@@ -26,29 +26,108 @@ def _mag_bits(x: jax.Array) -> jax.Array:
     return jax.lax.bitcast_convert_type(jnp.abs(xf), jnp.uint32)
 
 
-def topk_threshold_bits(x: jax.Array, k) -> jax.Array:
+#: MSB-first 8-bit digit positions of the radix-histogram threshold walk.
+RADIX_SHIFTS = (24, 16, 8, 0)
+
+
+def radix_digit_hist(bits: jax.Array, prefix: jax.Array,
+                     shift: int) -> jax.Array:
+    """256-bin int32 histogram of the 8-bit digit at ``shift``, counting
+    only elements whose already-decided high bits match ``prefix``.
+
+    One O(n) scatter-add pass over the uint32 magnitude bit patterns —
+    the jnp mirror of the Pallas histogram kernel in
+    :mod:`repro.kernels.topk_compress`.  Integer counts make the histogram
+    an *exact* ``psum`` reducend: summing per-shard histograms across a
+    model-parallel mesh axis yields bit-for-bit the histogram of the
+    concatenated vector, which is how the sharded wire path (DESIGN.md §9)
+    gets exact global TopK without gathering magnitudes.
+    """
+    if shift + 8 < 32:
+        high = jnp.uint32((0xFFFFFFFF << (shift + 8)) & 0xFFFFFFFF)
+    else:
+        high = jnp.uint32(0)
+    match = (bits & high) == (prefix & high)
+    digit = ((bits >> jnp.uint32(shift)) & jnp.uint32(0xFF)).astype(jnp.int32)
+    return jnp.zeros((256,), jnp.int32).at[digit].add(
+        match.astype(jnp.int32))
+
+
+def radix_walk_step(hist: jax.Array, k_rem: jax.Array):
+    """Fix one radix digit from a (possibly cross-shard-summed) histogram.
+
+    Picks the largest digit ``d`` that still leaves ``>= k_rem`` elements
+    at or above it (``ge`` is non-increasing, so ``d`` is the last index
+    with ``ge >= k_rem``) and discounts the strictly-greater bucket from
+    ``k_rem``.  Returns ``(digit int32, k_rem')``.
+    """
+    ge = jnp.cumsum(hist[::-1])[::-1]              # count(digit >= j)
+    digit = jnp.clip(jnp.sum((ge >= k_rem).astype(jnp.int32)) - 1, 0, 255)
+    gt = jnp.where(digit < 255, ge[jnp.clip(digit + 1, 0, 255)],
+                   jnp.zeros((), ge.dtype))
+    return digit, k_rem - gt
+
+
+def topk_threshold_bits(x: jax.Array, k, *, digit_bits: int = 1,
+                        psum_axis: str | None = None,
+                        n_total: int | None = None) -> jax.Array:
     """uint32 bit pattern of the k-th largest |x_i| (the TopK threshold).
 
-    A 32-pass binary search on the magnitude bit patterns: pass ``i``
-    tentatively sets bit ``31 - i`` of the candidate threshold and keeps it
-    iff at least ``k`` elements compare >= the candidate.  The result is the
-    largest ``t`` with ``count(bits >= t) >= k`` — exactly the k-th largest
-    magnitude's bit pattern, ties included.  Each pass is one compare + one
-    reduce (O(n) streaming), replacing the O(n log n) sort / ``lax.top_k``
-    the transform path used before; ``k`` may be traced (clipped to
-    ``[0, n]``; ``k == 0`` yields the all-ones pattern, i.e. empty support).
-    Same answer as the Pallas radix-histogram walk in
-    :mod:`repro.kernels.topk_compress`.
+    A radix-histogram walk on the magnitude bit patterns, MSB first: each
+    pass fixes the next ``digit_bits`` bits of the threshold by counting
+    how many elements sit at or above each candidate digit, and keeps the
+    largest digit with ``>= k`` elements above.  The result is the largest
+    ``t`` with ``count(bits >= t) >= k`` — exactly the k-th largest
+    magnitude's bit pattern, ties included.  Two digit widths:
+
+    * ``digit_bits=1`` (default) — 32 scatter-free compare+reduce passes
+      (one O(n) streaming sweep each; the old "binary search" is exactly
+      this walk).  Measured fastest on XLA-CPU, where scatter-add
+      histograms serialize (EXPERIMENTS.md §Perf: 8-bit digits cost +127%
+      on an account-mode round).
+    * ``digit_bits=8`` — 4 passes over 256-bin scatter-add histograms
+      (:func:`radix_digit_hist`), the jnp twin of the Pallas kernel in
+      :mod:`repro.kernels.topk_compress`.
+
+    With ``psum_axis`` (inside ``shard_map``) every per-pass count or
+    histogram is ``lax.psum``-ed across that mesh axis, so the walk
+    returns the exact *global* threshold of the axis-concatenated vector
+    from shard-local magnitudes — integer counts make the reduction exact,
+    which is how the §9 sharded wire path gets bit-identical global TopK
+    without gathering magnitudes.  ``digit_bits`` then sets the collective
+    count per unit: 32 scalar psums at 1-bit digits vs 4 256-lane psums at
+    8-bit digits (the right trade on a real multi-host mesh).  Pass
+    ``n_total`` (the global size) so ``k`` clips against the logical
+    vector, not this shard's slice.
+
+    ``k`` may be traced (clipped to ``[0, n]``; ``k == 0`` yields the
+    all-ones pattern, i.e. empty support).
     """
     if x.ndim != 1:
         raise ValueError(
             f"topk_threshold_bits expects 1-D input, got shape {x.shape}")
+    if digit_bits not in (1, 8):
+        raise ValueError(f"digit_bits must be 1 or 8, got {digit_bits}")
     bits = _mag_bits(x)
-    kc = jnp.clip(jnp.asarray(k, jnp.int32), 0, x.size)
+    hi = x.size if n_total is None else int(n_total)
+    kc = jnp.clip(jnp.asarray(k, jnp.int32), 0, hi)
+
+    if digit_bits == 8:
+        k_rem = kc
+        prefix = jnp.zeros((), jnp.uint32)
+        for shift in RADIX_SHIFTS:
+            hist = radix_digit_hist(bits, prefix, shift)
+            if psum_axis is not None:
+                hist = jax.lax.psum(hist, psum_axis)
+            digit, k_rem = radix_walk_step(hist, k_rem)
+            prefix = prefix | (digit.astype(jnp.uint32) << shift)
+        return prefix
 
     def body(i, t):
         cand = t | (jnp.uint32(1) << (jnp.uint32(31) - jnp.uint32(i)))
         cnt = jnp.sum((bits >= cand).astype(jnp.int32))
+        if psum_axis is not None:
+            cnt = jax.lax.psum(cnt, psum_axis)
         return jnp.where(cnt >= kc, cand, t)
 
     return jax.lax.fori_loop(0, 32, body, jnp.uint32(0))
@@ -124,6 +203,35 @@ def topk_slots(x: jax.Array, k, cap: int):
     bits = _mag_bits(x)
     t = topk_threshold_bits(x, k)    # k >= n: t = min bits, all nonzero kept
     support = (bits >= t) & (bits != 0)
+    idx = support_slots(support, cap)
+    safe = jnp.clip(idx, 0, n - 1)
+    vals = jnp.where(idx < n, x[safe], jnp.zeros((), x.dtype))
+    return idx.astype(jnp.uint32), vals, support
+
+
+def topk_slots_sharded(x: jax.Array, k_global, cap: int, axis: str,
+                       n_total: int, digit_bits: int = 1):
+    """Shard-local slots of the exact *global* TopK (DESIGN.md §9).
+
+    ``x`` is this shard's slice of a unit whose axis-concatenated global
+    size is ``n_total``, inside ``shard_map`` manual over mesh axis
+    ``axis``.  The threshold is the global one — the
+    :func:`topk_threshold_bits` radix walk with every per-pass count
+    psum'd over ``axis`` — so the union of the shards' supports is exactly
+    the global-TopK support, ties included, without gathering magnitudes.
+    Slots stay local: ``idx`` indexes this shard's own flattening
+    (sentinel ``n_local``).  ``cap`` is the per-shard slot capacity; a
+    shard whose local support overflows it keeps the lowest-index ``cap``
+    (the §8 static-capacity ties rule, applied per shard).
+    """
+    if x.ndim != 1:
+        raise ValueError(
+            f"topk_slots_sharded expects 1-D input, got shape {x.shape}")
+    n = x.size
+    bits = _mag_bits(x)
+    t = topk_threshold_bits(x, k_global, digit_bits=digit_bits,
+                            psum_axis=axis, n_total=n_total)
+    support = (bits >= t) & (bits != jnp.uint32(0))
     idx = support_slots(support, cap)
     safe = jnp.clip(idx, 0, n - 1)
     vals = jnp.where(idx < n, x[safe], jnp.zeros((), x.dtype))

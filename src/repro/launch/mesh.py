@@ -24,7 +24,7 @@ def make_host_mesh() -> jax.sharding.Mesh:
 
 
 def make_client_mesh(n_shards: int | None = None, *, data: int = 1,
-                     model: int = 1) -> jax.sharding.Mesh:
+                     model: int = 1, config=None) -> jax.sharding.Mesh:
     """Mesh whose leading ``clients`` axis shards federated rounds
     (DESIGN.md §6; consumed by ``RoundEngine.use_mesh`` /
     ``server.run_federated(mesh=...)``).
@@ -35,6 +35,11 @@ def make_client_mesh(n_shards: int | None = None, *, data: int = 1,
     Passing ``data``/``model`` composes the client axis with the existing
     in-model axes: ``(clients, data, model)``, clients outermost so each
     client shard holds a contiguous data/model sub-mesh.
+
+    Pass ``config`` (an ``ArchSpec`` or ``ModelConfig``) with ``model > 1``
+    to validate model-axis divisibility against the architecture's
+    head/ffn/vocab dims up front — a bad composition otherwise surfaces as
+    a deep XLA sharding failure mid-round.
     """
     if n_shards is None:
         n_shards = max(1, len(jax.devices()) // (data * model))
@@ -42,5 +47,9 @@ def make_client_mesh(n_shards: int | None = None, *, data: int = 1,
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
     if data == 1 and model == 1:
         return jax.make_mesh((n_shards,), ("clients",))
-    return jax.make_mesh((n_shards, data, model),
+    mesh = jax.make_mesh((n_shards, data, model),
                          ("clients", "data", "model"))
+    if config is not None and model > 1:
+        from repro.core.distributed import validate_model_axis
+        validate_model_axis(mesh, config)
+    return mesh

@@ -143,6 +143,37 @@ def _sanitize(spec: P, shape: tuple, mesh: Mesh) -> P:
     return P(*out)
 
 
+def model_dim_index(path, shape: tuple, model_shards: int, *,
+                    expert_over_model: bool = False) -> Optional[int]:
+    """Index of the dimension :func:`param_spec` puts on ``model``, or None.
+
+    The federated sharded wire path (compress/wire.py §9) needs, per leaf,
+    *which* dimension is model-sharded — independent of any concrete mesh.
+    ``path`` is a ``tree_map_with_path`` key path or an already-joined
+    string.  Returns None for replicated leaves AND for leaves whose model
+    dim does not divide ``model_shards`` (the same condition under which
+    ``_sanitize`` strips the axis from the real sharding, so wire layout
+    and placement agree).
+    """
+    p = path if isinstance(path, str) else _path_str(path)
+    spec = param_spec(p, shape, _RULE_MESH, expert_over_model)
+    for dim, entry in enumerate(spec):
+        if entry == "model":
+            return dim if shape[dim] % int(model_shards) == 0 else None
+    return None
+
+
+class _RuleMesh:
+    """Mesh stand-in for :func:`param_spec`, which only reads
+    ``mesh.axis_names`` (for the pod check) — lets path->spec rules run
+    without a device mesh in scope."""
+
+    axis_names = ("data", "model")
+
+
+_RULE_MESH = _RuleMesh()
+
+
 def param_shardings(params_shape: PyTree, mesh: Mesh, *,
                     n_experts: Optional[int] = None,
                     seq_parallel: bool = False) -> PyTree:

@@ -1,0 +1,385 @@
+"""Composed clients x model meshes (DESIGN.md §9): shard-local wire path.
+
+Four contracts:
+
+1. ``ModelShardCtx.encode_payload`` -> ``gather_decoded_payload`` on a
+   composed mesh reproduces the unsharded wire round bit-for-bit on
+   tie-free trees — decoded trees and ``BitsReport`` identical for topk
+   and dense at every model-shard count, qr identical bits + comparable
+   quantization error (its dither keys are shard-folded by design);
+2. the static byte accounting conserves wire bytes: a model shard ships
+   ``per_device_payload_nbytes`` (~1/m of the payload), replicated units
+   ride along whole, and ``m * per_dev - nbytes`` is exactly the
+   replicated overhang;
+3. every committed config's ``param_shardings`` agrees with
+   ``model_dim_index`` leaf-by-leaf on 1- and 8-device model axes — the
+   wire layout and the GSPMD placement can never disagree — and
+   ``_sanitize`` never *silently* drops the model axis: whenever it would,
+   ``validate_model_axis`` raises up front (seamless' 256206 vocab);
+4. a federated round end-to-end on a composed mesh matches the flat-mesh
+   round: losses and accounted bits equal up to threshold-tie noise.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import Compose, Identity, Int8Sync, QuantQr, TopK, wire
+from repro.configs import ARCH_IDS, get_spec
+from repro.core import fed_data
+from repro.core.baselines import FedAvg, FedConfig
+from repro.core.clients import RoundPlan
+from repro.core.distributed import ModelShardCtx, validate_model_axis
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_client_mesh
+from repro.models import transformer as tfm
+from repro.sharding import specs as sspecs
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_DEV = len(jax.devices())
+C = 4  # stacked client dim in the wire tests
+
+# Leaf paths chosen to hit the param_spec rules: embedding (model on dim
+# 0), mlp kernel (model on dim 1), qkv bias (model on dim 0), and a norm
+# scale the rules replicate (odd size: never divisible anyway).  All
+# sharded dims divide 8.
+WIRE_SHAPES = {
+    "embed": {"embedding": (64, 16)},
+    "mlp": {"wi": {"kernel": (16, 96)}},
+    "q": {"bias": (40,)},
+    "norm": {"scale": (33,)},
+}
+
+
+def tie_free_stacked(seed=0):
+    """(C, ...) client-stacked tree with pairwise-distinct magnitudes per
+    client leaf, so the TopK threshold has no ties and sharded vs
+    unsharded support is forced identical."""
+    rng = np.random.default_rng(seed)
+
+    def leaf(shape):
+        n = int(np.prod(shape))
+        rows = []
+        for _ in range(C):
+            mags = rng.permutation(n).astype(np.float32) + 1.0
+            signs = rng.choice(np.asarray([-1.0, 1.0], np.float32), n)
+            rows.append((signs * mags).reshape(shape))
+        return jnp.asarray(np.stack(rows))
+
+    return jax.tree_util.tree_map(
+        leaf, WIRE_SHAPES, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def unsharded_roundtrip(comp, stacked, keys=None):
+    decs, reps = [], []
+    for c in range(C):
+        tree_c = jax.tree_util.tree_map(lambda a: a[c], stacked)
+        k = None if keys is None else keys[c]
+        payload, rep = wire.encode(comp, tree_c, k)
+        decs.append(wire.decode(payload))
+        reps.append(rep)
+    dec = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *decs)
+    return dec, reps
+
+
+def full_plan():
+    return RoundPlan(steps=jnp.ones((C,), jnp.int32),
+                     participating=jnp.ones((C,), bool),
+                     speed=jnp.ones((C,)), bandwidth=jnp.ones((C,)),
+                     comp_overrides={})
+
+
+def sharded_roundtrip(comp, stacked, m, keys=None, partf=None):
+    mesh = make_client_mesh(max(1, min(N_DEV // m, C)), model=m)
+    ctx = ModelShardCtx(mesh)
+    payload, report = ctx.encode_payload(comp, full_plan(), stacked, keys)
+    if partf is None:
+        partf = jnp.ones((C,), jnp.float32)
+    dec = ctx.gather_decoded_payload(payload, partf)
+    return payload, report, dec
+
+
+def leaf_model_dims(tree, m):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return tuple(sspecs.model_dim_index(path, leaf.shape, m)
+                 for path, leaf in flat)
+
+
+# --------------------------------------------------------------------------- #
+# 1. shard-local encode/decode == unsharded wire, bit-for-bit
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.skipif(N_DEV < 8, reason="needs 8 devices for clients x model")
+class TestShardedRoundtrip:
+    @pytest.mark.parametrize("m", [2, 4, 8])
+    @pytest.mark.parametrize("comp", [TopK(0.1), TopK(0.4), Identity()],
+                             ids=["topk10", "topk40", "dense"])
+    def test_exact_match(self, comp, m):
+        stacked = tie_free_stacked()
+        dec_ref, reps = unsharded_roundtrip(comp, stacked)
+        _, report, dec = sharded_roundtrip(comp, stacked, m)
+        for (kp_r, ref), (kp_s, got) in zip(
+                jax.tree_util.tree_leaves_with_path(dec_ref),
+                jax.tree_util.tree_leaves_with_path(dec)):
+            np.testing.assert_array_equal(
+                np.asarray(ref), np.asarray(got),
+                err_msg=f"m={m} {jax.tree_util.keystr(kp_r)}")
+        for f in ("value_bits", "index_bits", "meta_bits"):
+            ref = np.asarray([float(getattr(r, f)) for r in reps])
+            np.testing.assert_array_equal(
+                ref, np.asarray(getattr(report, f), np.float64),
+                err_msg=f"m={m} {f}")
+
+    @pytest.mark.parametrize("m", [2, 4])
+    def test_qr_bits_and_error(self, m):
+        """qr dither keys are shard-folded (documented), so decoded values
+        differ from the unsharded run draw-by-draw — but the bits are
+        width-static identical and the quantization error is the same
+        magnitude (global norm via one psum)."""
+        comp = QuantQr(r=4)
+        stacked = tie_free_stacked(seed=3)
+        keys = jax.random.split(jax.random.PRNGKey(5), C)
+        dec_ref, reps = unsharded_roundtrip(comp, stacked, keys)
+        _, report, dec = sharded_roundtrip(comp, stacked, m, keys=keys)
+        for f in ("value_bits", "index_bits", "meta_bits"):
+            ref = np.asarray([float(getattr(r, f)) for r in reps])
+            np.testing.assert_array_equal(
+                ref, np.asarray(getattr(report, f), np.float64),
+                err_msg=f"m={m} {f}")
+        for (kp, x), ref, got in zip(
+                jax.tree_util.tree_leaves_with_path(stacked),
+                jax.tree_util.tree_leaves(dec_ref),
+                jax.tree_util.tree_leaves(dec)):
+            e_ref = float(jnp.linalg.norm(x - ref))
+            e_got = float(jnp.linalg.norm(x - got))
+            assert e_got <= 1.5 * e_ref + 1e-6, \
+                (jax.tree_util.keystr(kp), e_ref, e_got)
+
+    @pytest.mark.parametrize("m", [2, 4])
+    def test_masked_clients_decode_to_zero(self, m):
+        comp = TopK(0.2)
+        stacked = tie_free_stacked(seed=1)
+        partf = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+        dec_ref, _ = unsharded_roundtrip(comp, stacked)
+        _, _, dec = sharded_roundtrip(comp, stacked, m, partf=partf)
+        for ref, got in zip(jax.tree_util.tree_leaves(dec_ref),
+                            jax.tree_util.tree_leaves(dec)):
+            got = np.asarray(got)
+            assert not got[1].any()
+            for c in (0, 2, 3):
+                np.testing.assert_array_equal(np.asarray(ref)[c], got[c])
+
+    def test_shard_is_fail_soft(self):
+        mesh = make_client_mesh(2, model=2)
+        ctx = ModelShardCtx(mesh)
+        scalar = jnp.float32(3.0)
+        odd = jnp.ones((3, 5))
+        assert ctx.shard(scalar) is scalar        # rank-0: untouched
+        np.testing.assert_array_equal(np.asarray(ctx.shard(odd)),
+                                      np.ones((3, 5)))  # indivisible: no-op
+
+
+# --------------------------------------------------------------------------- #
+# 2. static capacity / byte accounting
+# --------------------------------------------------------------------------- #
+
+class TestByteAccounting:
+    def sharded_spec(self, comp, m):
+        structs = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s, jnp.float32), WIRE_SHAPES,
+            is_leaf=lambda x: isinstance(x, tuple))
+        mdims = leaf_model_dims(structs, m)
+        return wire.sharded_wire_spec(comp, structs, mdims, m), mdims
+
+    @pytest.mark.parametrize("comp", [TopK(0.1), QuantQr(r=4), Identity()],
+                             ids=["topk", "qr", "dense"])
+    def test_per_device_bytes_shrink_and_conserve(self, comp):
+        spec1, _ = self.sharded_spec(comp, 1)
+        assert wire.per_device_payload_nbytes(spec1) == spec1.nbytes
+        prev = None
+        for m in (2, 4, 8):
+            spec, mdims = self.sharded_spec(comp, m)
+            assert any(d is not None for d in mdims)
+            per_dev = wire.per_device_payload_nbytes(spec)
+            # nbytes = m * sharded + replicated; per_dev = sharded + repl
+            assert per_dev < spec.nbytes
+            overhang = m * per_dev - spec.nbytes        # = (m-1) * repl
+            assert overhang >= 0 and overhang % (m - 1) == 0
+            if prev is not None:
+                assert per_dev < prev                   # shrinks with m
+            prev = per_dev
+
+    def test_dense_bytes_exact(self):
+        spec, _ = self.sharded_spec(Identity(), 4)
+        n_sharded = 64 * 16 + 16 * 96 + 40
+        n_repl = 33
+        assert spec.nbytes == (n_sharded + n_repl) * 4
+        assert wire.per_device_payload_nbytes(spec) == \
+            (n_sharded // 4 + n_repl) * 4
+
+    def test_shard_cap_properties(self):
+        for k in (1, 5, 64, 1000, 4096):
+            for m in (1, 2, 4, 8, 16):
+                cap = wire.shard_cap(k, m, 10**6)
+                assert cap >= -(-k // m)            # >= expected k/m slots
+                assert m * cap >= k                 # capacity conservation
+            assert wire.shard_cap(k, 4, 7) <= 7     # never exceeds local n
+
+
+# --------------------------------------------------------------------------- #
+# 3. codec / mesh validation
+# --------------------------------------------------------------------------- #
+
+class _FakeMesh:
+    axis_names = ("clients", "data", "model")
+
+    def __init__(self, m):
+        self.shape = {"clients": 1, "data": 1, "model": m}
+
+
+class TestValidation:
+    @pytest.mark.parametrize("comp", [
+        Compose(TopK(0.25), QuantQr(4)),
+        Int8Sync(),
+        TopK(0.3, scope="global"),
+        QuantQr(4, scope="global"),
+    ], ids=["compose", "int8", "topk-global", "qr-global"])
+    def test_sharded_codec_rejections(self, comp):
+        with pytest.raises(ValueError):
+            wire.check_sharded_supported(comp, 2)
+        wire.check_sharded_supported(comp, 1)       # fine off the model axis
+
+    def test_sharded_codec_accepts(self):
+        assert wire.check_sharded_supported(TopK(0.3), 4) == "topk"
+        assert wire.check_sharded_supported(QuantQr(4), 4) == "qr"
+        assert wire.check_sharded_supported(Identity(), 4) == "dense"
+
+    @pytest.mark.skipif(N_DEV < 4, reason="needs a composed mesh")
+    def test_overrides_rejected_on_model_axis(self):
+        ctx = ModelShardCtx(make_client_mesh(2, model=2))
+        plan = full_plan()._replace(comp_overrides={1: TopK(0.5)})
+        with pytest.raises(ValueError, match="overrides"):
+            ctx.encode_payload(TopK(0.1), plan, tie_free_stacked())
+
+    def test_validate_model_axis(self):
+        qwen = get_spec("qwen2-0.5b")
+        assert validate_model_axis(_FakeMesh(8), qwen) == 8
+        assert validate_model_axis(_FakeMesh(1), qwen) == 1
+
+        seamless = get_spec("seamless-m4t-large-v2")
+        assert validate_model_axis(_FakeMesh(2), seamless) == 2
+        with pytest.raises(ValueError) as ei:                # 256206 % 4
+            validate_model_axis(_FakeMesh(4), seamless)
+        msg = str(ei.value)
+        assert "vocab" in msg and "[1, 2]" in msg            # usable sizes
+
+        class NoModel:
+            axis_names = ("clients",)
+            shape = {"clients": 4}
+
+        assert validate_model_axis(NoModel(), qwen) == 1
+
+    @pytest.mark.skipif(N_DEV < 2, reason="needs a composed mesh")
+    def test_make_client_mesh_validates_config(self):
+        qwen = get_spec("qwen2-0.5b")
+        bad = dataclasses.replace(qwen, model=dataclasses.replace(
+            qwen.model, vocab=151_935))                      # odd vocab
+        with pytest.raises(ValueError, match="vocab"):
+            make_client_mesh(1, model=2, config=bad)
+        make_client_mesh(1, model=2, config=qwen)            # divides fine
+
+
+# --------------------------------------------------------------------------- #
+# 4. param_shardings <-> model_dim_index agreement, every committed config
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_shardings_agree_with_wire_rules(arch):
+    """The placement (``param_shardings`` after ``_sanitize``) and the wire
+    layout (``model_dim_index``) must name the same model dim on every
+    leaf; any dim ``_sanitize`` drops must be caught loudly by
+    ``validate_model_axis`` rather than silently replicated."""
+    from jax.sharding import Mesh
+
+    spec = get_spec(arch)
+    pstruct = steps_mod._params_struct(spec)
+    n_exp = steps_mod._n_experts(spec)
+    sizes = [1] + ([8] if N_DEV >= 8 else [])
+    for m in sizes:
+        mesh = Mesh(np.array(jax.devices()[:m]).reshape(1, m),
+                    ("data", "model"))
+        shardings = sspecs.param_shardings(pstruct, mesh, n_experts=n_exp)
+        eom = bool(n_exp) and n_exp % m == 0
+        try:
+            validate_model_axis(mesh, spec)
+            valid = True
+        except ValueError:
+            valid = False
+        dropped = []
+        for (path, leaf), ns in zip(
+                jax.tree_util.tree_leaves_with_path(pstruct),
+                jax.tree_util.tree_leaves(shardings)):
+            placed = [i for i, e in enumerate(ns.spec)
+                      if e == "model"
+                      or (isinstance(e, tuple) and "model" in e)]
+            mdi = sspecs.model_dim_index(path, leaf.shape, m,
+                                         expert_over_model=eom)
+            want = [] if mdi is None else [mdi]
+            assert placed == want, \
+                (arch, m, jax.tree_util.keystr(path), ns.spec, mdi)
+            rule = sspecs.param_spec(sspecs._path_str(path), leaf.shape,
+                                     mesh, eom)
+            if any(e == "model" for e in rule) and not placed:
+                dropped.append(jax.tree_util.keystr(path))
+        if valid:
+            assert not dropped, (arch, m, dropped)
+        elif m > 1:
+            assert dropped, (arch, m)        # the validator flagged these
+
+
+# --------------------------------------------------------------------------- #
+# 5. federated round end-to-end on a composed mesh
+# --------------------------------------------------------------------------- #
+
+TINY = tfm.ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                       n_kv_heads=2, head_dim=16, d_ff=64, vocab=64,
+                       qkv_bias=True)
+
+
+@pytest.mark.skipif(N_DEV < 8, reason="needs 8 devices for clients x model")
+def test_fed_round_composed_mesh_matches_flat():
+    rng = np.random.default_rng(0)
+    per, seq = 4, 8
+    x = rng.integers(0, TINY.vocab, (4 * per, seq)).astype(np.int32)
+    y = np.zeros((4 * per,), np.float32)
+    data = fed_data.from_numpy_partition(
+        x, y, [np.arange(i * per, (i + 1) * per) for i in range(4)])
+    loss_fn = lambda p, xb, yb: tfm.loss(p, TINY, xb, loss_chunk=seq)
+    fcfg = FedConfig(gamma=0.05, local_steps=2, n_clients=4,
+                     clients_per_round=4, batch_size=2)
+    params0 = tfm.init_params(jax.random.PRNGKey(0), TINY)
+
+    runs = {}
+    for m in (1, 2):
+        mesh = (make_client_mesh(4) if m == 1 else
+                make_client_mesh(4, model=m, config=TINY))
+        alg = FedAvg(loss_fn, data, fcfg, TopK(0.1), wire="packed")
+        alg.use_mesh(mesh)
+        p0 = params0 if m == 1 else jax.device_put(
+            params0, sspecs.param_shardings(params0, mesh))
+        _, ms = alg.run_rounds(alg.init(p0), jax.random.PRNGKey(3), 2)
+        runs[m] = {k: np.asarray(v) for k, v in ms.items()}
+
+    np.testing.assert_allclose(runs[2]["train_loss"], runs[1]["train_loss"],
+                               rtol=2e-3)
+    # bits equal up to threshold-tie flips (64 bits/slot) on diverging
+    # float trajectories
+    np.testing.assert_allclose(runs[2]["uplink_bits"],
+                               runs[1]["uplink_bits"], rtol=1e-4)
+    for m in (1, 2):
+        assert (runs[m]["uplink_payload_bytes"] * 8
+                >= runs[m]["uplink_bits"]).all()     # §8 reconcile
