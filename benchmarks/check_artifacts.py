@@ -1,0 +1,165 @@
+"""Artifact regression gate: fresh benchmark payload sizes vs committed.
+
+Compares the size/bits fields of freshly produced benchmark artifacts
+against the committed baselines (``git show <ref>:...``) and fails on a
+>10% regression — a codec or wire-layout change that silently grows the
+payloads the whole repo exists to shrink.  Wall-time and accuracy fields
+are deliberately NOT gated (they are machine- and scale-dependent); only
+bytes and bits are, and only where they are scale-invariant:
+
+* ``wire_formats``   — per-codec ``payload_bytes`` / ``accounted_bits`` /
+  ``pad_bits`` on the fixed model tree (identical under ``--fast``);
+* ``big_model``      — per-device payload bytes per client, compared only
+  when the arch/scale markers match (a ``--fast`` run uses a smaller
+  model, which is a skip, not a pass);
+* ``downlink``       — per-ROUND uplink/downlink/total Mbits (fast and
+  full runs differ in rounds, so totals are normalized before comparing).
+
+Fresh side: ``<name>.partial.json`` when present (what a CI ``--fast``
+smoke just wrote), else ``<name>.json``.  Baseline side: the committed
+``<name>.json`` at ``--baseline-ref`` (default HEAD).  A baseline that
+does not exist yet (first PR adding an artifact) is a skip.  Exit 1 on
+any regression, with a row-by-row report either way.
+
+Usable locally exactly as CI runs it:
+
+    PYTHONPATH=src python -m benchmarks.check_artifacts
+    PYTHONPATH=src python -m benchmarks.check_artifacts --tolerance 0.05
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts"
+REPO = ART.parent.parent
+
+# artifact -> (row-set accessor, gated fields, per-round-normalized fields)
+SPECS = {
+    "wire_formats": (("rows",), ("payload_bytes", "accounted_bits",
+                                 "pad_bits"), ()),
+    "big_model": (("sweep",), ("per_device_payload_bytes_per_client",),
+                  ()),
+    "downlink": (("rows",), (), ("total_mbits", "uplink_mbits",
+                                 "downlink_mbits")),
+}
+# top-level markers that must match for an artifact's rows to be
+# comparable at all (scale/arch guards)
+SCALE_MARKERS = ("arch", "scale", "n_params", "seq_len")
+
+
+def _load_fresh(name: str):
+    for p in (ART / f"{name}.partial.json", ART / f"{name}.json"):
+        if p.exists():
+            return json.loads(p.read_text()), p
+    return None, None
+
+
+def _load_baseline(name: str, ref: str):
+    rel = f"benchmarks/artifacts/{name}.json"
+    try:
+        out = subprocess.run(["git", "show", f"{ref}:{rel}"], cwd=REPO,
+                             capture_output=True, text=True, check=True)
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    return json.loads(out.stdout)
+
+
+def _rows(doc, keys):
+    if doc is None:
+        return {}
+    node = doc
+    for k in keys:
+        if not isinstance(node, dict) or k not in node:
+            return {}
+        node = node[k]
+    return {r["name"]: r for r in node
+            if isinstance(r, dict) and "name" in r}
+
+
+def _markers(doc):
+    return {k: doc.get(k) for k in SCALE_MARKERS if isinstance(doc, dict)}
+
+
+def check(name: str, tolerance: float, ref: str) -> list[str]:
+    accessor, fields, per_round_fields = SPECS[name]
+    fresh_doc, fresh_path = _load_fresh(name)
+    base_doc = _load_baseline(name, ref)
+    if fresh_doc is None:
+        print(f"  {name}: no fresh artifact — skip")
+        return []
+    if base_doc is None:
+        print(f"  {name}: no committed baseline at {ref} — skip")
+        return []
+    if _markers(fresh_doc) != _markers(base_doc):
+        print(f"  {name}: scale markers differ "
+              f"({_markers(fresh_doc)} vs {_markers(base_doc)}) — skip")
+        return []
+    fresh, base = _rows(fresh_doc, accessor), _rows(base_doc, accessor)
+    failures, compared = [], 0
+    for rname, brow in base.items():
+        frow = fresh.get(rname)
+        if frow is None:
+            failures.append(f"{name}: baseline row '{rname}' missing "
+                            f"from {fresh_path.name}")
+            continue
+        for field in fields:
+            if field not in brow or field not in frow:
+                continue
+            b, f = float(brow[field]), float(frow[field])
+            compared += 1
+            if f > b * (1 + tolerance) + 1e-9:
+                failures.append(
+                    f"{name}/{rname}.{field}: {b:g} -> {f:g} "
+                    f"(+{(f / max(b, 1e-12) - 1) * 100:.1f}%)")
+        for field in per_round_fields:
+            if field not in brow or field not in frow:
+                continue
+            br, fr = brow.get("rounds"), frow.get("rounds")
+            if not br or not fr:
+                continue
+            b, f = float(brow[field]) / br, float(frow[field]) / fr
+            compared += 1
+            if f > b * (1 + tolerance) + 1e-9:
+                failures.append(
+                    f"{name}/{rname}.{field}/round: {b:g} -> {f:g} "
+                    f"(+{(f / max(b, 1e-12) - 1) * 100:.1f}%)")
+    status = "FAIL" if failures else "ok"
+    print(f"  {name}: {compared} field(s) compared "
+          f"({fresh_path.name} vs {ref}) — {status}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >tolerance payload-size regressions vs the "
+                    "committed benchmark artifacts")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative growth (default 0.10)")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the committed artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {sorted(SPECS)}")
+    args = ap.parse_args()
+
+    names = args.only if args.only else list(SPECS)
+    print(f"artifact regression check (tolerance {args.tolerance:.0%}, "
+          f"baseline {args.baseline_ref}):")
+    failures = []
+    for name in names:
+        failures += check(name, args.tolerance, args.baseline_ref)
+    if failures:
+        print("\npayload-size regressions:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("no payload-size regressions.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,7 @@ MODULES = [
     "big_model",
     "async_rounds",
     "wire_formats",
+    "downlink",
     "roofline",
 ]
 

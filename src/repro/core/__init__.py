@@ -3,5 +3,7 @@
 # host framework. Add sibling subpackages for substrates.
 
 from repro.core.clients import ClientProfile, ClientSchedule, RoundPlan
+from repro.core.locodl import LoCoDL, LoCoDLConfig, LoCoDLState
 
-__all__ = ["ClientProfile", "ClientSchedule", "RoundPlan"]
+__all__ = ["ClientProfile", "ClientSchedule", "RoundPlan",
+           "LoCoDL", "LoCoDLConfig", "LoCoDLState"]

@@ -25,8 +25,8 @@ import jax.numpy as jnp
 from repro.compress import Compressor, Identity, TopK, dense_bits
 from repro.core import aggregation, comm
 from repro.core.clients import (
-    NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
-    mean_over_active, payload_metrics, per_client, tree_where,
+    NULL_CTX, ClientAxisCtx, ClientSchedule, apply_downlink, keep_where,
+    masked_mean, mean_over_active, payload_metrics, per_client, tree_where,
     validate_schedule, vmap_compress)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
@@ -122,6 +122,7 @@ def _broadcast(x: PyTree, s: int) -> PyTree:
 class FedAvgState(NamedTuple):
     x: PyTree
     round: jax.Array
+    y: PyTree = ()   # clients' last-received model (downlink != "dense")
 
 
 class FedAvg(RoundEngine):
@@ -130,10 +131,14 @@ class FedAvg(RoundEngine):
                  schedule: ClientSchedule | None = None,
                  policy: aggregation.AggregationPolicy | None = None,
                  wire: str = "account",
+                 downlink: str = "dense",
+                 downlink_compressor: Compressor | None = None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.policy = policy
         self.wire = wire
+        self.downlink = downlink
+        self.down_comp = downlink_compressor
         self.comp = compressor if compressor is not None else Identity()
         self.sched = validate_schedule(
             schedule if schedule is not None
@@ -143,14 +148,22 @@ class FedAvg(RoundEngine):
         self._setup_engine()
 
     def init(self, params0: PyTree) -> FedAvgState:
-        return FedAvgState(x=params0, round=jnp.zeros((), jnp.int32))
+        y = params0 if self.downlink != "dense" else ()
+        return FedAvgState(x=params0, round=jnp.zeros((), jnp.int32), y=y)
 
     def _round_impl(self, state: FedAvgState, key: jax.Array,
                     ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched
         s = cfg.clients_per_round
         s_loc = ctx.local_count(s)
-        k_sample, k_local, k_comp = jax.random.split(key, 3)
+        dl_on = self.downlink != "dense"
+        if dl_on:
+            k_sample, k_local, k_comp, k_dl = jax.random.split(key, 4)
+        else:
+            # dense-mode split stays 3-way so existing trajectories never
+            # move (split(key, n) differs per n)
+            k_sample, k_local, k_comp = jax.random.split(key, 3)
+            k_dl = None
         clients_full = jax.random.choice(k_sample, cfg.n_clients, (s,),
                                          replace=False)
         plan = sched.plan(clients_full, cfg.local_steps)
@@ -158,7 +171,8 @@ class FedAvg(RoundEngine):
         clients = ctx.shard(clients_full)
         partf_plan_full = plan.participating.astype(jnp.float32)
         het = sched.deadline is not None
-        x0 = _broadcast(state.x, s_loc)
+        ref = state.y if dl_on else state.x    # §10: clients hold y
+        x0 = _broadcast(ref, s_loc)
         x_fin, loss_sum = _local_sgd(
             self.loss_fn, self.data, cfg, x0, clients, k_local,
             steps=plan_l.steps if het else None, ctx=ctx)
@@ -188,7 +202,7 @@ class FedAvg(RoundEngine):
             # decode, aggregate the full (s,) stack with the unsharded
             # formula (see fedcomloc._round_impl)
             xf_full = ctx.gather_decoded_payload(payload, out.partf)
-            x0_full = _broadcast(state.x, s)
+            x0_full = _broadcast(ref, s)
             if self.policy.mode == "async_buffered":
                 delta = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
                 x_new = _tmap(
@@ -214,9 +228,16 @@ class FedAvg(RoundEngine):
                                state.x)
         else:
             x_new = ctx.mean_clients(x_fin)
+        y_new = state.y
+        down_bits = jnp.asarray(s * dense_bits(state.x))
+        dl_extras = {}
+        if dl_on:
+            # §10: delta-code the new model against the cohort reference
+            y_new, down_bits, dl_extras = apply_downlink(
+                self.downlink, self.down_comp, ctx, state.y, x_new, k_dl, s)
         metrics = {"train_loss": loss,
                    "uplink_bits": client_up.sum(),
-                   "downlink_bits": jnp.asarray(s * dense_bits(state.x)),
+                   "downlink_bits": down_bits,
                    "client_steps": plan.steps,
                    "client_uplink_bits": client_up,
                    "client_finish": out.finish,
@@ -224,15 +245,20 @@ class FedAvg(RoundEngine):
                    **aggregation.policy_metrics(out)}
         if wire_on:
             metrics.update(payload_metrics(payload, out.partf))
-        return FedAvgState(x=x_new, round=state.round + 1), metrics
+        metrics.update(dl_extras)
+        return FedAvgState(x=x_new, round=state.round + 1, y=y_new), metrics
 
 
 def SparseFedAvg(loss_fn, data, cfg, density: float = 0.1,
                  schedule: ClientSchedule | None = None,
                  policy: aggregation.AggregationPolicy | None = None,
-                 wire: str = "account"):
+                 wire: str = "account",
+                 downlink: str = "dense",
+                 downlink_compressor: Compressor | None = None):
     return FedAvg(loss_fn, data, cfg, compressor=TopK(density=density),
-                  schedule=schedule, policy=policy, wire=wire)
+                  schedule=schedule, policy=policy, wire=wire,
+                  downlink=downlink,
+                  downlink_compressor=downlink_compressor)
 
 
 # --------------------------------------------------------------------------- #
@@ -244,6 +270,7 @@ class ScaffoldState(NamedTuple):
     c: PyTree        # server control variate
     ci: PyTree       # per-client control variates, stacked
     round: jax.Array
+    y: PyTree = ()   # clients' last-received (x, c) (downlink != "dense")
 
 
 class Scaffold(RoundEngine):
@@ -251,10 +278,14 @@ class Scaffold(RoundEngine):
                  schedule: ClientSchedule | None = None,
                  policy: aggregation.AggregationPolicy | None = None,
                  wire: str = "account",
+                 downlink: str = "dense",
+                 downlink_compressor: Compressor | None = None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.policy = policy
         self.wire = wire
+        self.downlink = downlink
+        self.down_comp = downlink_compressor
         self.sched = validate_schedule(
             schedule if schedule is not None
             else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
@@ -265,13 +296,21 @@ class Scaffold(RoundEngine):
         zeros = _tmap(jnp.zeros_like, params0)
         ci = _tmap(lambda p: jnp.zeros((self.cfg.n_clients,) + p.shape,
                                        p.dtype), params0)
+        # Scaffold broadcasts model AND server control variate: the §10
+        # downlink reference is the (x, c) pair the cohort last received
+        y = (params0, zeros) if self.downlink != "dense" else ()
         return ScaffoldState(x=params0, c=zeros, ci=ci,
-                             round=jnp.zeros((), jnp.int32))
+                             round=jnp.zeros((), jnp.int32), y=y)
 
     def _round_impl(self, state: ScaffoldState, key: jax.Array,
                     ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched
-        k_sample, k_local = jax.random.split(key)
+        dl_on = self.downlink != "dense"
+        if dl_on:
+            k_sample, k_local, k_dl = jax.random.split(key, 3)
+        else:
+            k_sample, k_local = jax.random.split(key)
+            k_dl = None
         s = cfg.clients_per_round
         s_loc = ctx.local_count(s)
         clients_full = jax.random.choice(k_sample, cfg.n_clients, (s,),
@@ -281,11 +320,13 @@ class Scaffold(RoundEngine):
         clients = ctx.shard(clients_full)
         partf_plan_full = plan.participating.astype(jnp.float32)
         ci_s = _tmap(lambda c: c[clients], state.ci)
-        x0 = _broadcast(state.x, s_loc)
+        # §10: clients work from the (x, c) pair they last received
+        x_ref, c_ref = state.y if dl_on else (state.x, state.c)
+        x0 = _broadcast(x_ref, s_loc)
 
         def adjust(g, slot, x_c):
             return _tmap(lambda gc, cic, cc: gc - cic + cc,
-                         g, _tmap(lambda c: c[slot], ci_s), state.c)
+                         g, _tmap(lambda c: c[slot], ci_s), c_ref)
 
         het = sched.deadline is not None
         x_fin, loss_sum = _local_sgd(self.loss_fn, self.data, cfg, x0,
@@ -303,7 +344,7 @@ class Scaffold(RoundEngine):
             ci_new = _tmap(
                 lambda cic, cc, xs, yf: cic - cc[None]
                 + per_client(coef, xs) * (xs - yf),
-                ci_s, state.c, x0, x_fin)
+                ci_s, c_ref, x0, x_fin)
             # a zero-step client did no work: the update above would still
             # shift its variate by -c (x_fin == x0), so keep the old ci
             ci_new = keep_where(plan_l.steps > 0, ci_new, ci_s)
@@ -311,7 +352,7 @@ class Scaffold(RoundEngine):
             coef = 1.0 / (cfg.local_steps * cfg.gamma)
             ci_new = _tmap(
                 lambda cic, cc, xs, yf: cic - cc[None] + coef * (xs - yf),
-                ci_s, state.c, x0, x_fin)
+                ci_s, c_ref, x0, x_fin)
         # Scaffold communicates both the model and the control variate;
         # the (plan-masked) per-client wire cost feeds the policy's
         # finish-time clock (DESIGN.md §7).
@@ -331,7 +372,7 @@ class Scaffold(RoundEngine):
             payload, _ = ctx.encode_payload(None, plan_l, (x_fin, ci_new))
             xf_full, ci_new_full = ctx.gather_decoded_payload(
                 payload, out.partf)
-            x0_full = _broadcast(state.x, s)
+            x0_full = _broadcast(x_ref, s)
             ci_s_full = _tmap(lambda c: c[clients_full], state.ci)
             dxs = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
             dcs = _tmap(lambda cn, co: cn - co, ci_new_full, ci_s_full)
@@ -370,10 +411,19 @@ class Scaffold(RoundEngine):
         c_new = _tmap(lambda c_, d: c_ + (s_eff / cfg.n_clients) * d,
                       state.c, dc)
         ci_all = ctx.scatter_rows(state.ci, clients, ci_new)
+        y_new = state.y
+        down_bits = jnp.asarray(2 * s * dense)
+        dl_extras = {}
+        if dl_on:
+            # §10: one payload delta-codes BOTH broadcast halves (model +
+            # server control variate) against the cohort's (x, c) reference
+            y_new, down_bits, dl_extras = apply_downlink(
+                self.downlink, self.down_comp, ctx, state.y,
+                (x_new, c_new), k_dl, s)
         metrics = {"train_loss": loss,
                    "uplink_bits": (client_up.sum() if may_exclude
                                    else jnp.asarray(2 * s * dense)),
-                   "downlink_bits": jnp.asarray(2 * s * dense),
+                   "downlink_bits": down_bits,
                    "client_steps": plan.steps,
                    "client_uplink_bits": client_up,
                    "client_finish": out.finish,
@@ -381,8 +431,9 @@ class Scaffold(RoundEngine):
                    **aggregation.policy_metrics(out)}
         if wire_on:
             metrics.update(payload_metrics(payload, out.partf))
+        metrics.update(dl_extras)
         return (ScaffoldState(x=x_new, c=c_new, ci=ci_all,
-                              round=state.round + 1), metrics)
+                              round=state.round + 1, y=y_new), metrics)
 
 
 # --------------------------------------------------------------------------- #
@@ -394,6 +445,7 @@ class FedDynState(NamedTuple):
     h: PyTree        # server correction
     grads: PyTree    # per-client dual variables, stacked
     round: jax.Array
+    y: PyTree = ()   # clients' last-received model (downlink != "dense")
 
 
 class FedDyn(RoundEngine):
@@ -401,10 +453,14 @@ class FedDyn(RoundEngine):
                  schedule: ClientSchedule | None = None,
                  policy: aggregation.AggregationPolicy | None = None,
                  wire: str = "account",
+                 downlink: str = "dense",
+                 downlink_compressor: Compressor | None = None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.policy = policy
         self.wire = wire
+        self.downlink = downlink
+        self.down_comp = downlink_compressor
         self.sched = validate_schedule(
             schedule if schedule is not None
             else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
@@ -415,13 +471,19 @@ class FedDyn(RoundEngine):
         zeros = _tmap(jnp.zeros_like, params0)
         g = _tmap(lambda p: jnp.zeros((self.cfg.n_clients,) + p.shape,
                                       p.dtype), params0)
+        y = params0 if self.downlink != "dense" else ()
         return FedDynState(x=params0, h=zeros, grads=g,
-                           round=jnp.zeros((), jnp.int32))
+                           round=jnp.zeros((), jnp.int32), y=y)
 
     def _round_impl(self, state: FedDynState, key: jax.Array,
                     ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched
-        k_sample, k_local = jax.random.split(key)
+        dl_on = self.downlink != "dense"
+        if dl_on:
+            k_sample, k_local, k_dl = jax.random.split(key, 3)
+        else:
+            k_sample, k_local = jax.random.split(key)
+            k_dl = None
         s = cfg.clients_per_round
         s_loc = ctx.local_count(s)
         clients_full = jax.random.choice(k_sample, cfg.n_clients, (s,),
@@ -431,13 +493,14 @@ class FedDyn(RoundEngine):
         clients = ctx.shard(clients_full)
         partf_plan_full = plan.participating.astype(jnp.float32)
         g_s = _tmap(lambda g: g[clients], state.grads)
-        x0 = _broadcast(state.x, s_loc)
+        ref = state.y if dl_on else state.x    # §10: clients hold y
+        x0 = _broadcast(ref, s_loc)
 
         def adjust(g, slot, x_c):
             gp = _tmap(lambda gg: gg[slot], g_s)
             return _tmap(
                 lambda gc, gpc, xc, xs: gc - gpc + cfg.alpha * (xc - xs),
-                g, gp, x_c, state.x)
+                g, gp, x_c, ref)
 
         het = sched.deadline is not None
         x_fin, loss_sum = _local_sgd(self.loss_fn, self.data, cfg, x0,
@@ -463,7 +526,7 @@ class FedDyn(RoundEngine):
             # §8 packed (dense) uplink + replicated full-stack aggregation
             payload, _ = ctx.encode_payload(None, plan_l, x_fin)
             xf_full = ctx.gather_decoded_payload(payload, out.partf)
-            x0_full = _broadcast(state.x, s)
+            x0_full = _broadcast(ref, s)
             deltas = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
             if self.policy.mode == "async_buffered":
                 dsum = _tmap(
@@ -534,10 +597,16 @@ class FedDyn(RoundEngine):
                 state.h, dsum)
             x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
                           ctx.mean_clients(x_fin), h_new)
+        y_new = state.y
+        down_bits = jnp.asarray(s * dense)
+        dl_extras = {}
+        if dl_on:
+            y_new, down_bits, dl_extras = apply_downlink(
+                self.downlink, self.down_comp, ctx, state.y, x_new, k_dl, s)
         metrics = {"train_loss": loss,
                    "uplink_bits": (client_up.sum() if may_exclude
                                    else jnp.asarray(s * dense)),
-                   "downlink_bits": jnp.asarray(s * dense),
+                   "downlink_bits": down_bits,
                    "client_steps": plan.steps,
                    "client_uplink_bits": client_up,
                    "client_finish": out.finish,
@@ -545,5 +614,6 @@ class FedDyn(RoundEngine):
                    **aggregation.policy_metrics(out)}
         if wire_on:
             metrics.update(payload_metrics(payload, out.partf))
+        metrics.update(dl_extras)
         return (FedDynState(x=x_new, h=h_new, grads=grads_all,
-                            round=state.round + 1), metrics)
+                            round=state.round + 1, y=y_new), metrics)

@@ -329,6 +329,24 @@ class ClientAxisCtx:
         manual region and decode shard-local)."""
         return gather_decoded(payload, partf_full, self)
 
+    def encode_broadcast(self, comp, tree: PyTree,
+                         key: Optional[jax.Array] = None):
+        """Server-side downlink encode (DESIGN.md §10): ONE payload for
+        the whole cohort — no client axis.  Under the §6 client mesh the
+        round body runs inside ``shard_map``, so this traces once per
+        shard on the replicated broadcast tree (the payload is replicated,
+        exactly like the server model it encodes);
+        :class:`repro.core.distributed.ModelShardCtx` overrides it with
+        the shard-local encode over the model axis (§9)."""
+        from repro.compress import wire
+        return wire.encode(comp, tree, key)
+
+    def decode_broadcast(self, payload) -> PyTree:
+        """Client-side downlink decode under this ctx's placement — the
+        companion of :meth:`encode_broadcast`."""
+        from repro.compress import wire
+        return wire.decode(payload)
+
 
 #: The default (unsharded) client-axis context.
 NULL_CTX = ClientAxisCtx()
@@ -439,6 +457,44 @@ def payload_metrics(payload, partf_full: jax.Array) -> Dict[str, jax.Array]:
     its zeroed accounted bits."""
     pb = jnp.asarray(payload.nbytes, jnp.float32) * partf_full
     return {"client_payload_bytes": pb, "uplink_payload_bytes": pb.sum()}
+
+
+def apply_downlink(mode: str, comp, ctx: ClientAxisCtx, ref: PyTree,
+                   x_new: PyTree, key: Optional[jax.Array], s: int):
+    """The §10 downlink seam shared by every round implementation.
+
+    The server delta-codes the new broadcast model against ``ref`` — the
+    model the cohort last *received* — so the compression error is error-
+    feedback bounded: whatever ``C`` drops this round rides into the next
+    round's delta.  The delta is encoded **once** (one payload serves the
+    whole cohort) and decoded under ``ctx``'s placement; every client
+    adopts the same ``y_new = ref + decode(C(x_new - ref))``, so server
+    and clients stay in lockstep on what the cohort holds.
+
+    ``mode="account"`` moves the dense transform output and only the
+    ledger claims compression; ``mode="packed"`` moves the real packed
+    broadcast payload and additionally returns the measured
+    ``downlink_payload_bytes`` metric that must reconcile with the
+    accounted bits (``bytes*8 - bits == s * padding_bits``).  Both modes
+    consume the same key chain (the wire encode replicates the
+    transform's rng contract), so their trajectories are bit-identical on
+    one device.
+
+    Returns ``(y_new, downlink_bits, extra_metrics)`` with the bits
+    counted once per receiving client (``s * report.total_bits``),
+    mirroring the dense accounting's ``s * dense_bits``.
+    """
+    delta = jax.tree_util.tree_map(lambda a, b: a - b, x_new, ref)
+    if mode == "packed":
+        payload, rep = ctx.encode_broadcast(comp, delta, key)
+        dec = ctx.decode_broadcast(payload)
+        extras = {"downlink_payload_bytes":
+                  jnp.asarray(float(s * payload.nbytes), jnp.float32)}
+    else:
+        dec, rep = comp.compress(delta, key)
+        extras = {}
+    y_new = jax.tree_util.tree_map(lambda y, d: y + d, ref, dec)
+    return y_new, rep.total_bits * s, extras
 
 
 def gather_decoded(payload, partf_full: jax.Array, ctx: ClientAxisCtx):

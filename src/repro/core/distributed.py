@@ -307,6 +307,86 @@ class ModelShardCtx(ClientAxisCtx):
             body, in_specs=(self._buffer_specs(spec), P(self.axis)),
             out_specs=out_specs)(payload.data, partf_full)
 
+    # -- shard-local downlink path (§10) ---------------------------------- #
+
+    def _bcast_buffer_specs(self, spec):
+        """:meth:`_buffer_specs` without the client dim: one broadcast
+        payload serves the whole cohort, so slot/word buffers of sharded
+        units split over the model axis on axis 0 and everything else is
+        replicated on every device."""
+        shard_p = P(self.model_axis)
+        repl_p = P(None)
+        out = []
+        for mdim in spec.model_dims:
+            b = shard_p if mdim is not None else repl_p
+            if spec.codec == "topk":
+                out.append((b, b))
+            elif spec.codec == "qr":
+                out.append((b, P()))
+            else:                             # dense
+                out.append((b,))
+        return tuple(out)
+
+    def _bcast_leaf_specs(self, spec, mdims):
+        """Per-leaf specs of the (client-free) broadcast tree."""
+        specs = []
+        for shp, mdim in zip(spec.shapes, mdims):
+            ent = [None] * len(shp)
+            if mdim is not None:
+                ent[mdim] = self.model_axis
+            specs.append(P(*ent))
+        return jax.tree_util.tree_unflatten(spec.treedef, specs)
+
+    def encode_broadcast(self, comp, tree, key=None):
+        from repro.compress import wire
+        if self.model_shards <= 1:
+            return super().encode_broadcast(comp, tree, key)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        from repro.sharding import specs as sspecs
+        mdims = tuple(
+            sspecs.model_dim_index(path, leaf.shape, self.model_shards)
+            for path, leaf in flat)
+        structs = jax.tree_util.tree_unflatten(
+            treedef, [jax.ShapeDtypeStruct(l.shape, l.dtype)
+                      for _, l in flat])
+        spec = wire.sharded_wire_spec(comp, structs, mdims,
+                                      self.model_shards)
+        rep_p = jax.tree_util.tree_map(lambda _: P(),
+                                       wire.BitsReport(0., 0., 0.))
+        out_specs = (self._bcast_buffer_specs(spec), rep_p)
+        leaf_specs = self._bcast_leaf_specs(spec, mdims)
+
+        if key is None:
+            def body(tree_loc):
+                return wire.encode_shard_local(
+                    comp, tree_loc, spec, self.model_axis)
+            data, report = self._manual(
+                body, in_specs=(leaf_specs,), out_specs=out_specs)(tree)
+        else:
+            def body(tree_loc, k):
+                return wire.encode_shard_local(
+                    comp, tree_loc, spec, self.model_axis, k)
+            data, report = self._manual(
+                body, in_specs=(leaf_specs, P()),
+                out_specs=out_specs)(tree, key)
+        return wire.Payload(data, spec), report
+
+    def decode_broadcast(self, payload):
+        from repro.compress import wire
+        spec = payload.spec
+        if spec.model_shards <= 1:
+            return super().decode_broadcast(payload)
+        out_specs = self._bcast_leaf_specs(spec, spec.model_dims)
+
+        def body(data):
+            # each model shard unpacks its own slice of the broadcast;
+            # out_specs reassemble the model-sharded tree — no gather
+            return wire.decode_shard_local(data, spec)
+
+        return self._manual(
+            body, in_specs=(self._bcast_buffer_specs(spec),),
+            out_specs=out_specs)(payload.data)
+
 
 # --------------------------------------------------------------------------- #
 

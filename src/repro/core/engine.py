@@ -42,6 +42,37 @@ PyTree = Any
 
 WIRE_MODES = ("account", "packed")
 
+DOWNLINK_MODES = ("dense", "account", "packed")
+
+
+def validate_downlink(downlink: Optional[str], compressor) -> str:
+    """Resolve + check a downlink mode (DESIGN.md §10) at construction time.
+
+    ``"dense"`` (default) keeps today's semantics: the broadcast is the
+    raw fp32 model and ``downlink_bits`` accounts it at full width.
+    ``"account"`` and ``"packed"`` both delta-code the broadcast against
+    the clients' last-received reference through a *downlink* compressor:
+    account mode applies the transform (dense buffers move, the
+    ``BitsReport`` ledger claims the compression), packed mode moves the
+    real packed broadcast payload (``repro.compress.wire``) and must
+    reconcile measured bytes against accounted bits in-graph.  Packed
+    needs a wire-codec-supported compressor; both need *a* compressor
+    (pass ``Identity()`` for an explicit dense-codec downlink).
+    """
+    downlink = "dense" if downlink is None else downlink
+    if downlink not in DOWNLINK_MODES:
+        raise ValueError(
+            f"downlink must be one of {DOWNLINK_MODES}, got {downlink!r}")
+    if downlink != "dense":
+        if compressor is None:
+            raise ValueError(
+                f'downlink="{downlink}" needs a downlink compressor '
+                "(downlink_compressor=...; Identity() for the dense codec)")
+        if downlink == "packed":
+            from repro.compress import wire as wire_mod
+            wire_mod.check_supported(compressor)
+    return downlink
+
 
 def validate_wire(wire: Optional[str], compressor, schedule) -> str:
     """Resolve + check a wire mode (DESIGN.md §8) at construction time.
@@ -78,6 +109,10 @@ class RoundEngine:
         self.wire = validate_wire(getattr(self, "wire", None),
                                   getattr(self, "comp", None),
                                   getattr(self, "sched", None))
+        self.down_comp = getattr(self, "down_comp", None)
+        self.downlink = validate_downlink(getattr(self, "downlink", None),
+                                          self.down_comp)
+        self._validate_downlink_combo()
         self._mesh = None
         self._mesh_axis = "clients"
         self._fused_cache: Dict[int, Any] = {}
@@ -119,6 +154,35 @@ class RoundEngine:
         if wire == self.wire:
             return self
         self.wire = wire
+        self._rebind_impl()
+        return self
+
+    # ------------------------------------------------------------------ #
+
+    def _validate_downlink_combo(self) -> None:
+        """Algorithm-specific downlink compatibility hook (no-op here);
+        overridden where a mode combination is ill-defined (e.g. FedComLoc
+        variant="global" already compresses the broadcast its own way)."""
+
+    def set_downlink(self, downlink: str,
+                     compressor=None) -> "RoundEngine":
+        """Bind a downlink mode (DESIGN.md §10) —
+        ``"dense"`` | ``"account"`` | ``"packed"``.
+
+        ``compressor`` replaces the bound downlink compressor when given
+        (required if none was bound at construction and the mode needs
+        one).  The downlink reference state ``y`` lives in the algorithm
+        state, so this must be called **before** ``init`` — states built
+        under a different mode have a different structure.  Returns
+        ``self``.
+        """
+        comp = compressor if compressor is not None else self.down_comp
+        downlink = validate_downlink(downlink, comp)
+        if downlink == self.downlink and comp is self.down_comp:
+            return self
+        self.downlink = downlink
+        self.down_comp = comp
+        self._validate_downlink_combo()
         self._rebind_impl()
         return self
 

@@ -43,8 +43,8 @@ import jax.numpy as jnp
 from repro.compress import Compressor, Identity, dense_bits
 from repro.core import aggregation, comm
 from repro.core.clients import (
-    NULL_CTX, ClientAxisCtx, ClientSchedule, keep_where, masked_mean,
-    mean_over_active, payload_metrics, per_client, tree_where,
+    NULL_CTX, ClientAxisCtx, ClientSchedule, apply_downlink, keep_where,
+    masked_mean, mean_over_active, payload_metrics, per_client, tree_where,
     validate_schedule, vmap_compress)
 from repro.core.engine import RoundEngine
 from repro.core.fed_data import FederatedData
@@ -61,6 +61,7 @@ class FedComLocState(NamedTuple):
     round: jax.Array   # communication rounds completed
     e: PyTree = ()     # per-client error-feedback memory (beyond-paper)
     mom: PyTree = ()   # server momentum buffer (beyond-paper)
+    y: PyTree = ()     # clients' last-received model (downlink != "dense")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,12 +117,16 @@ class FedComLoc(RoundEngine):
                  schedule: ClientSchedule | None = None,
                  policy: aggregation.AggregationPolicy | None = None,
                  wire: str = "account",
+                 downlink: str = "dense",
+                 downlink_compressor: Compressor | None = None,
                  meter_mode: str = "host"):
         self.loss_fn = loss_fn
         self.data = data
         self.cfg = config
         self.policy = policy
         self.wire = wire
+        self.downlink = downlink
+        self.down_comp = downlink_compressor
         self.comp = compressor if compressor is not None else Identity()
         if config.variant == "none" and not isinstance(self.comp, Identity):
             raise ValueError('variant="none" requires the Identity compressor')
@@ -134,6 +139,20 @@ class FedComLoc(RoundEngine):
 
     # ------------------------------------------------------------------ #
 
+    def _validate_downlink_combo(self) -> None:
+        if self.downlink == "dense":
+            return
+        if self.cfg.variant == "global":
+            raise ValueError(
+                'variant="global" already compresses the broadcast its own '
+                "way (line 11); combine the downlink seam with the other "
+                "variants, or keep variant='global' with downlink='dense'")
+        if self.cfg.server_momentum > 0:
+            raise ValueError(
+                "server_momentum extrapolates the broadcast point, which "
+                "the delta-coded downlink reference cannot track stably; "
+                "use downlink='dense' with momentum")
+
     def init(self, params0: PyTree) -> FedComLocState:
         stacked_zeros = lambda: jax.tree_util.tree_map(
             lambda p: jnp.zeros((self.cfg.n_clients,) + p.shape, p.dtype),
@@ -141,8 +160,10 @@ class FedComLoc(RoundEngine):
         e = stacked_zeros() if self.cfg.error_feedback else ()
         mom = (jax.tree_util.tree_map(jnp.zeros_like, params0)
                if self.cfg.server_momentum > 0 else ())
+        y = params0 if self.downlink != "dense" else ()
         return FedComLocState(x=params0, h=stacked_zeros(),
-                              round=jnp.zeros((), jnp.int32), e=e, mom=mom)
+                              round=jnp.zeros((), jnp.int32), e=e, mom=mom,
+                              y=y)
 
     # ------------------------------------------------------------------ #
 
@@ -158,7 +179,16 @@ class FedComLoc(RoundEngine):
     def _round_impl(self, state: FedComLocState, key: jax.Array,
                     ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched
-        k_sample, k_steps, k_local, k_up, k_down = jax.random.split(key, 5)
+        dl_on = self.downlink != "dense"
+        if dl_on:
+            # one extra key for the downlink codec; the dense-mode split
+            # stays exactly 5-way so existing trajectories never move
+            (k_sample, k_steps, k_local, k_up, k_down,
+             k_dl) = jax.random.split(key, 6)
+        else:
+            k_sample, k_steps, k_local, k_up, k_down = jax.random.split(
+                key, 5)
+            k_dl = None
         s = cfg.clients_per_round
         s_loc = ctx.local_count(s)
         clients_full = jax.random.choice(
@@ -176,8 +206,13 @@ class FedComLoc(RoundEngine):
         ov_vals = [plan_l.comp_overrides[n] for n in ov_names]
 
         h_s = jax.tree_util.tree_map(lambda h: h[clients], state.h)
+        # §10: with a delta-coded downlink the cohort restarts from the
+        # model the clients actually HOLD (state.y — last-received), not
+        # the server's exact iterate; every client-side anchor below
+        # (local phase start, EF innovation, FedBuff delta) uses ref.
+        ref = state.y if dl_on else state.x
         x0 = jax.tree_util.tree_map(
-            lambda p: jnp.broadcast_to(p, (s_loc,) + p.shape), state.x)
+            lambda p: jnp.broadcast_to(p, (s_loc,) + p.shape), ref)
 
         def local_step(carry, inp):
             x_i, loss_acc = carry
@@ -236,7 +271,7 @@ class FedComLoc(RoundEngine):
                 e_s = jax.tree_util.tree_map(lambda e: e[clients], state.e)
                 innov = jax.tree_util.tree_map(
                     lambda xh, x0_, e: xh - x0_[None] + e,
-                    x_hat, state.x, e_s)
+                    x_hat, ref, e_s)
                 if wire_on:
                     # decode happens once, server-side, after the gather —
                     # the client rows the h/e updates need are sliced back
@@ -247,7 +282,7 @@ class FedComLoc(RoundEngine):
                     sent, up_rep = vmap_compress(self.comp, plan_l, innov,
                                                  up_keys)
                     x_hat = jax.tree_util.tree_map(
-                        lambda x0_, snt: x0_[None] + snt, state.x, sent)
+                        lambda x0_, snt: x0_[None] + snt, ref, sent)
             elif wire_on:
                 # §8 packed uplink: the client boundary emits the wire
                 # payload; the round carries on with its (gathered) decode.
@@ -286,7 +321,7 @@ class FedComLoc(RoundEngine):
             if cfg.variant == "com" and cfg.error_feedback:
                 sent = ctx.shard_tree(dec_full)
                 srv_hat = jax.tree_util.tree_map(
-                    lambda x0_, sf: x0_[None] + sf, state.x, dec_full)
+                    lambda x0_, sf: x0_[None] + sf, ref, dec_full)
                 x_hat = ctx.shard_tree(srv_hat)
             else:
                 # non-com variants ship the raw iterate: decode is the
@@ -308,7 +343,7 @@ class FedComLoc(RoundEngine):
             # unsharded formula (bit-identical at any device count)
             if self.policy.mode == "async_buffered":
                 delta = jax.tree_util.tree_map(
-                    lambda xh, x0_: xh - x0_[None], srv_hat, state.x)
+                    lambda xh, x0_: xh - x0_[None], srv_hat, ref)
                 x_bar = jax.tree_util.tree_map(
                     lambda x0_, u: x0_ + u, state.x,
                     aggregation.async_weighted_sum(out, delta, NULL_CTX))
@@ -324,7 +359,7 @@ class FedComLoc(RoundEngine):
             # FedBuff server application in delta form: each buffer flush
             # applies its staleness-discounted mean of anchor deltas
             delta = jax.tree_util.tree_map(
-                lambda xh, x0_: xh - x0_[None], x_hat, state.x)
+                lambda xh, x0_: xh - x0_[None], x_hat, ref)
             x_bar = jax.tree_util.tree_map(
                 lambda x0_, u: x0_ + u, state.x,
                 aggregation.async_weighted_sum(out, delta, ctx))
@@ -341,12 +376,24 @@ class FedComLoc(RoundEngine):
             x_bar, down_rep = self.comp.compress(x_bar, k_down)
             down_bits = down_rep.total_bits * s
 
+        # §10 downlink seam: delta-code the new broadcast against the
+        # cohort's reference, once; clients decode under the mesh (this
+        # body IS the shard_map/GSPMD region) and adopt y_new.
+        y_new = state.y
+        dl_extras = {}
+        if dl_on:
+            y_new, down_bits, dl_extras = apply_downlink(
+                self.downlink, self.down_comp, ctx, state.y, x_bar, k_dl, s)
+        bcast = y_new if dl_on else x_bar
+
         # line 16: h_i += (p/gamma) (x_{t+1} - x^_{i,t+1}) for i in S —
-        # uses the pre-momentum mean: the extrapolation below must not leak
-        # into the control variates (it destabilises them; see tests).
+        # x_{t+1} is the value clients ADOPT (the decoded y under a
+        # compressed downlink) and the pre-momentum mean otherwise: the
+        # extrapolation below must not leak into the control variates (it
+        # destabilises them; see tests).
         h_s_new = jax.tree_util.tree_map(
             lambda h, xh, xb_: h + (cfg.p / cfg.gamma) * (xb_[None] - xh),
-            h_s, x_hat, x_bar)
+            h_s, x_hat, bcast)
         if may_exclude:   # an excluded client keeps its control variate
             h_s_new = keep_where(part, h_s_new, h_s)
         h_new = ctx.scatter_rows(state.h, clients, h_s_new)
@@ -378,5 +425,6 @@ class FedComLoc(RoundEngine):
             # in-graph by participation — a dropped client transmits a
             # zero-length payload, not a buffer of zeros counted as sent
             metrics.update(payload_metrics(payload, out.partf))
+        metrics.update(dl_extras)
         return (FedComLocState(x=x_bar, h=h_new, round=state.round + 1,
-                               e=e_new, mom=mom_new), metrics)
+                               e=e_new, mom=mom_new, y=y_new), metrics)

@@ -1,0 +1,303 @@
+"""LoCoDL (PAPERS.md, arXiv 2403.04348) — local training with bidirectional
+compression, the fifth algorithm on the shared ``_round_impl`` contract.
+
+LoCoDL keeps Scaffnew's local phases and per-client control variates but
+compresses BOTH links: clients uplink ``u_i = C_up(x^_i - y^)`` (their local
+result against the shared reference model) and the server downlinks
+``m = C_dn(v)`` where ``v`` aggregates the cohort's messages — every
+transmitted quantity is a *difference* the control-variate structure drives
+to zero, which is what yields the doubly accelerated communication
+complexity.  Round structure (communication probability ``p``, stepsize
+``gamma``, communication stepsize ``lam``):
+
+* local phase — Geometric(p) (or fixed round(1/p)) Scaffnew steps on each
+  sampled client's OWN iterate: ``x_i <- x_i - gamma (grad f_i(x_i) - h_i)``;
+* reference step — the server model carries no loss term (g = 0), so its
+  phase collapses to ``y^ = y + gamma hy``;
+* uplink — ``u_i = C_up(x^_i - y^)``, aggregated to ``v`` under the bound
+  §7 policy (sync mean / semi-sync masked mean / async staleness-weighted);
+* downlink — ``m`` from ``v`` through the §10 downlink seam: ``"dense"``
+  broadcasts ``v`` raw, ``"account"``/``"packed"`` run the downlink
+  compressor (packed moves the real broadcast payload and reconciles
+  measured bytes against accounted bits in-graph);
+* updates — ``x_i <- x^_i - lam (u_i - m)``, ``y <- y^ + lam m``,
+  ``h_i += (p/gamma)(x_i' - x^_i)``, ``hy += (p/gamma) lam m``.
+
+With ``C_up = C_dn = Identity`` and ``lam = 1`` under the sync policy the
+update collapses to ``x_i = y = mean_i(x^_i)`` — exactly Scaffnew's
+communication round — which is the consistency anchor the golden traces
+pin.  Two cohort adaptations vs the full-participation paper setting
+(DESIGN.md §10): sampled-only rounds (non-sampled clients keep ``x_i`` and
+``h_i``, exactly like FedComLoc's control variates), and policy-excluded
+stragglers revert to their pre-round iterate (they neither transmitted
+``u_i`` nor received ``m``, so applying either side's update would desync
+them from the reference).
+
+State layout: per-client iterates ``xs`` and control variates ``h`` are
+stacked over ``n_clients`` (gathered/scattered for the sampled cohort);
+the shared reference ``y`` is the evaluable server model and lives in the
+``x`` slot every driver/eval hook reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress import Compressor, Identity, dense_bits
+from repro.core import aggregation, comm
+from repro.core.clients import (
+    NULL_CTX, ClientAxisCtx, ClientSchedule, apply_downlink, keep_where,
+    masked_mean, mean_over_active, payload_metrics, per_client, tree_where,
+    validate_schedule, vmap_compress)
+from repro.core.engine import RoundEngine
+from repro.core.fed_data import FederatedData
+
+PyTree = Any
+LossFn = Callable[[PyTree, jax.Array, jax.Array], jax.Array]
+
+
+class LoCoDLState(NamedTuple):
+    x: PyTree          # shared reference model y (the evaluable one)
+    xs: PyTree         # per-client iterates, stacked (n_clients, ...)
+    h: PyTree          # per-client control variates, stacked
+    hy: PyTree         # reference-model control variate
+    round: jax.Array   # communication rounds completed
+
+
+@dataclasses.dataclass(frozen=True)
+class LoCoDLConfig:
+    gamma: float = 0.1                 # local stepsize
+    p: float = 0.1                     # communication probability
+    lam: float = 0.5                   # communication stepsize (lambda)
+    n_clients: int = 100
+    clients_per_round: int = 10
+    batch_size: int = 32
+    local_steps: str = "fixed"         # fixed | geometric
+    max_local_steps: Optional[int] = None  # cap (geometric); default 4/p
+
+    def __post_init__(self):
+        if not (0 < self.p <= 1):
+            raise ValueError("p must be in (0, 1]")
+        if not (0 < self.lam <= 1):
+            raise ValueError("lam must be in (0, 1]")
+        if self.n_clients <= 0:
+            raise ValueError("n_clients must be positive")
+        if not (0 < self.clients_per_round <= self.n_clients):
+            raise ValueError(
+                f"clients_per_round must be in [1, n_clients]: got "
+                f"{self.clients_per_round} with n_clients={self.n_clients}")
+        if self.local_steps not in ("fixed", "geometric"):
+            raise ValueError('local_steps must be "fixed" or "geometric"')
+
+    @property
+    def steps_cap(self) -> int:
+        if self.max_local_steps is not None:
+            return self.max_local_steps
+        if self.local_steps == "fixed":
+            return max(1, round(1.0 / self.p))
+        return max(1, round(4.0 / self.p))
+
+
+class LoCoDL(RoundEngine):
+    """Bidirectionally compressed Scaffnew on the shared engine contract."""
+
+    def __init__(self, loss_fn: LossFn, data: FederatedData,
+                 config: LoCoDLConfig,
+                 compressor: Compressor | None = None,
+                 schedule: ClientSchedule | None = None,
+                 policy: aggregation.AggregationPolicy | None = None,
+                 wire: str = "account",
+                 downlink: str = "dense",
+                 downlink_compressor: Compressor | None = None,
+                 meter_mode: str = "host"):
+        self.loss_fn = loss_fn
+        self.data = data
+        self.cfg = config
+        self.policy = policy
+        self.wire = wire
+        self.downlink = downlink
+        self.down_comp = downlink_compressor
+        self.comp = compressor if compressor is not None else Identity()
+        self.sched = validate_schedule(
+            schedule if schedule is not None
+            else ClientSchedule.homogeneous(config.n_clients),
+            config.n_clients, self.comp)
+        self.meter = comm.CommMeter(mode=meter_mode)
+        self._setup_engine()
+
+    # ------------------------------------------------------------------ #
+
+    def init(self, params0: PyTree) -> LoCoDLState:
+        n = self.cfg.n_clients
+        stacked = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p, (n,) + p.shape), params0)
+        stacked_zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((n,) + p.shape, p.dtype), params0)
+        return LoCoDLState(
+            x=params0, xs=stacked, h=stacked_zeros,
+            hy=jax.tree_util.tree_map(jnp.zeros_like, params0),
+            round=jnp.zeros((), jnp.int32))
+
+    # ------------------------------------------------------------------ #
+
+    def _num_local_steps(self, key: jax.Array) -> jax.Array:
+        cap = self.cfg.steps_cap
+        if self.cfg.local_steps == "fixed":
+            return jnp.asarray(cap, jnp.int32)
+        u = jax.random.uniform(key)
+        g = jnp.floor(jnp.log1p(-u)
+                      / jnp.log1p(-self.cfg.p)).astype(jnp.int32) + 1
+        return jnp.clip(g, 1, cap)
+
+    def _round_impl(self, state: LoCoDLState, key: jax.Array,
+                    ctx: ClientAxisCtx = NULL_CTX):
+        cfg, sched = self.cfg, self.sched
+        # a single 5-way split for every mode: LoCoDL always carries a
+        # downlink leg, so dense/account/packed share one key chain (the
+        # dense mode simply never consumes k_dl)
+        k_sample, k_steps, k_local, k_up, k_dl = jax.random.split(key, 5)
+        s = cfg.clients_per_round
+        s_loc = ctx.local_count(s)
+        clients_full = jax.random.choice(
+            k_sample, cfg.n_clients, (s,), replace=False)
+        num_steps = self._num_local_steps(k_steps)
+        plan = sched.plan(clients_full, num_steps)
+        plan_l = ctx.shard_tree(plan)
+        clients = ctx.shard(clients_full)
+        partf_plan_full = plan.participating.astype(jnp.float32)
+
+        h_s = jax.tree_util.tree_map(lambda h: h[clients], state.h)
+        # clients resume their OWN iterates — there is no model broadcast;
+        # the only downlink traffic is the compressed difference m
+        x0 = jax.tree_util.tree_map(lambda t: t[clients], state.xs)
+
+        def local_step(carry, inp):
+            x_i, loss_acc = carry
+            step_idx, k_step = inp
+            active = step_idx < plan_l.steps      # (s_loc,) per-client mask
+
+            def one_client(x_c, h_c, client, kc):
+                xb, yb = self.data.sample_batch(kc, client, cfg.batch_size)
+                loss, g = jax.value_and_grad(self.loss_fn)(x_c, xb, yb)
+                x_new = jax.tree_util.tree_map(
+                    lambda xc, gc, hc: xc - cfg.gamma * (gc - hc),
+                    x_c, g, h_c)
+                return x_new, loss
+
+            # full (s,) key chain then slice: device-count invariant
+            keys = ctx.shard(jax.random.split(k_step, s))
+            x_new, losses = jax.vmap(one_client)(x_i, h_s, clients, keys)
+            x_i = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(per_client(active, new), new, old),
+                x_new, x_i)
+            loss_acc = loss_acc + mean_over_active(losses, active, ctx)
+            return (x_i, loss_acc), None
+
+        cap = cfg.steps_cap
+        step_keys = jax.random.split(k_local, cap)
+        (x_hat, loss_sum), _ = jax.lax.scan(
+            local_step, (x0, jnp.zeros(())),
+            (jnp.arange(cap), step_keys))
+
+        # reference phase: the server objective is g = 0, so its local
+        # phase is the closed-form drift along its control variate
+        y_hat = jax.tree_util.tree_map(
+            lambda y, hy: y + cfg.gamma * hy, state.x, state.hy)
+
+        # --- uplink: u_i = C_up(x^_i - y^) ------------------------------- #
+        diff = jax.tree_util.tree_map(
+            lambda xh, yh: xh - yh[None], x_hat, y_hat)
+        wire_on = self.wire == "packed"
+        up_keys = ctx.shard(jax.random.split(k_up, s))
+        payload = u = u_full = None
+        if wire_on:
+            payload, up_rep = ctx.encode_payload(
+                self.comp, plan_l, diff, up_keys)
+        else:
+            u, up_rep = vmap_compress(self.comp, plan_l, diff, up_keys)
+
+        pol = aggregation.resolve_policy(
+            self.policy, sched, plan,
+            ctx.all_clients(up_rep.total_bits) * partf_plan_full, ctx)
+        out, part, partf, may_exclude = (pol.out, pol.part, pol.partf,
+                                         pol.may_exclude)
+        client_up = pol.client_up             # excluded clients send nothing
+
+        if wire_on:
+            # §8: masked packed-payload gather, ONE server-side decode;
+            # the client rows the x/h updates need are sliced back out
+            u_full = ctx.gather_decoded_payload(payload, out.partf)
+            u = ctx.shard_tree(u_full)
+
+        # --- aggregate v under the §7 policy ----------------------------- #
+        if self.policy.mode == "async_buffered":
+            v = (aggregation.async_weighted_sum(out, u_full, NULL_CTX)
+                 if wire_on
+                 else aggregation.async_weighted_sum(out, u, ctx))
+        elif may_exclude:
+            # all-excluded rounds broadcast m from v = 0: y drifts only by
+            # its control variate, exactly as if the coin never landed
+            v = tree_where(
+                out.n_selected > 0,
+                (masked_mean(u_full, out.partf, NULL_CTX,
+                             weight_sum=out.n_selected) if wire_on
+                 else masked_mean(u, partf, ctx,
+                                  weight_sum=out.n_selected)),
+                jax.tree_util.tree_map(jnp.zeros_like, y_hat))
+        else:
+            v = (jax.tree_util.tree_map(lambda t: t.mean(axis=0), u_full)
+                 if wire_on else ctx.mean_clients(u))
+
+        # --- downlink: m from v through the §10 seam --------------------- #
+        # LoCoDL's broadcast quantity is ALREADY the difference v, so the
+        # seam's delta-coding runs against a zero reference: m = dec(C(v)).
+        dl_on = self.downlink != "dense"
+        dl_extras = {}
+        if dl_on:
+            m, down_bits, dl_extras = apply_downlink(
+                self.downlink, self.down_comp, ctx,
+                jax.tree_util.tree_map(jnp.zeros_like, v), v, k_dl, s)
+        else:
+            m = v
+            down_bits = jnp.asarray(s * dense_bits(state.x))
+
+        # --- updates ------------------------------------------------------ #
+        xs_rows = jax.tree_util.tree_map(
+            lambda xh, ui, mm: xh - cfg.lam * (ui - mm[None]),
+            x_hat, u, m)
+        h_rows = jax.tree_util.tree_map(
+            lambda h, xn, xh: h + (cfg.p / cfg.gamma) * (xn - xh),
+            h_s, xs_rows, x_hat)
+        if may_exclude:
+            # an excluded straggler neither transmitted u_i nor received m:
+            # revert to the pre-round iterate, keep the control variate
+            xs_rows = keep_where(part, xs_rows, x0)
+            h_rows = keep_where(part, h_rows, h_s)
+        xs_new = ctx.scatter_rows(state.xs, clients, xs_rows)
+        h_new = ctx.scatter_rows(state.h, clients, h_rows)
+        y_new = jax.tree_util.tree_map(
+            lambda yh, mm: yh + cfg.lam * mm, y_hat, m)
+        hy_new = jax.tree_util.tree_map(
+            lambda hy, mm: hy + (cfg.p / cfg.gamma) * cfg.lam * mm,
+            state.hy, m)
+
+        metrics = {
+            "train_loss": loss_sum / jnp.maximum(plan.steps.max(), 1),
+            "num_local_steps": num_steps,
+            "uplink_bits": client_up.sum(),
+            "downlink_bits": down_bits,
+            "client_steps": plan.steps,
+            "client_uplink_bits": client_up,
+            "client_finish": out.finish,
+            "sim_time": out.sim_time,
+            **aggregation.policy_metrics(out),
+        }
+        if wire_on:
+            metrics.update(payload_metrics(payload, out.partf))
+        metrics.update(dl_extras)
+        return (LoCoDLState(x=y_new, xs=xs_new, h=h_new, hy=hy_new,
+                            round=state.round + 1), metrics)

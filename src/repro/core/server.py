@@ -80,6 +80,8 @@ def run_federated(
     mesh: Optional[Any] = None,
     policy: Optional[Any] = None,
     wire: Optional[str] = None,
+    downlink: Optional[str] = None,
+    downlink_compressor: Optional[Any] = None,
 ) -> History:
     """Drive ``algorithm`` (anything with .init/.round/.meter) for R rounds.
 
@@ -95,7 +97,11 @@ def run_federated(
     the client-sharded ``shard_map`` path (DESIGN.md §6) before driving.
     ``policy`` (a ``repro.core.aggregation.AggregationPolicy``) rebinds the
     aggregation policy (DESIGN.md §7) the same way; ``wire``
-    (``"account"`` | ``"packed"``) rebinds the wire mode (DESIGN.md §8).
+    (``"account"`` | ``"packed"``) rebinds the wire mode (DESIGN.md §8);
+    ``downlink`` (``"dense"`` | ``"account"`` | ``"packed"``, with
+    ``downlink_compressor``) rebinds the broadcast codec path (DESIGN.md
+    §10) — necessarily before ``init``, since the downlink reference
+    ``y`` lives in the algorithm state.
     """
     if mesh is not None:
         algorithm.use_mesh(mesh)
@@ -103,6 +109,8 @@ def run_federated(
         algorithm.set_policy(policy)
     if wire is not None:
         algorithm.set_wire(wire)
+    if downlink is not None:
+        algorithm.set_downlink(downlink, downlink_compressor)
     state = algorithm.init(params0)
     hist = History()
     t0 = time.time()

@@ -2,7 +2,8 @@
 
 ``tests/golden/<algorithm>_<policy>.json`` holds a tiny 3-round metrics
 trajectory (fused ``run_rounds``, fixed seeds, lognormal client speeds)
-for all four algorithms x the three aggregation policies (DESIGN.md §7).
+for all five algorithms x the three aggregation policies (DESIGN.md §7);
+the LoCoDL traces additionally pin its account-mode downlink bits (§10).
 Future refactors cannot silently shift the bit accounting, the RNG key
 chain, the straggler schedule or the policy semantics: any such change
 trips an exact comparison here and must be accompanied by a deliberate
@@ -31,6 +32,7 @@ from repro.core.aggregation import AggregationPolicy
 from repro.core.baselines import FedAvg, FedConfig, FedDyn, Scaffold
 from repro.core.clients import ClientProfile, ClientSchedule
 from repro.core.fedcomloc import FedComLoc, FedComLocConfig
+from repro.core.locodl import LoCoDL, LoCoDLConfig
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -80,6 +82,13 @@ def build(algorithm, policy_name):
                               variant="com")
         return FedComLoc(sq_loss, data, cfg, TopK(density=0.5),
                          schedule=schedule(), policy=policy)
+    if algorithm == "locodl":
+        cfg = LoCoDLConfig(gamma=0.05, p=0.25, lam=0.5, n_clients=N,
+                           clients_per_round=S, batch_size=4)
+        return LoCoDL(sq_loss, data, cfg, TopK(density=0.5),
+                      schedule=schedule(), policy=policy,
+                      downlink="account",
+                      downlink_compressor=TopK(density=0.5))
     fed = FedConfig(gamma=0.05, local_steps=4, n_clients=N,
                     clients_per_round=S, batch_size=4)
     cls = {"fedavg": FedAvg, "scaffold": Scaffold, "feddyn": FedDyn}[algorithm]
@@ -95,7 +104,7 @@ def trace(algorithm, policy_name) -> dict:
             for k, v in sorted(metrics.items())}
 
 
-ALGORITHMS = ("fedcomloc", "fedavg", "scaffold", "feddyn")
+ALGORITHMS = ("fedcomloc", "locodl", "fedavg", "scaffold", "feddyn")
 CASES = [(a, p) for a in ALGORITHMS for p in POLICIES]
 
 
