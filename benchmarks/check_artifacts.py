@@ -13,7 +13,10 @@ bytes and bits are, and only where they are scale-invariant:
   when the arch/scale markers match (a ``--fast`` run uses a smaller
   model, which is a skip, not a pass);
 * ``downlink``       — per-ROUND uplink/downlink/total Mbits (fast and
-  full runs differ in rounds, so totals are normalized before comparing).
+  full runs differ in rounds, so totals are normalized before comparing);
+* ``population_scale`` — per-round host-spool MB and uplink Mbits, both
+  cohort-sized and hence population-invariant (a 100k ``--fast`` smoke
+  gates against the committed million-client artifact).
 
 Fresh side: ``<name>.partial.json`` when present (what a CI ``--fast``
 smoke just wrote), else ``<name>.json``.  Baseline side: the committed
@@ -46,6 +49,10 @@ SPECS = {
                   ()),
     "downlink": (("rows",), (), ("total_mbits", "uplink_mbits",
                                  "downlink_mbits")),
+    # cohort-sized fields are population-invariant: a --fast 100k smoke
+    # gates against the committed 1M artifact (markers are cohort/model)
+    "population_scale": (("rows",), ("host_spool_mb_per_round",),
+                         ("uplink_mbits",)),
 }
 # top-level markers that must match for an artifact's rows to be
 # comparable at all (scale/arch guards)

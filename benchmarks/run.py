@@ -39,6 +39,7 @@ MODULES = [
     "wire_formats",
     "downlink",
     "roofline",
+    "population_scale",
 ]
 
 ART = Path(__file__).resolve().parent / "artifacts"

@@ -20,6 +20,14 @@ import numpy as np
 PyTree = Any
 
 
+class CheckpointStructureError(ValueError):
+    """``load(like=)`` template does not match the stored leaf count."""
+
+
+class CheckpointDtypeError(ValueError):
+    """Extension-dtype leaves saved without manifest dtype names."""
+
+
 def _flatten(tree: PyTree) -> Tuple[dict, list]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
@@ -64,17 +72,42 @@ def save(path: str | Path, tree: PyTree, meta: Optional[dict] = None) -> None:
 def load(path: str | Path, like: Optional[PyTree] = None
          ) -> Tuple[PyTree, dict]:
     """Load a checkpoint.  ``like`` supplies the treedef (required unless the
-    tree is reconstructed by caller from the flat leaves)."""
-    with np.load(Path(path), allow_pickle=False) as z:
+    tree is reconstructed by caller from the flat leaves).
+
+    Raises :class:`CheckpointStructureError` when ``like``'s structure does
+    not match the stored leaf count, and :class:`CheckpointDtypeError` when
+    an extension-dtype leaf (bfloat16, float8_*) was saved by a writer too
+    old to record real dtype names — both previously surfaced as opaque
+    downstream failures (``tree_unflatten`` internals / raw void-byte
+    leaves flowing into jnp ops).
+    """
+    path = Path(path)
+    with np.load(path, allow_pickle=False) as z:
         manifest = json.loads(str(z["__manifest__"]))
         dtypes = manifest.get("dtypes")          # absent in old checkpoints
         leaves = []
         for i in range(manifest["n_leaves"]):
             raw = z[f"leaf_{i}"]
-            if dtypes is not None and raw.dtype.kind == "V":
+            if raw.dtype.kind == "V":
+                # npz stored this leaf as opaque void bytes (an extension
+                # dtype); without the manifest's dtype names there is no
+                # way to recover what it was — fail loudly, not with a
+                # raw |V8 array that breaks far from here.
+                if dtypes is None:
+                    raise CheckpointDtypeError(
+                        f"checkpoint {path} leaf_{i} has extension-dtype "
+                        f"data ({raw.dtype}) but its manifest predates the "
+                        "'dtypes' field; re-save it with a current writer "
+                        "(old writers lost bfloat16/float8 dtype names)")
                 raw = raw.view(_np_dtype(dtypes[i]))
             leaves.append(jnp.asarray(raw))
     if like is not None:
         treedef = jax.tree_util.tree_structure(like)
+        if treedef.num_leaves != len(leaves):
+            raise CheckpointStructureError(
+                f"checkpoint {path} stores {len(leaves)} leaves but "
+                f"like= has {treedef.num_leaves}; the template tree does "
+                "not match what was saved (wrong algorithm/config — e.g. "
+                "a state built under a different downlink/store mode)")
         return jax.tree_util.tree_unflatten(treedef, leaves), manifest["meta"]
     return leaves, manifest["meta"]

@@ -115,12 +115,94 @@ class AggregationPolicy:
 SYNC = AggregationPolicy()
 
 
-def validate_policy(policy: Optional[AggregationPolicy],
-                    clients_per_round: int) -> AggregationPolicy:
+@dataclasses.dataclass(frozen=True)
+class HierarchicalPolicy:
+    """Two-tier edge→server aggregation (DESIGN.md §11).
+
+    Cross-device deployments aggregate through regional edge servers: the
+    ``s`` sampled clients split into ``n_edges`` contiguous groups of
+    ``s/n_edges``, each edge runs its own §7 ``edge`` policy over its
+    group on the client finish clock, and the central server runs the
+    ``server`` policy over *edge arrival times* (each edge's tier-1
+    ``sim_time`` plus ``edge_latency``, the edge→server hop).  Both tiers
+    reuse the flat sync / semi_sync / async_buffered machinery unchanged
+    — the composition happens in the outcome vectors:
+
+    * ``participating`` — client ∩ its edge aggregated it ∩ the server
+      aggregated its edge;
+    * ``weight`` — normalised so ``masked_mean(x, weight,
+      weight_sum=n_selected)`` is the weighted mean of *edge means* (the
+      quantity the server actually receives), not the flat client mean;
+    * ``coef``/``discount`` — per-tier factors multiply, so the async
+      delta-combine ``Σ coef_i·Δ_i`` telescopes to "server combines edge
+      combines";
+    * ``staleness`` — tiers add;
+    * ``sim_time`` — the server tier's clock.
+
+    With ``sync``/``sync`` tiers, zero latency and no drops, every edge
+    mean carries equal weight and the outcome equals the flat sync policy
+    (edge means average to the client mean).
+    """
+
+    edge: AggregationPolicy = dataclasses.field(
+        default_factory=AggregationPolicy)
+    server: AggregationPolicy = dataclasses.field(
+        default_factory=AggregationPolicy)
+    n_edges: int = 1
+    edge_latency: float = 0.0
+
+    def __post_init__(self):
+        if self.n_edges <= 0:
+            raise ValueError("n_edges must be positive")
+        if self.edge_latency < 0:
+            raise ValueError("edge_latency must be non-negative")
+        for tier in (self.edge, self.server):
+            if not isinstance(tier, AggregationPolicy):
+                raise TypeError("edge/server tiers must be flat "
+                                "AggregationPolicy instances")
+
+    @property
+    def mode(self) -> str:
+        return "hierarchical"
+
+    @property
+    def is_sync(self) -> bool:
+        return False
+
+    @property
+    def may_exclude(self) -> bool:
+        """Hierarchical outcomes are *weighted* (mean of edge means), so
+        round implementations must always take the masked/weighted
+        aggregation path — and either tier may genuinely exclude."""
+        return True
+
+
+def uses_delta_combine(policy) -> bool:
+    """True if the round must apply the server update in delta form
+    (``Σ coef_i·Δ_i``) — flat async_buffered, or a hierarchical policy
+    with an async tier (the composed ``coef`` telescopes both tiers)."""
+    if isinstance(policy, HierarchicalPolicy):
+        return (policy.edge.mode == "async_buffered"
+                or policy.server.mode == "async_buffered")
+    return policy.mode == "async_buffered"
+
+
+def validate_policy(policy, clients_per_round: int):
     """Resolve ``None``/defaults against ``clients_per_round`` and check
     realisability (host-side, at construction time)."""
     if policy is None:
         return SYNC
+    if isinstance(policy, HierarchicalPolicy):
+        s = clients_per_round
+        if s % policy.n_edges != 0:
+            raise ValueError(
+                f"n_edges={policy.n_edges} must divide clients_per_round="
+                f"{s} (contiguous equal-size edge groups)")
+        k = s // policy.n_edges
+        return dataclasses.replace(
+            policy,
+            edge=validate_policy(policy.edge, k),
+            server=validate_policy(policy.server, policy.n_edges))
     if not isinstance(policy, AggregationPolicy):
         raise TypeError(f"policy must be an AggregationPolicy, got "
                         f"{type(policy).__name__}")
@@ -163,20 +245,25 @@ class PolicyOutcome(NamedTuple):
     staleness: jax.Array       # (s,) f32 — flush index (0 for sync/semi)
     coef: jax.Array            # (s,) f32 — delta-form aggregation weights
     discount: jax.Array        # (s,) f32 — partf / (1+staleness)^alpha
+    # (s,) f32 mean-aggregation weights: Σ weight == n_selected, and
+    # masked_mean(x, weight, weight_sum=n_selected) is the server mean.
+    # Flat policies set this to the SAME array as partf (bit-identical
+    # graphs); hierarchical outcomes reweight it to the mean-of-edge-means.
+    weight: jax.Array
+    # () f32 — edges the server tier aggregated (hierarchical only)
+    edges_aggregated: Optional[jax.Array] = None
 
 
-def apply_policy(policy: AggregationPolicy, sched, plan,
-                 client_bits_full: jax.Array) -> PolicyOutcome:
-    """Resolve one round's policy from the full replicated plan + bits.
+def _outcome_from_finish(policy: AggregationPolicy, participating: jax.Array,
+                         finish: jax.Array) -> PolicyOutcome:
+    """Resolve one flat policy from a participation mask + finish clock.
 
-    ``client_bits_full`` is the (s,) wire cost each plan-participant would
-    transmit (0 for §5-dropped stragglers) — the uplink term of the finish
-    clock.  All inputs and outputs are replicated full vectors, so the
-    outcome is bit-identical at every §6 device count.
+    This is the §7 tier primitive: ``apply_policy`` feeds it the client
+    plan and finish times; the hierarchical composition vmaps it over
+    edge groups and then runs it again over edge arrival times.
     """
-    s = plan.steps.shape[0]
-    partf_plan = plan.participating.astype(jnp.float32)
-    finish = sched.finish_times(plan, client_bits_full)
+    s = finish.shape[0]
+    partf_plan = participating.astype(jnp.float32)
 
     if policy.mode == "semi_sync":
         k = policy.wait_for
@@ -185,25 +272,25 @@ def apply_policy(policy: AggregationPolicy, sched, plan,
         # Only plan participants count toward K — a §5-dropped straggler
         # never finishes or transmits, so its deadline-held finish must
         # not crowd a real report out of the buffer (sorted last as +inf).
-        finish_eff = jnp.where(plan.participating, finish, jnp.inf)
+        finish_eff = jnp.where(participating, finish, jnp.inf)
         kth = jnp.sort(finish_eff)[k - 1]
-        participating = (finish_eff <= kth) & plan.participating
-        partf = participating.astype(jnp.float32)
+        part = (finish_eff <= kth) & participating
+        partf = part.astype(jnp.float32)
         # fewer than K participants: every report arrives and the dropped
         # stragglers hold the round open until the deadline (sync rule)
         sim_time = jnp.where(jnp.isinf(kth), jnp.max(finish), kth)
         zeros = jnp.zeros((s,), jnp.float32)
         return PolicyOutcome(
-            participating=participating, partf=partf,
+            participating=part, partf=partf,
             n_selected=partf.sum(), sim_time=sim_time, finish=finish,
             staleness=zeros, coef=partf / jnp.maximum(partf.sum(), 1.0),
-            discount=partf)
+            discount=partf, weight=partf)
 
     if policy.mode == "async_buffered":
         cap = policy.capacity
         # arrival order on the sim-time clock; plan-dropped stragglers
         # never arrive (sorted last via +inf) and take no buffer slot
-        finish_eff = jnp.where(plan.participating, finish, jnp.inf)
+        finish_eff = jnp.where(participating, finish, jnp.inf)
         order = jnp.argsort(finish_eff)
         ranks = jnp.zeros((s,), jnp.int32).at[order].set(
             jnp.arange(s, dtype=jnp.int32))
@@ -217,18 +304,66 @@ def apply_policy(policy: AggregationPolicy, sched, plan,
                            0.0, float(cap))
         coef = discount / jnp.maximum(n_flush, 1.0)
         return PolicyOutcome(
-            participating=plan.participating, partf=partf_plan,
+            participating=participating, partf=partf_plan,
             n_selected=n_part, sim_time=jnp.max(finish), finish=finish,
-            staleness=staleness, coef=coef, discount=discount)
+            staleness=staleness, coef=coef, discount=discount,
+            weight=partf_plan)
 
     # sync: today's semantics, same formula graph (sim_time = max finish)
     zeros = jnp.zeros((s,), jnp.float32)
     return PolicyOutcome(
-        participating=plan.participating, partf=partf_plan,
+        participating=participating, partf=partf_plan,
         n_selected=partf_plan.sum(), sim_time=jnp.max(finish),
         finish=finish, staleness=zeros,
         coef=partf_plan / jnp.maximum(partf_plan.sum(), 1.0),
-        discount=partf_plan)
+        discount=partf_plan, weight=partf_plan)
+
+
+def _apply_hierarchical(policy: HierarchicalPolicy, participating: jax.Array,
+                        finish: jax.Array) -> PolicyOutcome:
+    """Compose two §7 tiers over contiguous edge groups (DESIGN.md §11)."""
+    s = finish.shape[0]
+    e = policy.n_edges
+    k = s // e
+    edge = jax.vmap(lambda p, f: _outcome_from_finish(policy.edge, p, f))(
+        participating.reshape(e, k), finish.reshape(e, k))
+    # each edge's aggregate reaches the server one hop after its tier-1
+    # clock closes; an empty edge (every client dropped) sends nothing
+    srv = _outcome_from_finish(
+        policy.server, edge.n_selected > 0,
+        edge.sim_time + policy.edge_latency)
+
+    part = (edge.participating & srv.participating[:, None]).reshape(s)
+    partf = part.astype(jnp.float32)
+    n_sel = partf.sum()
+    # server mean = Σ_e srv_w_e/E_agg · (Σ_i edge_w_i x_i / n_e): scale so
+    # Σ weight == n_selected and the masked_mean call sites' divisor
+    # (weight_sum=n_selected) cancels back to the mean of edge means
+    edge_wn = edge.weight / jnp.maximum(edge.n_selected, 1.0)[:, None]
+    srv_wn = srv.weight / jnp.maximum(srv.n_selected, 1.0)
+    weight = n_sel * (srv_wn[:, None] * edge_wn).reshape(s)
+    return PolicyOutcome(
+        participating=part, partf=partf, n_selected=n_sel,
+        sim_time=srv.sim_time, finish=finish,
+        staleness=(edge.staleness + srv.staleness[:, None]).reshape(s),
+        coef=(edge.coef * srv.coef[:, None]).reshape(s),
+        discount=(edge.discount * srv.discount[:, None]).reshape(s),
+        weight=weight, edges_aggregated=srv.n_selected)
+
+
+def apply_policy(policy, sched, plan,
+                 client_bits_full: jax.Array) -> PolicyOutcome:
+    """Resolve one round's policy from the full replicated plan + bits.
+
+    ``client_bits_full`` is the (s,) wire cost each plan-participant would
+    transmit (0 for §5-dropped stragglers) — the uplink term of the finish
+    clock.  All inputs and outputs are replicated full vectors, so the
+    outcome is bit-identical at every §6 device count.
+    """
+    finish = sched.finish_times(plan, client_bits_full)
+    if isinstance(policy, HierarchicalPolicy):
+        return _apply_hierarchical(policy, plan.participating, finish)
+    return _outcome_from_finish(policy, plan.participating, finish)
 
 
 class ResolvedPolicy(NamedTuple):
@@ -241,9 +376,10 @@ class ResolvedPolicy(NamedTuple):
     partf: jax.Array       # shard-local f32 participation
     may_exclude: bool      # static: gate keep-old control-variate paths
     client_up: jax.Array   # full (s,) applied wire bits (excluded -> 0)
+    weight: jax.Array      # shard-local f32 mean-aggregation weights
 
 
-def resolve_policy(policy: AggregationPolicy, sched, plan,
+def resolve_policy(policy, sched, plan,
                    client_bits_full: jax.Array, ctx) -> ResolvedPolicy:
     """``apply_policy`` + the standard derived views (shard-local masks,
     the §5-composed ``may_exclude`` flag, and the applied per-client wire
@@ -253,7 +389,8 @@ def resolve_policy(policy: AggregationPolicy, sched, plan,
     return ResolvedPolicy(
         out=out, part=part, partf=part.astype(jnp.float32),
         may_exclude=sched.may_drop or policy.may_exclude,
-        client_up=client_bits_full * out.partf)
+        client_up=client_bits_full * out.partf,
+        weight=ctx.shard(out.weight))
 
 
 def async_weighted_sum(out: PolicyOutcome, stacked, ctx):
@@ -272,5 +409,8 @@ def policy_metrics(out: PolicyOutcome) -> dict:
     staleness vector rides the §5 vector-metrics path through the fused
     engine; ``clients_aggregated`` is the number of updates the server
     actually applied this round."""
-    return {"client_staleness": out.staleness,
-            "clients_aggregated": out.n_selected}
+    metrics = {"client_staleness": out.staleness,
+               "clients_aggregated": out.n_selected}
+    if out.edges_aggregated is not None:
+        metrics["edges_aggregated"] = out.edges_aggregated
+    return metrics

@@ -133,12 +133,14 @@ class FedAvg(RoundEngine):
                  wire: str = "account",
                  downlink: str = "dense",
                  downlink_compressor: Compressor | None = None,
+                 store=None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.policy = policy
         self.wire = wire
         self.downlink = downlink
         self.down_comp = downlink_compressor
+        self.store = store
         self.comp = compressor if compressor is not None else Identity()
         self.sched = validate_schedule(
             schedule if schedule is not None
@@ -164,13 +166,14 @@ class FedAvg(RoundEngine):
             # move (split(key, n) differs per n)
             k_sample, k_local, k_comp = jax.random.split(key, 3)
             k_dl = None
-        clients_full = jax.random.choice(k_sample, cfg.n_clients, (s,),
-                                         replace=False)
-        plan = sched.plan(clients_full, cfg.local_steps)
+        clients_full, avail_full = sched.sample_cohort(
+            k_sample, s, state.round)
+        plan = sched.plan(clients_full, cfg.local_steps,
+                          available=avail_full)
         plan_l = ctx.shard_tree(plan)
         clients = ctx.shard(clients_full)
         partf_plan_full = plan.participating.astype(jnp.float32)
-        het = sched.deadline is not None
+        het = sched.heterogeneous_steps
         ref = state.y if dl_on else state.x    # §10: clients hold y
         x0 = _broadcast(ref, s_loc)
         x_fin, loss_sum = _local_sgd(
@@ -195,27 +198,28 @@ class FedAvg(RoundEngine):
         pol = aggregation.resolve_policy(
             self.policy, sched, plan,
             ctx.all_clients(up_rep.total_bits) * partf_plan_full, ctx)
-        out, partf, may_exclude = pol.out, pol.partf, pol.may_exclude
+        out, may_exclude = pol.out, pol.may_exclude
         client_up = pol.client_up             # excluded clients send nothing
+        delta_combine = aggregation.uses_delta_combine(self.policy)
         if wire_on:
             # §8 wire aggregation: masked packed-payload gather, server-side
             # decode, aggregate the full (s,) stack with the unsharded
             # formula (see fedcomloc._round_impl)
             xf_full = ctx.gather_decoded_payload(payload, out.partf)
             x0_full = _broadcast(ref, s)
-            if self.policy.mode == "async_buffered":
+            if delta_combine:
                 delta = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
                 x_new = _tmap(
                     lambda x_, u: x_ + u, state.x,
                     aggregation.async_weighted_sum(out, delta, NULL_CTX))
             elif may_exclude:
                 x_new = tree_where(out.n_selected > 0,
-                                   masked_mean(xf_full, out.partf, NULL_CTX,
+                                   masked_mean(xf_full, out.weight, NULL_CTX,
                                                weight_sum=out.n_selected),
                                    state.x)
             else:
                 x_new = _tmap(lambda t: t.mean(axis=0), xf_full)
-        elif self.policy.mode == "async_buffered":
+        elif delta_combine:
             delta = _tmap(lambda yf, xs: yf - xs, x_fin, x0)
             x_new = _tmap(lambda x_, u: x_ + u, state.x,
                           aggregation.async_weighted_sum(out, delta, ctx))
@@ -223,7 +227,7 @@ class FedAvg(RoundEngine):
             # if every sampled client was excluded, the server keeps its
             # model
             x_new = tree_where(out.n_selected > 0,
-                               masked_mean(x_fin, partf, ctx,
+                               masked_mean(x_fin, pol.weight, ctx,
                                            weight_sum=out.n_selected),
                                state.x)
         else:
@@ -280,12 +284,14 @@ class Scaffold(RoundEngine):
                  wire: str = "account",
                  downlink: str = "dense",
                  downlink_compressor: Compressor | None = None,
+                 store=None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.policy = policy
         self.wire = wire
         self.downlink = downlink
         self.down_comp = downlink_compressor
+        self.store = store
         self.sched = validate_schedule(
             schedule if schedule is not None
             else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
@@ -294,8 +300,7 @@ class Scaffold(RoundEngine):
 
     def init(self, params0: PyTree) -> ScaffoldState:
         zeros = _tmap(jnp.zeros_like, params0)
-        ci = _tmap(lambda p: jnp.zeros((self.cfg.n_clients,) + p.shape,
-                                       p.dtype), params0)
+        ci = self.store.init_slot("ci", params0, self.cfg.n_clients)
         # Scaffold broadcasts model AND server control variate: the §10
         # downlink reference is the (x, c) pair the cohort last received
         y = (params0, zeros) if self.downlink != "dense" else ()
@@ -313,13 +318,14 @@ class Scaffold(RoundEngine):
             k_dl = None
         s = cfg.clients_per_round
         s_loc = ctx.local_count(s)
-        clients_full = jax.random.choice(k_sample, cfg.n_clients, (s,),
-                                         replace=False)
-        plan = sched.plan(clients_full, cfg.local_steps)
+        clients_full, avail_full = sched.sample_cohort(
+            k_sample, s, state.round)
+        plan = sched.plan(clients_full, cfg.local_steps,
+                          available=avail_full)
         plan_l = ctx.shard_tree(plan)
         clients = ctx.shard(clients_full)
         partf_plan_full = plan.participating.astype(jnp.float32)
-        ci_s = _tmap(lambda c: c[clients], state.ci)
+        ci_s = self.store.gather("ci", state.ci, clients)
         # §10: clients work from the (x, c) pair they last received
         x_ref, c_ref = state.y if dl_on else (state.x, state.c)
         x0 = _broadcast(x_ref, s_loc)
@@ -328,7 +334,7 @@ class Scaffold(RoundEngine):
             return _tmap(lambda gc, cic, cc: gc - cic + cc,
                          g, _tmap(lambda c: c[slot], ci_s), c_ref)
 
-        het = sched.deadline is not None
+        het = sched.heterogeneous_steps
         x_fin, loss_sum = _local_sgd(self.loss_fn, self.data, cfg, x0,
                                      clients, k_local, grad_adjust=adjust,
                                      steps=plan_l.steps if het else None,
@@ -359,12 +365,12 @@ class Scaffold(RoundEngine):
         dense = dense_bits(state.x)
         pol = aggregation.resolve_policy(
             self.policy, sched, plan, 2 * dense * partf_plan_full, ctx)
-        out, part, partf, may_exclude = (pol.out, pol.part, pol.partf,
-                                         pol.may_exclude)
+        out, part, may_exclude = pol.out, pol.part, pol.may_exclude
         client_up = pol.client_up
         if may_exclude:   # excluded stragglers never report; keep ci
             ci_new = keep_where(part, ci_new, ci_s)
         wire_on = self.wire == "packed"
+        delta_combine = aggregation.uses_delta_combine(self.policy)
         payload = None
         if wire_on:
             # §8 packed uplink: Scaffold transmits model + control variate
@@ -373,23 +379,23 @@ class Scaffold(RoundEngine):
             xf_full, ci_new_full = ctx.gather_decoded_payload(
                 payload, out.partf)
             x0_full = _broadcast(x_ref, s)
-            ci_s_full = _tmap(lambda c: c[clients_full], state.ci)
+            ci_s_full = self.store.gather("ci", state.ci, clients_full)
             dxs = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
             dcs = _tmap(lambda cn, co: cn - co, ci_new_full, ci_s_full)
-            if self.policy.mode == "async_buffered":
+            if delta_combine:
                 dx = aggregation.async_weighted_sum(out, dxs, NULL_CTX)
                 dc = aggregation.async_weighted_sum(out, dcs, NULL_CTX)
                 s_eff = out.n_selected
             elif may_exclude:
                 wsum = out.n_selected
-                dx = masked_mean(dxs, out.partf, NULL_CTX, weight_sum=wsum)
-                dc = masked_mean(dcs, out.partf, NULL_CTX, weight_sum=wsum)
+                dx = masked_mean(dxs, out.weight, NULL_CTX, weight_sum=wsum)
+                dc = masked_mean(dcs, out.weight, NULL_CTX, weight_sum=wsum)
                 s_eff = wsum
             else:
                 dx = _tmap(lambda t: t.mean(axis=0), dxs)
                 dc = _tmap(lambda t: t.mean(axis=0), dcs)
                 s_eff = s
-        elif self.policy.mode == "async_buffered":
+        elif delta_combine:
             dx = aggregation.async_weighted_sum(
                 out, _tmap(lambda yf, xs: yf - xs, x_fin, x0), ctx)
             dc = aggregation.async_weighted_sum(
@@ -398,9 +404,9 @@ class Scaffold(RoundEngine):
         elif may_exclude:
             wsum = out.n_selected
             dx = masked_mean(_tmap(lambda yf, xs: yf - xs, x_fin, x0),
-                             partf, ctx, weight_sum=wsum)
+                             pol.weight, ctx, weight_sum=wsum)
             dc = masked_mean(_tmap(lambda cn, co: cn - co, ci_new, ci_s),
-                             partf, ctx, weight_sum=wsum)
+                             pol.weight, ctx, weight_sum=wsum)
             s_eff = wsum
         else:
             dx = ctx.mean_clients(_tmap(lambda yf, xs: yf - xs, x_fin, x0))
@@ -410,7 +416,7 @@ class Scaffold(RoundEngine):
         x_new = _tmap(lambda x_, d: x_ + d, state.x, dx)
         c_new = _tmap(lambda c_, d: c_ + (s_eff / cfg.n_clients) * d,
                       state.c, dc)
-        ci_all = ctx.scatter_rows(state.ci, clients, ci_new)
+        ci_all = self.store.scatter("ci", state.ci, clients, ci_new, ctx)
         y_new = state.y
         down_bits = jnp.asarray(2 * s * dense)
         dl_extras = {}
@@ -455,12 +461,14 @@ class FedDyn(RoundEngine):
                  wire: str = "account",
                  downlink: str = "dense",
                  downlink_compressor: Compressor | None = None,
+                 store=None,
                  meter_mode: str = "host"):
         self.loss_fn, self.data, self.cfg = loss_fn, data, cfg
         self.policy = policy
         self.wire = wire
         self.downlink = downlink
         self.down_comp = downlink_compressor
+        self.store = store
         self.sched = validate_schedule(
             schedule if schedule is not None
             else ClientSchedule.homogeneous(cfg.n_clients), cfg.n_clients)
@@ -469,8 +477,7 @@ class FedDyn(RoundEngine):
 
     def init(self, params0: PyTree) -> FedDynState:
         zeros = _tmap(jnp.zeros_like, params0)
-        g = _tmap(lambda p: jnp.zeros((self.cfg.n_clients,) + p.shape,
-                                      p.dtype), params0)
+        g = self.store.init_slot("grads", params0, self.cfg.n_clients)
         y = params0 if self.downlink != "dense" else ()
         return FedDynState(x=params0, h=zeros, grads=g,
                            round=jnp.zeros((), jnp.int32), y=y)
@@ -486,13 +493,14 @@ class FedDyn(RoundEngine):
             k_dl = None
         s = cfg.clients_per_round
         s_loc = ctx.local_count(s)
-        clients_full = jax.random.choice(k_sample, cfg.n_clients, (s,),
-                                         replace=False)
-        plan = sched.plan(clients_full, cfg.local_steps)
+        clients_full, avail_full = sched.sample_cohort(
+            k_sample, s, state.round)
+        plan = sched.plan(clients_full, cfg.local_steps,
+                          available=avail_full)
         plan_l = ctx.shard_tree(plan)
         clients = ctx.shard(clients_full)
         partf_plan_full = plan.participating.astype(jnp.float32)
-        g_s = _tmap(lambda g: g[clients], state.grads)
+        g_s = self.store.gather("grads", state.grads, clients)
         ref = state.y if dl_on else state.x    # §10: clients hold y
         x0 = _broadcast(ref, s_loc)
 
@@ -502,7 +510,7 @@ class FedDyn(RoundEngine):
                 lambda gc, gpc, xc, xs: gc - gpc + cfg.alpha * (xc - xs),
                 g, gp, x_c, ref)
 
-        het = sched.deadline is not None
+        het = sched.heterogeneous_steps
         x_fin, loss_sum = _local_sgd(self.loss_fn, self.data, cfg, x0,
                                      clients, k_local, grad_adjust=adjust,
                                      steps=plan_l.steps if het else None,
@@ -519,8 +527,10 @@ class FedDyn(RoundEngine):
                       g_s, x_fin, x0)
         if may_exclude:   # excluded stragglers keep their dual variables
             g_new = keep_where(part, g_new, g_s)
-        grads_all = ctx.scatter_rows(state.grads, clients, g_new)
+        grads_all = self.store.scatter("grads", state.grads, clients,
+                                       g_new, ctx)
         wire_on = self.wire == "packed"
+        delta_combine = aggregation.uses_delta_combine(self.policy)
         payload = None
         if wire_on:
             # §8 packed (dense) uplink + replicated full-stack aggregation
@@ -528,7 +538,7 @@ class FedDyn(RoundEngine):
             xf_full = ctx.gather_decoded_payload(payload, out.partf)
             x0_full = _broadcast(ref, s)
             deltas = _tmap(lambda yf, xs: yf - xs, xf_full, x0_full)
-            if self.policy.mode == "async_buffered":
+            if delta_combine:
                 dsum = _tmap(
                     lambda d_: (d_ * per_client(out.discount, d_)
                                 ).sum(axis=0), deltas)
@@ -549,7 +559,7 @@ class FedDyn(RoundEngine):
                     lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients)
                     * d_, state.h, delta)
                 x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
-                              masked_mean(xf_full, out.partf, NULL_CTX,
+                              masked_mean(xf_full, out.weight, NULL_CTX,
                                           weight_sum=out.n_selected), h_new)
                 x_new = tree_where(out.n_selected > 0, x_new, state.x)
             else:
@@ -560,7 +570,7 @@ class FedDyn(RoundEngine):
                 x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
                               _tmap(lambda t: t.mean(axis=0), xf_full),
                               h_new)
-        elif self.policy.mode == "async_buffered":
+        elif delta_combine:
             # the server correction absorbs the staleness-discounted delta
             # *sum*; the average applies the per-flush buffer means
             disc = ctx.shard(out.discount)
@@ -585,7 +595,7 @@ class FedDyn(RoundEngine):
                 lambda h_, d_: h_ - cfg.alpha * (1.0 / cfg.n_clients) * d_,
                 state.h, delta)
             x_new = _tmap(lambda ym, h_: ym - h_ / cfg.alpha,
-                          masked_mean(x_fin, partf, ctx,
+                          masked_mean(x_fin, pol.weight, ctx,
                                       weight_sum=out.n_selected), h_new)
             # if every sampled client was excluded, keep the server model
             x_new = tree_where(out.n_selected > 0, x_new, state.x)

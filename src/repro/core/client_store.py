@@ -1,0 +1,288 @@
+"""Out-of-core per-client state store (DESIGN.md §11).
+
+Every algorithm with persistent per-client state — Scaffold/FedDyn control
+variates, FedComLoc's EF memory, LoCoDL's per-client iterates — used to
+stack that state ``(n_clients, ...)`` on device, capping the simulated
+population at what fits in device memory.  This module owns the state
+instead, behind one cohort-row contract every ``_round_impl`` writes
+against:
+
+* ``init_slot(name, template, n_clients, init)`` — allocate a named slot
+  at algorithm ``init`` time; the returned value is what the algorithm
+  puts in its state NamedTuple;
+* ``gather(name, slot, idx)`` — the sampled cohort's rows, on device, at
+  round start;
+* ``scatter(name, slot, idx, rows, ctx)`` — write the cohort's updated
+  rows back at round end; returns the new slot value for the next state.
+
+Two backends:
+
+* :class:`InMemoryStore` (the default) — the slot IS the stacked device
+  array; ``gather``/``scatter`` emit *exactly* the gather/scatter ops the
+  round bodies used to inline (``t[idx]`` / ``ctx.scatter_rows``), so the
+  in-memory path is bit-identical to the historical stacked-state
+  behaviour, works under every §6/§9 mesh, and checkpoints through the
+  state tree unchanged.
+
+* :class:`HostStore` — rows live host-side in numpy buffers (optionally
+  ``np.memmap`` files under ``mmap_dir``, so the population can exceed
+  host RAM too); the slot is an int32 *version token* and
+  ``gather``/``scatter`` cross the jit boundary through **ordered**
+  ``io_callback``\\ s, which sequence correctly inside the fused
+  ``lax.scan`` engine (scatter of round r happens-before gather of round
+  r+1).  Buffers are **lazily materialised**: allocation writes one fill
+  row plus a ``touched`` bitmap, and a gather reads only rows previously
+  scattered (everything else is served from the fill row) — so a
+  million-client slot that has only ever seen 64-client cohorts costs
+  64·rounds rows of host memory, not ``n_clients`` (``init="broadcast"``
+  — LoCoDL's ``xs`` — never materialises the broadcast at all).  Device
+  memory holds cohort rows only.  The backend is host-side by nature and
+  cannot run inside ``shard_map`` meshes (``RoundEngine.use_mesh``
+  rejects the combination).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+INIT_MODES = ("zeros", "broadcast")
+
+
+class ClientStore:
+    """The cohort-row contract round implementations write against."""
+
+    #: True if gather/scatter cross the jit boundary via host callbacks —
+    #: incompatible with shard_map meshes (RoundEngine.use_mesh checks).
+    host_side: bool = False
+
+    def init_slot(self, name: str, template: PyTree, n_clients: int,
+                  init: str = "zeros") -> PyTree:
+        raise NotImplementedError
+
+    def gather(self, name: str, slot: PyTree, idx: jax.Array) -> PyTree:
+        raise NotImplementedError
+
+    def scatter(self, name: str, slot: PyTree, idx: jax.Array,
+                rows: PyTree, ctx) -> PyTree:
+        raise NotImplementedError
+
+
+class InMemoryStore(ClientStore):
+    """Stacked-device-array backend: the slot is the ``(n, ...)`` tree.
+
+    Every method emits exactly the op the round bodies historically
+    inlined, so this backend reproduces the pre-store graphs (and hence
+    trajectories, goldens, and checkpoints) byte-for-byte.
+    """
+
+    def init_slot(self, name: str, template: PyTree, n_clients: int,
+                  init: str = "zeros") -> PyTree:
+        if init not in INIT_MODES:
+            raise ValueError(f"init must be one of {INIT_MODES}")
+        if init == "broadcast":
+            return jax.tree_util.tree_map(
+                lambda p: jnp.broadcast_to(p, (n_clients,) + p.shape),
+                template)
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros((n_clients,) + p.shape, p.dtype), template)
+
+    def gather(self, name: str, slot: PyTree, idx: jax.Array) -> PyTree:
+        return jax.tree_util.tree_map(lambda t: t[idx], slot)
+
+    def scatter(self, name: str, slot: PyTree, idx: jax.Array,
+                rows: PyTree, ctx) -> PyTree:
+        return ctx.scatter_rows(slot, idx, rows)
+
+
+def _disable_async_dispatch() -> None:
+    """Ordered host callbacks + JAX's async CPU dispatch can deadlock.
+
+    On CPU, jax dispatches computations asynchronously on a background
+    thread; a program with several ordered ``io_callback``\\ s moving
+    large buffers can then deadlock inside the runtime (readily reproduced
+    on 1-core hosts under jax 0.4.37 — the first such program hangs
+    forever, racily).  Synchronous dispatch is the documented remedy and
+    costs nothing here: every HostStore round already round-trips to the
+    host, so there is no dispatch pipeline left to overlap.  Flipped once,
+    at first HostStore construction, so in-memory runs keep the default.
+    """
+    try:
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+    except AttributeError:     # older jax without the flag: best effort
+        pass
+
+
+@dataclasses.dataclass
+class _HostSlot:
+    """One named slot's host-side storage."""
+
+    leaves: List[np.ndarray]          # (n, ...) buffers (numpy or memmap)
+    fill: List[np.ndarray]            # one (...) fill row per leaf
+    touched: np.ndarray               # (n,) bool — rows ever scattered
+    treedef: Any
+    row_structs: List[jax.ShapeDtypeStruct]
+
+
+class HostStore(ClientStore):
+    """Host-memory (optionally memory-mapped) backend.
+
+    ``mmap_dir`` spools each leaf buffer to a ``np.memmap`` file under
+    that directory (created sparse — untouched rows cost no disk), so the
+    population can exceed host RAM as well as device memory.
+    """
+
+    host_side = True
+
+    def __init__(self, mmap_dir: Optional[str | Path] = None):
+        _disable_async_dispatch()
+        self._mmap_dir = Path(mmap_dir) if mmap_dir is not None else None
+        self._slots: Dict[str, _HostSlot] = {}
+        # host-side telemetry for benchmarks: bytes actually moved
+        self.bytes_gathered = 0
+        self.bytes_scattered = 0
+
+    # -- allocation ------------------------------------------------------ #
+
+    def _alloc(self, name: str, i: int, shape, dtype) -> np.ndarray:
+        if self._mmap_dir is None:
+            # calloc'd pages: untouched rows stay zero-page-backed, and
+            # the touched bitmap keeps gathers from ever faulting them in
+            return np.zeros(shape, dtype)
+        self._mmap_dir.mkdir(parents=True, exist_ok=True)
+        path = self._mmap_dir / f"{name}.leaf_{i}.mm"
+        return np.memmap(path, dtype=dtype, mode="w+", shape=shape)
+
+    def init_slot(self, name: str, template: PyTree, n_clients: int,
+                  init: str = "zeros") -> jax.Array:
+        if init not in INIT_MODES:
+            raise ValueError(f"init must be one of {INIT_MODES}")
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        bufs, fills, structs = [], [], []
+        for i, leaf in enumerate(leaves):
+            leaf = np.asarray(leaf)
+            bufs.append(self._alloc(name, i, (n_clients,) + leaf.shape,
+                                    leaf.dtype))
+            # the fill row serves every never-scattered gather, so a
+            # "broadcast" init never writes n_clients copies of the model
+            fills.append(leaf.copy() if init == "broadcast"
+                         else np.zeros(leaf.shape, leaf.dtype))
+            structs.append(jax.ShapeDtypeStruct(leaf.shape, leaf.dtype))
+        self._slots[name] = _HostSlot(
+            leaves=bufs, fill=fills,
+            touched=np.zeros((n_clients,), bool),
+            treedef=treedef, row_structs=structs)
+        # the slot value is a version token: an int32 the scatter bumps,
+        # giving the state tree a real (checkpointable) leaf and the
+        # engine's scan carry a data dependence on top of the ordered-
+        # effect sequencing
+        return jnp.zeros((), jnp.int32)
+
+    # -- host-side row movement ------------------------------------------ #
+
+    def _gather_host(self, name: str, idx: np.ndarray) -> List[np.ndarray]:
+        slot = self._slots[name]
+        idx = np.asarray(idx)
+        t = slot.touched[idx]
+        out = []
+        for buf, fill in zip(slot.leaves, slot.fill):
+            rows = np.empty((idx.shape[0],) + fill.shape, fill.dtype)
+            # read ONLY previously-scattered rows: untouched rows come
+            # from the fill row without faulting buffer pages in
+            rows[:] = fill
+            if t.any():
+                rows[t] = buf[idx[t]]
+            out.append(rows)
+            self.bytes_gathered += rows.nbytes
+        return out
+
+    def _scatter_host(self, name: str, idx: np.ndarray,
+                      leaves: List[np.ndarray]) -> None:
+        slot = self._slots[name]
+        idx = np.asarray(idx)
+        for buf, rows in zip(slot.leaves, leaves):
+            buf[idx] = rows
+            self.bytes_scattered += rows.nbytes
+        slot.touched[idx] = True
+
+    # -- the in-graph contract ------------------------------------------- #
+
+    def gather(self, name: str, slot: jax.Array, idx: jax.Array) -> PyTree:
+        from jax.experimental import io_callback
+        hs = self._slots[name]
+        s = idx.shape[0]
+        shapes = [jax.ShapeDtypeStruct((s,) + r.shape, r.dtype)
+                  for r in hs.row_structs]
+
+        def cb(idx_h, _token):
+            return tuple(self._gather_host(name, idx_h))
+
+        rows = io_callback(cb, tuple(shapes), idx, slot, ordered=True)
+        return jax.tree_util.tree_unflatten(hs.treedef, list(rows))
+
+    def scatter(self, name: str, slot: jax.Array, idx: jax.Array,
+                rows: PyTree, ctx) -> jax.Array:
+        from jax.experimental import io_callback
+        leaves, treedef = jax.tree_util.tree_flatten(rows)
+        hs = self._slots[name]
+        if treedef != hs.treedef:
+            raise ValueError(
+                f"scatter to slot {name!r} with mismatched tree structure")
+
+        def cb(idx_h, *leaves_h):
+            self._scatter_host(name, idx_h, list(leaves_h))
+            return np.zeros((), np.int32)
+
+        io_callback(cb, jax.ShapeDtypeStruct((), jnp.int32), idx, *leaves,
+                    ordered=True)
+        return slot + 1
+
+    # -- persistence (checkpoint-resume) --------------------------------- #
+
+    def state_dict(self) -> dict:
+        """The store's full host state as one nested-dict pytree, ready
+        for ``repro.checkpoint.save``.  Buffers are materialised dense —
+        checkpointing is for resumable *experiments*, not for spooling a
+        million-client population (keep ``mmap_dir`` for that)."""
+        out = {}
+        for name, slot in self._slots.items():
+            out[name] = {
+                "touched": slot.touched.copy(),
+                "fill": {f"leaf_{i}": f.copy()
+                         for i, f in enumerate(slot.fill)},
+                "data": {f"leaf_{i}": np.asarray(buf).copy()
+                         for i, buf in enumerate(slot.leaves)},
+            }
+        return out
+
+    def load_state_dict(self, d: dict) -> None:
+        """Restore buffers saved by :meth:`state_dict` into the slots
+        registered by ``init_slot`` (call the algorithm's ``init`` first —
+        it defines the slot names/shapes this fills)."""
+        for name, payload in d.items():
+            if name not in self._slots:
+                raise KeyError(
+                    f"state_dict slot {name!r} was never registered; call "
+                    "the algorithm's init() before load_state_dict()")
+            slot = self._slots[name]
+            slot.touched[:] = np.asarray(payload["touched"])
+            for i in range(len(slot.leaves)):
+                slot.fill[i][...] = np.asarray(payload["fill"][f"leaf_{i}"])
+                slot.leaves[i][...] = np.asarray(payload["data"][f"leaf_{i}"])
+
+
+def resolve_store(store: Optional[ClientStore]) -> ClientStore:
+    """Default + type-check the ``store=`` argument every algorithm takes."""
+    if store is None:
+        return InMemoryStore()
+    if not isinstance(store, ClientStore):
+        raise TypeError(
+            f"store must be a ClientStore, got {type(store).__name__}")
+    return store

@@ -49,6 +49,11 @@ class RoundPlan(NamedTuple):
     speed: jax.Array          # (s,) float32 — relative compute speed
     bandwidth: jax.Array      # (s,) float32 — relative uplink bandwidth
     comp_overrides: Dict[str, jax.Array]  # name -> (s,) per-client values
+    # (s,) bool — False = the availability process (§11) marked this
+    # sampled slot offline: it never starts, transmits nothing, holds
+    # nothing open.  ``None`` (the default) means no availability process
+    # is attached and every sampled client is online.
+    available: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,17 +146,118 @@ class ClientProfile:
 
         ``mode="uniform"`` gives every client ``base_density``;
         ``mode="bandwidth"`` allocates the same *total* bit budget
-        proportionally to each client's bandwidth (d_i = base·bw_i/mean bw,
-        clipped to [floor, 1]), so fast links carry denser payloads.
+        proportionally to each client's bandwidth (d_i ∝ bw_i, clipped to
+        [floor, 1]), so fast links carry denser payloads.  The allocation
+        preserves the budget invariant ``mean(d) == base_density``: when
+        the clip binds, the pre-clip slope is rescaled (host-side
+        bisection) so the clipped mean still lands on ``base_density``
+        instead of silently drifting.
         """
         if mode == "uniform":
             d = jnp.full((self.n_clients,), base_density, jnp.float32)
         elif mode == "bandwidth":
-            rel = self.bandwidth / jnp.mean(self.bandwidth)
-            d = jnp.clip(base_density * rel, floor, 1.0)
+            if not (floor <= base_density <= 1.0):
+                raise ValueError(
+                    f"base_density={base_density} outside [floor={floor}, "
+                    "1.0]: the clipped allocation cannot average to it")
+            raw = np.asarray(self.bandwidth, np.float64)
+            raw = raw / raw.mean()
+            clipped = np.clip(base_density * raw, floor, 1.0)
+            if abs(clipped.mean() - base_density) <= 1e-9:
+                # clip doesn't bind — keep the original (traced) formula
+                rel = self.bandwidth / jnp.mean(self.bandwidth)
+                d = jnp.clip(base_density * rel, floor, 1.0)
+            else:
+                # mean(clip(c·raw, floor, 1)) is monotone in c and spans
+                # [floor, 1] ∋ base_density: bisect the slope host-side
+                lo, hi = 0.0, base_density
+                while np.clip(hi * raw, floor, 1.0).mean() < base_density:
+                    hi *= 2.0
+                for _ in range(80):
+                    mid = 0.5 * (lo + hi)
+                    if np.clip(mid * raw, floor, 1.0).mean() < base_density:
+                        lo = mid
+                    else:
+                        hi = mid
+                d = jnp.asarray(np.clip(hi * raw, floor, 1.0), jnp.float32)
         else:
             raise ValueError(f"unknown allocation mode {mode!r}")
         return self.with_comp_param("density", d)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientAvailability:
+    """Population availability process (DESIGN.md §11).
+
+    Cross-device populations are never fully online: devices follow
+    diurnal (timezone-staggered) usage cycles and churn in and out of the
+    population.  This models both as a *deterministic* per-round weight
+    trace — a pure function of ``round_idx`` — so fused-scan rounds and
+    checkpoint-resumed runs see identical traces:
+
+    * diurnal: ``w_i(t) = 1 - amp·(0.5 + 0.5·sin(2π(t/period + φ_i)))``
+      with per-client phase ``φ_i`` (the client's timezone); ``amp=1``
+      takes each client to fully offline at its local night trough;
+    * churn: staggered epoch gating — client i is in the population iff
+      ``frac(t·churn_rate + ψ_i) < online_frac``, so every round a
+      ``churn_rate`` fraction of clients departs and (a disjoint equal
+      fraction) arrives, with ``online_frac`` of the population present
+      in steady state.
+
+    ``weights(t)`` is the (n,) sampling weight; a zero weight means the
+    client is offline that round.  The cohort sampler
+    (:meth:`ClientSchedule.sample_cohort`) draws proportionally to these
+    weights and flags any offline pick in ``RoundPlan.available``.
+    """
+
+    phase: jax.Array                  # (n,) diurnal phase in [0, 1)
+    stagger: jax.Array                # (n,) churn stagger in [0, 1)
+    period: float = 24.0              # rounds per diurnal cycle
+    amp: float = 0.8                  # diurnal modulation depth in [0, 1]
+    churn_rate: float = 0.0           # population fraction cycling per round
+    online_frac: float = 1.0          # steady-state in-population fraction
+
+    def __post_init__(self):
+        phase = jnp.asarray(self.phase, jnp.float32)
+        stagger = jnp.asarray(self.stagger, jnp.float32)
+        object.__setattr__(self, "phase", phase)
+        object.__setattr__(self, "stagger", stagger)
+        if phase.ndim != 1 or stagger.shape != phase.shape:
+            raise ValueError("phase/stagger must be matching (n,) arrays")
+        if not 0.0 <= self.amp <= 1.0:
+            raise ValueError("amp must be in [0, 1]")
+        if self.period <= 0:
+            raise ValueError("period must be positive")
+        if self.churn_rate < 0:
+            raise ValueError("churn_rate must be non-negative")
+        if not 0.0 < self.online_frac <= 1.0:
+            raise ValueError("online_frac must be in (0, 1]")
+
+    @property
+    def n_clients(self) -> int:
+        return self.phase.shape[0]
+
+    @classmethod
+    def diurnal(cls, n_clients: int, *, period: float = 24.0,
+                amp: float = 0.8, churn_rate: float = 0.0,
+                online_frac: float = 1.0, seed: int = 0
+                ) -> "ClientAvailability":
+        """Uniform-random timezones and churn staggers over the population."""
+        rng = np.random.default_rng(seed)
+        return cls(phase=jnp.asarray(rng.random(n_clients), jnp.float32),
+                   stagger=jnp.asarray(rng.random(n_clients), jnp.float32),
+                   period=period, amp=amp, churn_rate=churn_rate,
+                   online_frac=online_frac)
+
+    def weights(self, round_idx) -> jax.Array:
+        """The (n,) availability weight at ``round_idx`` (in-graph)."""
+        t = jnp.asarray(round_idx, jnp.float32)
+        w = 1.0 - self.amp * (0.5 + 0.5 * jnp.sin(
+            2.0 * jnp.pi * (t / self.period + self.phase)))
+        if self.churn_rate > 0.0 and self.online_frac < 1.0:
+            u = jnp.mod(t * self.churn_rate + self.stagger, 1.0)
+            w = jnp.where(u < self.online_frac, w, 0.0)
+        return w
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,6 +271,13 @@ class ClientSchedule:
     from the server average); otherwise they report their (unchanged)
     broadcast iterate.  ``step_cost``/``bit_cost`` are the sim-time of one
     local step at speed 1 and of one uplink bit at bandwidth 1.
+
+    ``availability`` attaches a :class:`ClientAvailability` process: the
+    cohort sampler draws clients proportionally to the round's
+    availability weights, and any sampled-but-offline client (only
+    possible when fewer than ``s`` clients are online) rides the
+    straggler-drop machinery — zero steps, no uplink, excluded from the
+    aggregate, holding nothing open on the sim clock.
     """
 
     profile: ClientProfile
@@ -172,6 +285,7 @@ class ClientSchedule:
     drop_stragglers: bool = False
     step_cost: float = 1.0
     bit_cost: float = 0.0
+    availability: Optional[ClientAvailability] = None
 
     def __post_init__(self):
         if self.deadline is not None and self.deadline <= 0:
@@ -182,6 +296,11 @@ class ClientSchedule:
             raise ValueError("bit_cost must be non-negative")
         if self.drop_stragglers and self.deadline is None:
             raise ValueError("drop_stragglers requires a deadline")
+        if (self.availability is not None
+                and self.availability.n_clients != self.profile.n_clients):
+            raise ValueError(
+                f"availability traces {self.availability.n_clients} clients "
+                f"but the profile has {self.profile.n_clients}")
 
     @classmethod
     def homogeneous(cls, n_clients: int) -> "ClientSchedule":
@@ -193,7 +312,14 @@ class ClientSchedule:
 
     @property
     def may_drop(self) -> bool:
-        return self.drop_stragglers
+        return self.drop_stragglers or self.availability is not None
+
+    @property
+    def heterogeneous_steps(self) -> bool:
+        """True if per-client step counts can differ within a round
+        (deadline truncation, or offline clients running zero steps) —
+        round bodies must mask their local-step scans."""
+        return self.deadline is not None or self.availability is not None
 
     @property
     def comp_override_names(self):
@@ -201,7 +327,36 @@ class ClientSchedule:
 
     # ------------------------------------------------------------------ #
 
-    def plan(self, clients: jax.Array, nominal_steps) -> RoundPlan:
+    def sample_cohort(self, key: jax.Array, s: int, round_idx=0):
+        """Sample the round's cohort (s,) from the population (in-graph).
+
+        Without an availability process this is exactly the uniform
+        without-replacement draw every round has always used (same key
+        consumption, bit-identical trajectories).  With one, clients are
+        drawn by Gumbel-top-k — weighted sampling without replacement
+        proportional to ``availability.weights(round_idx)`` — and the
+        returned ``available`` mask flags offline picks (only non-empty
+        when fewer than ``s`` clients are online that round).
+
+        Returns ``(clients, available)`` with ``available=None`` on the
+        neutral path.
+        """
+        n = self.n_clients
+        if self.availability is None:
+            return jax.random.choice(key, n, (s,), replace=False), None
+        w = self.availability.weights(round_idx)
+        online = w > 0.0
+        # Gumbel-top-k: iid Gumbel noise + log-weights, top s scores ==
+        # weighted sampling without replacement.  Offline clients score
+        # -inf and only surface when the online population is < s.
+        g = jax.random.gumbel(key, (n,))
+        scores = jnp.where(online, jnp.log(jnp.maximum(w, 1e-20)) + g,
+                           -jnp.inf)
+        _, clients = jax.lax.top_k(scores, s)
+        return clients, online[clients]
+
+    def plan(self, clients: jax.Array, nominal_steps,
+             available: Optional[jax.Array] = None) -> RoundPlan:
         """Resolve the sampled ``clients`` (s,) for one round (in-graph)."""
         speed = self.profile.speed[clients]
         bandwidth = self.profile.bandwidth[clients]
@@ -215,11 +370,15 @@ class ClientSchedule:
             steps = jnp.minimum(nominal, jnp.maximum(can_do, 0))
             participating = (steps > 0 if self.drop_stragglers
                              else jnp.ones(clients.shape, bool))
+        if available is not None:
+            # an offline client runs nothing and joins no aggregate
+            steps = jnp.where(available, steps, 0)
+            participating = participating & available
         overrides = {k: v[clients]
                      for k, v in self.profile.comp_params.items()}
         return RoundPlan(steps=steps, participating=participating,
                          speed=speed, bandwidth=bandwidth,
-                         comp_overrides=overrides)
+                         comp_overrides=overrides, available=available)
 
     def finish_times(self, plan: RoundPlan, client_uplink_bits) -> jax.Array:
         """Per-client finish times (s,) on the sim clock: local phase plus
@@ -227,12 +386,19 @@ class ClientSchedule:
         arrivals by (DESIGN.md §7); its max is the synchronous round
         wall-clock."""
         compute = plan.steps.astype(jnp.float32) * self.step_cost / plan.speed
-        if self.deadline is not None and self.drop_stragglers:
-            # a dropped straggler holds the round until the deadline
-            compute = jnp.where(plan.participating, compute, self.deadline)
         comm = (jnp.asarray(client_uplink_bits, jnp.float32) * self.bit_cost
                 / plan.bandwidth)
-        return compute + comm
+        # a non-participant transmits nothing — zero its uplink term here
+        # instead of trusting callers to mask client_uplink_bits upstream
+        comm = jnp.where(plan.participating, comm, 0.0)
+        finish = compute + comm
+        if self.deadline is not None and self.drop_stragglers:
+            # a dropped straggler holds the round until the deadline
+            finish = jnp.where(plan.participating, finish, self.deadline)
+        if plan.available is not None:
+            # an offline client never starts: it holds nothing open
+            finish = jnp.where(plan.available, finish, 0.0)
+        return finish
 
     def sim_time(self, plan: RoundPlan, client_uplink_bits) -> jax.Array:
         """Round wall-clock in the sim cost model: wait for the slowest."""

@@ -103,9 +103,10 @@ class RoundEngine:
     """Mixin: host-stepped ``round`` + fused ``run_rounds`` over _round_impl."""
 
     def _setup_engine(self) -> None:
-        from repro.core import aggregation
+        from repro.core import aggregation, client_store
         self.policy = aggregation.validate_policy(
             getattr(self, "policy", None), self.cfg.clients_per_round)
+        self.store = client_store.resolve_store(getattr(self, "store", None))
         self.wire = validate_wire(getattr(self, "wire", None),
                                   getattr(self, "comp", None),
                                   getattr(self, "sched", None))
@@ -223,6 +224,13 @@ class RoundEngine:
                 or (mesh is not None and self._mesh is not None
                     and mesh == self._mesh)):
             return self
+        if mesh is not None and self.store.host_side:
+            # an ordered host callback cannot run inside the shard_map
+            # round body — the §11 HostStore is a single-process backend
+            raise ValueError(
+                "host-side client stores (HostStore) cannot run under a "
+                "client-axis mesh; use the in-memory store with meshes, or "
+                "drop the mesh for out-of-core populations")
         self._mesh = mesh
         self._mesh_axis = axis
         self._rebind_impl()

@@ -33,6 +33,51 @@ class FederatedData:
         return self.x[idx], self.y[idx]
 
 
+@dataclasses.dataclass(frozen=True)
+class SyntheticFederatedData:
+    """Procedural federated regression data — O(dim) memory for any n_clients.
+
+    Million-client populations (DESIGN.md §11) cannot hold per-client index
+    tables: this container stores only the ``(dim,)`` ground-truth weight
+    vector and derives each client's local optimum on the fly from its id,
+    so memory is independent of ``n_clients``.  Client ``c`` draws batches
+    from ``y = x @ (w0 + hetero * n_c) + noise * eps`` with
+    ``n_c ~ N(0, I)`` seeded by ``fold_in(root, c)`` — deterministic per
+    client, heterogeneity dialled by ``hetero``.
+    """
+
+    w0: jax.Array              # (dim,) ground-truth global weights
+    n_clients: int
+    hetero: float = 0.1        # per-client optimum spread
+    noise: float = 0.0         # observation noise stddev
+    seed: int = 0              # root for the per-client heterogeneity draws
+
+    @classmethod
+    def create(cls, n_clients: int, dim: int, *, hetero: float = 0.1,
+               noise: float = 0.0, seed: int = 0) -> "SyntheticFederatedData":
+        w0 = jax.random.normal(jax.random.PRNGKey(seed), (dim,))
+        return cls(w0=w0, n_clients=n_clients, hetero=hetero, noise=noise,
+                   seed=seed)
+
+    @property
+    def dim(self) -> int:
+        return self.w0.shape[0]
+
+    def client_weights(self, client: jax.Array) -> jax.Array:
+        kc = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), client)
+        return self.w0 + self.hetero * jax.random.normal(kc, self.w0.shape)
+
+    def sample_batch(self, key: jax.Array, client: jax.Array, batch: int):
+        """Fresh linear-regression minibatch from client ``client``'s law."""
+        kx, ke = jax.random.split(key)
+        w_c = self.client_weights(client)
+        x = jax.random.normal(kx, (batch, self.dim))
+        y = x @ w_c
+        if self.noise:
+            y = y + self.noise * jax.random.normal(ke, (batch,))
+        return x, y
+
+
 def from_numpy_partition(x: np.ndarray, y: np.ndarray,
                          parts: list[np.ndarray]) -> FederatedData:
     """parts[i] = global indices owned by client i (ragged)."""

@@ -119,6 +119,7 @@ class FedComLoc(RoundEngine):
                  wire: str = "account",
                  downlink: str = "dense",
                  downlink_compressor: Compressor | None = None,
+                 store=None,
                  meter_mode: str = "host"):
         self.loss_fn = loss_fn
         self.data = data
@@ -127,6 +128,7 @@ class FedComLoc(RoundEngine):
         self.wire = wire
         self.downlink = downlink
         self.down_comp = downlink_compressor
+        self.store = store
         self.comp = compressor if compressor is not None else Identity()
         if config.variant == "none" and not isinstance(self.comp, Identity):
             raise ValueError('variant="none" requires the Identity compressor')
@@ -154,14 +156,17 @@ class FedComLoc(RoundEngine):
                 "use downlink='dense' with momentum")
 
     def init(self, params0: PyTree) -> FedComLocState:
-        stacked_zeros = lambda: jax.tree_util.tree_map(
-            lambda p: jnp.zeros((self.cfg.n_clients,) + p.shape, p.dtype),
-            params0)
-        e = stacked_zeros() if self.cfg.error_feedback else ()
+        # per-client state lives behind the §11 store contract: the
+        # in-memory backend returns the familiar stacked arrays, the host
+        # backend a version token (rows stay host-side)
+        n = self.cfg.n_clients
+        e = (self.store.init_slot("e", params0, n)
+             if self.cfg.error_feedback else ())
         mom = (jax.tree_util.tree_map(jnp.zeros_like, params0)
                if self.cfg.server_momentum > 0 else ())
         y = params0 if self.downlink != "dense" else ()
-        return FedComLocState(x=params0, h=stacked_zeros(),
+        return FedComLocState(x=params0, h=self.store.init_slot(
+                                  "h", params0, n),
                               round=jnp.zeros((), jnp.int32), e=e, mom=mom,
                               y=y)
 
@@ -191,21 +196,23 @@ class FedComLoc(RoundEngine):
             k_dl = None
         s = cfg.clients_per_round
         s_loc = ctx.local_count(s)
-        clients_full = jax.random.choice(
-            k_sample, cfg.n_clients, (s,), replace=False)
+        # §11: availability-aware cohort sampling (the neutral path is the
+        # historical uniform choice, same key consumption)
+        clients_full, avail_full = sched.sample_cohort(
+            k_sample, s, state.round)
         num_steps = self._num_local_steps(k_steps)
         # Client-heterogeneity layer (DESIGN.md §5): per-client step counts
         # (straggler deadline), participation mask, compressor overrides.
         # The full (s,) plan is computed replicated (metrics use it); the
         # per-client compute below runs on this shard's slice (§6).
-        plan = sched.plan(clients_full, num_steps)
+        plan = sched.plan(clients_full, num_steps, available=avail_full)
         plan_l = ctx.shard_tree(plan)
         clients = ctx.shard(clients_full)
         partf_plan_full = plan.participating.astype(jnp.float32)
         ov_names = sched.comp_override_names
         ov_vals = [plan_l.comp_overrides[n] for n in ov_names]
 
-        h_s = jax.tree_util.tree_map(lambda h: h[clients], state.h)
+        h_s = self.store.gather("h", state.h, clients)
         # §10: with a delta-coded downlink the cohort restarts from the
         # model the clients actually HOLD (state.y — last-received), not
         # the server's exact iterate; every client-side anchor below
@@ -268,7 +275,7 @@ class FedComLoc(RoundEngine):
                 # in magnitude, so TopK keeps far more of their energy than
                 # it keeps of the raw iterates; the residual stays in e_i.
                 # The uplink bits are those of the transmitted innovation.
-                e_s = jax.tree_util.tree_map(lambda e: e[clients], state.e)
+                e_s = self.store.gather("e", state.e, clients)
                 innov = jax.tree_util.tree_map(
                     lambda xh, x0_, e: xh - x0_[None] + e,
                     x_hat, ref, e_s)
@@ -305,8 +312,7 @@ class FedComLoc(RoundEngine):
         pol = aggregation.resolve_policy(
             self.policy, sched, plan,
             ctx.all_clients(client_up) * partf_plan_full, ctx)
-        out, part, partf, may_exclude = (pol.out, pol.part, pol.partf,
-                                         pol.may_exclude)
+        out, part, may_exclude = pol.out, pol.part, pol.may_exclude
         client_up = pol.client_up             # excluded clients send nothing
         if up_bits is None or may_exclude:
             up_bits = client_up.sum()
@@ -337,11 +343,12 @@ class FedComLoc(RoundEngine):
                 lambda c, snt: cfg.ef_decay * (c - snt), innov, sent)
             if may_exclude:    # an excluded client never transmitted
                 e_s_new = keep_where(part, e_s_new, e_s)
-            e_new = ctx.scatter_rows(state.e, clients, e_s_new)
+            e_new = self.store.scatter("e", state.e, clients, e_s_new, ctx)
+        delta_combine = aggregation.uses_delta_combine(self.policy)
         if wire_on:
             # server aggregation from the decoded full stack, with the
             # unsharded formula (bit-identical at any device count)
-            if self.policy.mode == "async_buffered":
+            if delta_combine:
                 delta = jax.tree_util.tree_map(
                     lambda xh, x0_: xh - x0_[None], srv_hat, ref)
                 x_bar = jax.tree_util.tree_map(
@@ -349,13 +356,13 @@ class FedComLoc(RoundEngine):
                     aggregation.async_weighted_sum(out, delta, NULL_CTX))
             elif may_exclude:
                 x_bar = tree_where(out.n_selected > 0,
-                                   masked_mean(srv_hat, out.partf, NULL_CTX,
+                                   masked_mean(srv_hat, out.weight, NULL_CTX,
                                                weight_sum=out.n_selected),
                                    state.x)
             else:
                 x_bar = jax.tree_util.tree_map(
                     lambda t: t.mean(axis=0), srv_hat)
-        elif self.policy.mode == "async_buffered":
+        elif delta_combine:
             # FedBuff server application in delta form: each buffer flush
             # applies its staleness-discounted mean of anchor deltas
             delta = jax.tree_util.tree_map(
@@ -367,7 +374,7 @@ class FedComLoc(RoundEngine):
             # if every sampled client was excluded, the server keeps its
             # model
             x_bar = tree_where(out.n_selected > 0,
-                               masked_mean(x_hat, partf, ctx,
+                               masked_mean(x_hat, pol.weight, ctx,
                                            weight_sum=out.n_selected),
                                state.x)
         else:
@@ -396,7 +403,7 @@ class FedComLoc(RoundEngine):
             h_s, x_hat, bcast)
         if may_exclude:   # an excluded client keeps its control variate
             h_s_new = keep_where(part, h_s_new, h_s)
-        h_new = ctx.scatter_rows(state.h, clients, h_s_new)
+        h_new = self.store.scatter("h", state.h, clients, h_s_new, ctx)
 
         # beyond-paper: Polyak momentum on the broadcast point only
         mom_new = state.mom

@@ -113,6 +113,7 @@ class LoCoDL(RoundEngine):
                  wire: str = "account",
                  downlink: str = "dense",
                  downlink_compressor: Compressor | None = None,
+                 store=None,
                  meter_mode: str = "host"):
         self.loss_fn = loss_fn
         self.data = data
@@ -121,6 +122,7 @@ class LoCoDL(RoundEngine):
         self.wire = wire
         self.downlink = downlink
         self.down_comp = downlink_compressor
+        self.store = store
         self.comp = compressor if compressor is not None else Identity()
         self.sched = validate_schedule(
             schedule if schedule is not None
@@ -133,12 +135,13 @@ class LoCoDL(RoundEngine):
 
     def init(self, params0: PyTree) -> LoCoDLState:
         n = self.cfg.n_clients
-        stacked = jax.tree_util.tree_map(
-            lambda p: jnp.broadcast_to(p, (n,) + p.shape), params0)
-        stacked_zeros = jax.tree_util.tree_map(
-            lambda p: jnp.zeros((n,) + p.shape, p.dtype), params0)
+        # §11 store slots: every client's iterate starts at the broadcast
+        # model ("broadcast" init — the host backend serves it from ONE
+        # fill row, never materialising n copies), variates at zero
         return LoCoDLState(
-            x=params0, xs=stacked, h=stacked_zeros,
+            x=params0,
+            xs=self.store.init_slot("xs", params0, n, init="broadcast"),
+            h=self.store.init_slot("h", params0, n),
             hy=jax.tree_util.tree_map(jnp.zeros_like, params0),
             round=jnp.zeros((), jnp.int32))
 
@@ -162,18 +165,18 @@ class LoCoDL(RoundEngine):
         k_sample, k_steps, k_local, k_up, k_dl = jax.random.split(key, 5)
         s = cfg.clients_per_round
         s_loc = ctx.local_count(s)
-        clients_full = jax.random.choice(
-            k_sample, cfg.n_clients, (s,), replace=False)
+        clients_full, avail_full = sched.sample_cohort(
+            k_sample, s, state.round)
         num_steps = self._num_local_steps(k_steps)
-        plan = sched.plan(clients_full, num_steps)
+        plan = sched.plan(clients_full, num_steps, available=avail_full)
         plan_l = ctx.shard_tree(plan)
         clients = ctx.shard(clients_full)
         partf_plan_full = plan.participating.astype(jnp.float32)
 
-        h_s = jax.tree_util.tree_map(lambda h: h[clients], state.h)
+        h_s = self.store.gather("h", state.h, clients)
         # clients resume their OWN iterates — there is no model broadcast;
         # the only downlink traffic is the compressed difference m
-        x0 = jax.tree_util.tree_map(lambda t: t[clients], state.xs)
+        x0 = self.store.gather("xs", state.xs, clients)
 
         def local_step(carry, inp):
             x_i, loss_acc = carry
@@ -223,8 +226,7 @@ class LoCoDL(RoundEngine):
         pol = aggregation.resolve_policy(
             self.policy, sched, plan,
             ctx.all_clients(up_rep.total_bits) * partf_plan_full, ctx)
-        out, part, partf, may_exclude = (pol.out, pol.part, pol.partf,
-                                         pol.may_exclude)
+        out, part, may_exclude = pol.out, pol.part, pol.may_exclude
         client_up = pol.client_up             # excluded clients send nothing
 
         if wire_on:
@@ -234,7 +236,7 @@ class LoCoDL(RoundEngine):
             u = ctx.shard_tree(u_full)
 
         # --- aggregate v under the §7 policy ----------------------------- #
-        if self.policy.mode == "async_buffered":
+        if aggregation.uses_delta_combine(self.policy):
             v = (aggregation.async_weighted_sum(out, u_full, NULL_CTX)
                  if wire_on
                  else aggregation.async_weighted_sum(out, u, ctx))
@@ -243,9 +245,9 @@ class LoCoDL(RoundEngine):
             # its control variate, exactly as if the coin never landed
             v = tree_where(
                 out.n_selected > 0,
-                (masked_mean(u_full, out.partf, NULL_CTX,
+                (masked_mean(u_full, out.weight, NULL_CTX,
                              weight_sum=out.n_selected) if wire_on
-                 else masked_mean(u, partf, ctx,
+                 else masked_mean(u, pol.weight, ctx,
                                   weight_sum=out.n_selected)),
                 jax.tree_util.tree_map(jnp.zeros_like, y_hat))
         else:
@@ -277,8 +279,8 @@ class LoCoDL(RoundEngine):
             # revert to the pre-round iterate, keep the control variate
             xs_rows = keep_where(part, xs_rows, x0)
             h_rows = keep_where(part, h_rows, h_s)
-        xs_new = ctx.scatter_rows(state.xs, clients, xs_rows)
-        h_new = ctx.scatter_rows(state.h, clients, h_rows)
+        xs_new = self.store.scatter("xs", state.xs, clients, xs_rows, ctx)
+        h_new = self.store.scatter("h", state.h, clients, h_rows, ctx)
         y_new = jax.tree_util.tree_map(
             lambda yh, mm: yh + cfg.lam * mm, y_hat, m)
         hy_new = jax.tree_util.tree_map(

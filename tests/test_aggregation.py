@@ -30,7 +30,9 @@ import pytest
 
 from repro.compress import TopK
 from repro.core import fed_data, server
-from repro.core.aggregation import AggregationPolicy, validate_policy
+from repro.core.aggregation import (
+    AggregationPolicy, HierarchicalPolicy, apply_policy, uses_delta_combine,
+    validate_policy)
 from repro.core.baselines import FedAvg, FedConfig, FedDyn, Scaffold
 from repro.core.clients import ClientProfile, ClientSchedule
 from repro.core.distributed import usable_shard_counts
@@ -440,3 +442,135 @@ def test_launch_config_policy_validation():
     with pytest.raises(ValueError, match="wait_for"):
         fed_train.FedTrainConfig(aggregation="async_buffered",
                                  wait_for=2).aggregation_policy()
+
+
+# --------------------------------------------------------------------------- #
+# 6. Hierarchical edge→server aggregation (DESIGN.md §11)
+# --------------------------------------------------------------------------- #
+
+def hier(edge=None, server=None, n_edges=2, latency=0.0):
+    return HierarchicalPolicy(
+        edge=edge or AggregationPolicy.sync(),
+        server=server or AggregationPolicy.sync(),
+        n_edges=n_edges, edge_latency=latency)
+
+
+@pytest.mark.parametrize("name", ["fedcomloc_ef", "fedavg", "scaffold",
+                                  "feddyn"])
+def test_hierarchical_sync_sync_equals_flat_sync(name, sync_refs):
+    """sync/sync tiers, zero latency, no drops: every edge mean carries
+    equal weight, so the mean of edge means IS the client mean and the
+    composed outcome reproduces the flat sync policy."""
+    m_ref, st_ref = sync_refs[name][1], sync_refs[name][0]
+    st, m = run_fused(build(name, hier()))
+    assert_matches_sync(m_ref, st_ref, m, st, f"{name} hier-sync")
+
+
+def plan_with_speeds(speeds, bits=0.0, latency=0.0, **policy_kw):
+    """A 4-client cohort (client i = sampled slot i) with given speeds."""
+    speeds = jnp.asarray(speeds, jnp.float32)
+    sched = ClientSchedule(
+        profile=ClientProfile(speed=speeds,
+                              bandwidth=jnp.ones_like(speeds)))
+    plan = sched.plan(jnp.arange(speeds.shape[0]), nominal_steps=2)
+    pol = validate_policy(hier(latency=latency, **policy_kw),
+                          speeds.shape[0])
+    bits_v = jnp.full(speeds.shape, float(bits), jnp.float32)
+    return apply_policy(pol, sched, plan, bits_v), sched, plan
+
+
+def test_hierarchical_edge_latency_shifts_clock():
+    out0, _, _ = plan_with_speeds([1.0, 2.0, 1.0, 0.5])
+    out1, _, _ = plan_with_speeds([1.0, 2.0, 1.0, 0.5], latency=7.5)
+    # zero-latency sync/sync: the server clock is the slowest client...
+    assert float(out0.sim_time) == pytest.approx(2.0 / 0.5)
+    # ...and each edge→server hop adds exactly the latency
+    assert float(out1.sim_time) == pytest.approx(2.0 / 0.5 + 7.5)
+    np.testing.assert_array_equal(np.asarray(out0.participating),
+                                  np.asarray(out1.participating))
+
+
+def test_hierarchical_semi_sync_server_drops_slow_edge():
+    """server=semi_sync(1) over 2 edges: the whole slow edge (clients 2,3)
+    misses the aggregate; its clients keep state exactly like §5 drops."""
+    out, _, _ = plan_with_speeds(
+        [1.0, 1.0, 0.01, 0.01],               # edge 1 is 100x slower
+        server=AggregationPolicy.semi_sync(1))
+    np.testing.assert_array_equal(np.asarray(out.participating),
+                                  [True, True, False, False])
+    assert float(out.n_selected) == 2.0
+    assert float(out.edges_aggregated) == 1.0
+    # the server closed on the fast edge's clock
+    assert float(out.sim_time) == pytest.approx(2.0)
+    # mean-aggregation weights renormalise over the surviving edge
+    np.testing.assert_allclose(np.asarray(out.weight), [1.0, 1.0, 0.0, 0.0])
+
+
+def test_hierarchical_weights_sum_to_n_selected_under_drops():
+    """Uneven participation across edges: Σ weight == n_selected (the
+    masked_mean divisor), and each edge's clients split the edge's share
+    equally — the mean-of-edge-means reweighting."""
+    speeds = jnp.asarray([1.0, 1e-3, 1.0, 1.0], jnp.float32)
+    sched = ClientSchedule(
+        profile=ClientProfile(speed=speeds, bandwidth=jnp.ones((4,))),
+        deadline=2.0, drop_stragglers=True)     # client 1 drops (0 steps)
+    plan = sched.plan(jnp.arange(4), nominal_steps=2)
+    pol = validate_policy(hier(), 4)
+    out = apply_policy(pol, sched, plan, jnp.zeros((4,)))
+    np.testing.assert_array_equal(np.asarray(out.participating),
+                                  [True, False, True, True])
+    w = np.asarray(out.weight)
+    assert w.sum() == pytest.approx(float(out.n_selected))
+    # edge 0 contributes one client at weight 3·(1/2·1/1), edge 1 two at
+    # 3·(1/2·1/2): the lone-edge client carries its edge's full mean
+    np.testing.assert_allclose(w, [1.5, 0.0, 0.75, 0.75])
+
+
+def test_hierarchical_async_tier_runs_and_uses_delta_combine():
+    pol = hier(edge=AggregationPolicy.async_buffered(1, 0.5))
+    assert uses_delta_combine(pol)
+    assert not uses_delta_combine(hier())
+    assert uses_delta_combine(AggregationPolicy.async_buffered(2))
+    assert not uses_delta_combine(AggregationPolicy.sync())
+    st, m = run_fused(build("fedcomloc_ef", pol))
+    assert np.isfinite(np.asarray(st.x["w"])).all()
+    assert np.isfinite(np.asarray(m["train_loss"])).all()
+    # per-edge staleness levels surface in the composed staleness vector
+    assert np.asarray(m["client_staleness"]).max() >= 1.0
+    assert (np.asarray(m["edges_aggregated"]) == 2.0).all()
+
+
+def test_hierarchical_stepped_matches_fused():
+    pol = hier(server=AggregationPolicy.semi_sync(1))
+    a, b = build("fedavg", pol), build("fedavg", pol)
+    st_f, m_f = run_fused(a)
+    state = b.init(P0)
+    key = jax.random.PRNGKey(9)
+    for r in range(ROUNDS):
+        key, sub = jax.random.split(key)
+        state, m = b.round(state, sub)
+        for k in m:
+            np.testing.assert_array_equal(np.asarray(m_f[k])[r],
+                                          np.asarray(m[k]),
+                                          err_msg=f"r{r} {k}")
+    np.testing.assert_array_equal(np.asarray(st_f.x["w"]),
+                                  np.asarray(state.x["w"]))
+
+
+def test_hierarchical_validation():
+    assert validate_policy(hier(), 4).mode == "hierarchical"
+    with pytest.raises(ValueError, match="must divide"):
+        validate_policy(hier(n_edges=3), 4)
+    with pytest.raises(ValueError, match="wait_for"):
+        # edge tier semi_sync K is checked against the GROUP size s/E
+        validate_policy(hier(edge=AggregationPolicy.semi_sync(3)), 4)
+    # tier defaults resolve against their own tier width
+    pol = validate_policy(hier(server=AggregationPolicy.async_buffered()), 4)
+    assert pol.server.capacity == 2
+    with pytest.raises(TypeError, match="tiers must be flat"):
+        HierarchicalPolicy(edge=hier())
+    with pytest.raises(ValueError, match="n_edges"):
+        HierarchicalPolicy(n_edges=0)
+    with pytest.raises(ValueError, match="edge_latency"):
+        HierarchicalPolicy(edge_latency=-1.0)
+    assert hier().may_exclude and not hier().is_sync

@@ -198,3 +198,53 @@ def test_resume_matches_uninterrupted_run(tmp_path, policy):
         np.testing.assert_array_equal(
             np.asarray(ref_metrics[k])[r_save:], np.asarray(metrics_b[k]),
             err_msg=f"metric {k} after resume")
+
+
+# --------------------------------------------------------------------------- #
+# named load errors: structure mismatch + pre-'dtypes' manifests
+# --------------------------------------------------------------------------- #
+
+def test_structure_mismatch_raises_named_error(tmp_path):
+    path = tmp_path / "c.npz"
+    checkpoint.save(path, {"a": jnp.ones((3,)), "b": jnp.zeros((2,))})
+    with pytest.raises(checkpoint.CheckpointStructureError,
+                       match="stores 2 leaves but like= has 3"):
+        checkpoint.load(path, like={"a": jnp.ones((3,)),
+                                    "b": jnp.zeros((2,)),
+                                    "c": jnp.zeros(())})
+    assert issubclass(checkpoint.CheckpointStructureError, ValueError)
+
+
+def test_old_manifest_bf16_raises_named_error(tmp_path):
+    """A checkpoint written before the manifest recorded dtype names stores
+    bfloat16 leaves as opaque void bytes — load must fail with the named
+    error instead of handing a raw |V2 array to tree_unflatten."""
+    import json
+
+    path = tmp_path / "old.npz"
+    leaf = np.asarray(jnp.arange(4, dtype=jnp.bfloat16))
+    manifest = {"treedef": "PyTreeDef({'a': *})", "meta": {}, "n_leaves": 1}
+    np.savez(path, __manifest__=json.dumps(manifest), leaf_0=leaf)
+    with pytest.raises(checkpoint.CheckpointDtypeError,
+                       match="predates the 'dtypes' field"):
+        checkpoint.load(path, like={"a": jnp.zeros((4,), jnp.bfloat16)})
+    assert issubclass(checkpoint.CheckpointDtypeError, ValueError)
+    # non-extension dtypes in old checkpoints still load fine
+    path2 = tmp_path / "old_f32.npz"
+    np.savez(path2, __manifest__=json.dumps(manifest),
+             leaf_0=np.arange(4, dtype=np.float32))
+    out, _ = checkpoint.load(path2, like={"a": jnp.zeros((4,))})
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.arange(4, dtype=np.float32))
+
+
+def test_current_writer_roundtrips_bf16(tmp_path):
+    """The current manifest records dtype names, so extension dtypes
+    view-cast back losslessly."""
+    path = tmp_path / "bf16.npz"
+    tree = {"a": jnp.asarray([1.5, -2.25, 0.0], jnp.bfloat16)}
+    checkpoint.save(path, tree)
+    out, _ = checkpoint.load(path, like=tree)
+    assert out["a"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))

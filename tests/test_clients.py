@@ -442,3 +442,101 @@ def test_history_records_downlink_and_final_params():
     d_ = hist.as_dict()
     assert "downlink_bits" in d_ and "sim_time" in d_
     assert "final_params" not in d_   # json-friendly view
+
+
+# --------------------------------------------------------------------------- #
+# 7. finish_times / allocation-budget / availability regressions (§11 PR)
+# --------------------------------------------------------------------------- #
+
+def test_dropped_straggler_finish_is_exactly_deadline():
+    """Regression: a §5-dropped straggler transmits nothing, so its finish
+    time is the deadline EXACTLY — the uplink comm term must be zeroed for
+    non-participants inside finish_times, not trusted to callers.  The old
+    code added ``bits·bit_cost/bw`` on top of the deadline whenever the
+    caller passed unmasked bits, inflating ``sim_time``."""
+    n = 4
+    speed = jnp.asarray([1.0, 1.0, 1.0, 1e-3])    # client 3 finishes 0 steps
+    sched = ClientSchedule(
+        profile=ClientProfile(speed=speed, bandwidth=jnp.ones((n,))),
+        deadline=2.0, drop_stragglers=True, step_cost=1.0, bit_cost=1e-3)
+    plan = sched.plan(jnp.arange(n), nominal_steps=2)
+    assert not bool(plan.participating[3])
+    bits = jnp.full((n,), 1e6, jnp.float32)        # unmasked: bits for all
+    finish = np.asarray(sched.finish_times(plan, bits))
+    # the dropped straggler holds the round open until the deadline — and
+    # not a microsecond longer: it never transmits
+    assert finish[3] == 2.0
+    np.testing.assert_array_equal(
+        finish, np.asarray(sched.finish_times(plan, bits * plan.participating)))
+    # participants: compute + comm as before
+    np.testing.assert_allclose(finish[0], 2.0 * 1.0 + 1e6 * 1e-3 / 1.0,
+                               rtol=1e-6)
+    assert float(sched.sim_time(plan, bits)) == pytest.approx(1002.0)
+
+
+def test_bandwidth_density_allocation_preserves_budget():
+    """mean(density) == base_density even when the [floor, 1] clip binds —
+    the total bit budget must not silently drift with the clip."""
+    # heavy-tailed bandwidths: naive d_i = base·bw_i/mean clips hard at 1
+    bw = jnp.asarray([0.05, 0.1, 0.2, 0.4, 8.0, 20.0], jnp.float32)
+    prof = ClientProfile(speed=jnp.ones((6,)), bandwidth=bw)
+    for base in (0.3, 0.5, 0.8):
+        d = np.asarray(prof.with_density_allocation(
+            base, mode="bandwidth", floor=0.05).comp_params["density"])
+        assert (d >= 0.05 - 1e-6).all() and (d <= 1.0 + 1e-6).all()
+        np.testing.assert_allclose(d.mean(), base, atol=1e-6,
+                                   err_msg=f"budget drift at base={base}")
+        # fast links still carry denser payloads
+        assert d[-1] >= d[0]
+    # the unclipped case keeps the plain proportional formula
+    mild = ClientProfile(speed=jnp.ones((4,)),
+                         bandwidth=jnp.asarray([0.8, 0.9, 1.1, 1.2]))
+    d = np.asarray(mild.with_density_allocation(
+        0.5, mode="bandwidth").comp_params["density"])
+    np.testing.assert_allclose(d, 0.5 * np.asarray(mild.bandwidth), rtol=1e-6)
+    with pytest.raises(ValueError, match="outside"):
+        prof.with_density_allocation(0.01, mode="bandwidth", floor=0.05)
+
+
+def test_availability_weights_and_sampler():
+    from repro.core.clients import ClientAvailability
+    n, s = 12, 4
+    avail = ClientAvailability.diurnal(n, period=6.0, amp=1.0,
+                                       churn_rate=0.25, online_frac=0.5,
+                                       seed=7)
+    sched = ClientSchedule(profile=ClientProfile.homogeneous(n),
+                           availability=avail)
+    assert sched.may_drop and sched.heterogeneous_steps
+    w0 = np.asarray(avail.weights(0))
+    assert w0.shape == (n,) and (w0 >= 0).all() and (w0 <= 1).all()
+    # churn gates ~half the population fully offline
+    assert (w0 == 0).any() and (w0 > 0).any()
+    key = jax.random.PRNGKey(3)
+    for t in range(6):
+        clients, available = sched.sample_cohort(key, s, round_idx=t)
+        w = np.asarray(avail.weights(t))
+        c = np.asarray(clients)
+        assert len(set(c.tolist())) == s        # without replacement
+        online = w[c] > 0
+        np.testing.assert_array_equal(np.asarray(available), online)
+        # offline clients are only drawn when fewer than s are online
+        if (w > 0).sum() >= s:
+            assert online.all()
+    # the neutral path is exactly the historical uniform draw
+    plain = ClientSchedule.homogeneous(n)
+    clients, available = plain.sample_cohort(key, s)
+    assert available is None
+    np.testing.assert_array_equal(
+        np.asarray(clients),
+        np.asarray(jax.random.choice(key, n, (s,), replace=False)))
+
+
+def test_availability_size_mismatch_rejected():
+    from repro.core.clients import ClientAvailability
+    with pytest.raises(ValueError, match="availability"):
+        ClientSchedule(profile=ClientProfile.homogeneous(4),
+                       availability=ClientAvailability.diurnal(5))
+    with pytest.raises(ValueError, match="amp"):
+        ClientAvailability.diurnal(4, amp=1.5)
+    with pytest.raises(ValueError, match="online_frac"):
+        ClientAvailability.diurnal(4, online_frac=0.0)
