@@ -153,6 +153,11 @@ class FedAvg(RoundEngine):
         y = params0 if self.downlink != "dense" else ()
         return FedAvgState(x=params0, round=jnp.zeros((), jnp.int32), y=y)
 
+    @property
+    def _round_key_fanout(self):
+        # must mirror _round_impl's split below (§12 cohort planner)
+        return 4 if self.downlink != "dense" else 3
+
     def _round_impl(self, state: FedAvgState, key: jax.Array,
                     ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched
@@ -306,6 +311,11 @@ class Scaffold(RoundEngine):
         y = (params0, zeros) if self.downlink != "dense" else ()
         return ScaffoldState(x=params0, c=zeros, ci=ci,
                              round=jnp.zeros((), jnp.int32), y=y)
+
+    @property
+    def _round_key_fanout(self):
+        # must mirror _round_impl's split below (§12 cohort planner)
+        return 3 if self.downlink != "dense" else 2
 
     def _round_impl(self, state: ScaffoldState, key: jax.Array,
                     ctx: ClientAxisCtx = NULL_CTX):
@@ -481,6 +491,11 @@ class FedDyn(RoundEngine):
         y = params0 if self.downlink != "dense" else ()
         return FedDynState(x=params0, h=zeros, grads=g,
                            round=jnp.zeros((), jnp.int32), y=y)
+
+    @property
+    def _round_key_fanout(self):
+        # must mirror _round_impl's split below (§12 cohort planner)
+        return 3 if self.downlink != "dense" else 2
 
     def _round_impl(self, state: FedDynState, key: jax.Array,
                     ctx: ClientAxisCtx = NULL_CTX):

@@ -278,6 +278,18 @@ class ClientSchedule:
     possible when fewer than ``s`` clients are online) rides the
     straggler-drop machinery — zero steps, no uplink, excluded from the
     aggregate, holding nothing open on the sim clock.
+
+    ``sampler`` picks the weighted-draw implementation when an
+    availability process is attached: ``"gumbel"`` (the in-graph O(n)
+    Gumbel-top-k) or ``"tree"`` (the host-side O(s log n) segment-tree
+    sampler of :mod:`repro.core.sampling`, crossing the jit boundary
+    through one ordered ``io_callback`` — the population-scale choice,
+    see DESIGN.md §12).  Both are exact weighted sampling without
+    replacement over the same weights; they consume randomness
+    differently, so their cohort *sequences* differ while their
+    *distributions* agree.  Without an availability process the sampler
+    choice is inert and the uniform ``jax.random.choice`` path runs
+    unchanged (byte-identical trajectories).
     """
 
     profile: ClientProfile
@@ -286,6 +298,7 @@ class ClientSchedule:
     step_cost: float = 1.0
     bit_cost: float = 0.0
     availability: Optional[ClientAvailability] = None
+    sampler: str = "gumbel"
 
     def __post_init__(self):
         if self.deadline is not None and self.deadline <= 0:
@@ -296,6 +309,10 @@ class ClientSchedule:
             raise ValueError("bit_cost must be non-negative")
         if self.drop_stragglers and self.deadline is None:
             raise ValueError("drop_stragglers requires a deadline")
+        if self.sampler not in ("gumbel", "tree"):
+            raise ValueError(
+                f"unknown sampler {self.sampler!r}: expected 'gumbel' or "
+                f"'tree'")
         if (self.availability is not None
                 and self.availability.n_clients != self.profile.n_clients):
             raise ValueError(
@@ -325,7 +342,40 @@ class ClientSchedule:
     def comp_override_names(self):
         return tuple(sorted(self.profile.comp_params))
 
+    @property
+    def uses_host_sampler(self) -> bool:
+        """True when cohort draws run host-side (``sampler="tree"`` with
+        an availability process) — such schedules need an io_callback per
+        round and cannot run inside ``shard_map`` meshes."""
+        return self.sampler == "tree" and self.availability is not None
+
+    @property
+    def tree_sampler(self):
+        """The lazily-built per-schedule :class:`TreeSampler` (host
+        state: segment tree + draw memo shared by the in-graph callback
+        and the §12 prefetch planner)."""
+        if not self.uses_host_sampler:
+            raise ValueError("schedule does not use the tree sampler")
+        inst = getattr(self, "_tree_sampler", None)
+        if inst is None:
+            from .sampling import TreeSampler
+            inst = TreeSampler(self.availability)
+            object.__setattr__(self, "_tree_sampler", inst)
+        return inst
+
     # ------------------------------------------------------------------ #
+
+    def plan_cohort_host(self, key, s: int, round_idx: int):
+        """Host-side cohort draw for the §12 prefetch planner.
+
+        Returns numpy ``(clients (s,) int32, online (s,) bool)`` — the
+        exact arrays the in-graph ``sample_cohort`` callback will return
+        for the same ``(key, round_idx)`` (one memoised draw feeds both).
+        Only valid on ``uses_host_sampler`` schedules.
+        """
+        kd = (key if jnp.issubdtype(key.dtype, jnp.unsignedinteger)
+              else jax.random.key_data(key))
+        return self.tree_sampler.draw(np.asarray(kd), round_idx, s)
 
     def sample_cohort(self, key: jax.Array, s: int, round_idx=0):
         """Sample the round's cohort (s,) from the population (in-graph).
@@ -336,7 +386,10 @@ class ClientSchedule:
         drawn by Gumbel-top-k — weighted sampling without replacement
         proportional to ``availability.weights(round_idx)`` — and the
         returned ``available`` mask flags offline picks (only non-empty
-        when fewer than ``s`` clients are online that round).
+        when fewer than ``s`` clients are online that round).  With
+        ``sampler="tree"`` the weighted draw runs host-side in
+        O(s log n) (no O(n) ops or constants in the round graph) and
+        enters the graph through one ordered ``io_callback``.
 
         Returns ``(clients, available)`` with ``available=None`` on the
         neutral path.
@@ -344,6 +397,21 @@ class ClientSchedule:
         n = self.n_clients
         if self.availability is None:
             return jax.random.choice(key, n, (s,), replace=False), None
+        if self.sampler == "tree":
+            from jax.experimental import io_callback
+            sampler = self.tree_sampler
+            kd = (key if jnp.issubdtype(key.dtype, jnp.unsignedinteger)
+                  else jax.random.key_data(key))
+
+            def cb(kd_h, t_h):
+                clients, online = sampler.draw(kd_h, int(t_h), s)
+                return clients, online
+
+            clients, online = io_callback(
+                cb, (jax.ShapeDtypeStruct((s,), jnp.int32),
+                     jax.ShapeDtypeStruct((s,), jnp.bool_)),
+                kd, jnp.asarray(round_idx, jnp.int32), ordered=True)
+            return clients, online
         w = self.availability.weights(round_idx)
         online = w > 0.0
         # Gumbel-top-k: iid Gumbel noise + log-weights, top s scores ==

@@ -231,10 +231,64 @@ class RoundEngine:
                 "host-side client stores (HostStore) cannot run under a "
                 "client-axis mesh; use the in-memory store with meshes, or "
                 "drop the mesh for out-of-core populations")
+        if (mesh is not None and getattr(getattr(self, "sched", None),
+                                         "uses_host_sampler", False)):
+            # same restriction for the §12 host-side cohort sampler
+            raise ValueError(
+                "host-side cohort sampling (sampler='tree') cannot run "
+                "under a client-axis mesh; use sampler='gumbel' with "
+                "meshes")
         self._mesh = mesh
         self._mesh_axis = axis
         self._rebind_impl()
         return self
+
+    # ------------------------------------------------------------------ #
+
+    #: per-round key fanout: ``_round_impl`` draws its sampling key as
+    #: ``jax.random.split(key, fanout)[0]``.  Algorithms override this
+    #: (it depends on the bound downlink mode) so the §12 cohort planner
+    #: can replay the key chain host-side; ``None`` disables planning.
+    _round_key_fanout: Optional[int] = None
+
+    def _plan_cohorts(self, state, key: jax.Array, num_rounds: int,
+                      stepped: bool = False):
+        """Replay the upcoming rounds' sampling-key chain host-side and
+        hand the cohort schedule to a prefetching :class:`HostStore`.
+
+        The fused scan derives round r's key as r applications of
+        ``key, sub = jax.random.split(key)`` and its sampling key as
+        ``split(sub, fanout)[0]`` — all deterministic before the scan
+        launches.  Tree-sampler schedules draw each cohort in O(s log n)
+        (memoised, so the in-graph callback reuses the exact arrays);
+        neutral schedules replay the uniform ``jax.random.choice``
+        eagerly.  Gumbel schedules are not replayed (that would be the
+        O(n) work §12 removes) — the store then runs write-behind only.
+        The plan is a performance hint: a misprediction costs a prefetch
+        miss, never a wrong row (see ``client_store`` hazard rules).
+        """
+        store, sched = self.store, getattr(self, "sched", None)
+        if (not getattr(store, "prefetch", False) or self._mesh is not None
+                or sched is None or self._round_key_fanout is None):
+            return
+        if sched.availability is not None and not sched.uses_host_sampler:
+            return
+        s = self.cfg.clients_per_round
+        t0 = int(state.round)
+        cohorts = []
+        for r in range(num_rounds):
+            if stepped:
+                sub = key           # round() receives the round key itself
+            else:
+                key, sub = jax.random.split(key)
+            k_sample = jax.random.split(sub, self._round_key_fanout)[0]
+            if sched.uses_host_sampler:
+                clients, _ = sched.plan_cohort_host(k_sample, s, t0 + r)
+            else:
+                clients = np.asarray(jax.random.choice(
+                    k_sample, sched.n_clients, (s,), replace=False))
+            cohorts.append(clients)
+        store.submit_cohort_plan(cohorts)
 
     # ------------------------------------------------------------------ #
 
@@ -245,6 +299,7 @@ class RoundEngine:
         metrics (e.g. ``client_uplink_bits``, DESIGN.md §5) as numpy
         arrays.
         """
+        self._plan_cohorts(state, key, 1, stepped=True)
         state, metrics = self._round(state, key)
         out = {k: (np.asarray(v) if getattr(v, "ndim", 0) else float(v))
                for k, v in metrics.items()}
@@ -288,6 +343,7 @@ class RoundEngine:
         num_rounds = int(num_rounds)
         if num_rounds <= 0:
             raise ValueError("num_rounds must be positive")
+        self._plan_cohorts(state, key, num_rounds)
         state, metrics = self._fused(num_rounds)(state, key)
         self.meter.record_rounds(
             uplink_bits=metrics.get("uplink_bits"),

@@ -181,6 +181,11 @@ class FedComLoc(RoundEngine):
         g = jnp.floor(jnp.log1p(-u) / jnp.log1p(-self.cfg.p)).astype(jnp.int32) + 1
         return jnp.clip(g, 1, cap)
 
+    @property
+    def _round_key_fanout(self):
+        # must mirror _round_impl's split below (§12 cohort planner)
+        return 6 if self.downlink != "dense" else 5
+
     def _round_impl(self, state: FedComLocState, key: jax.Array,
                     ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched

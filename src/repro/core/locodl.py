@@ -156,6 +156,9 @@ class LoCoDL(RoundEngine):
                       / jnp.log1p(-self.cfg.p)).astype(jnp.int32) + 1
         return jnp.clip(g, 1, cap)
 
+    # one 5-way split for every mode — see _round_impl (§12 planner)
+    _round_key_fanout = 5
+
     def _round_impl(self, state: LoCoDLState, key: jax.Array,
                     ctx: ClientAxisCtx = NULL_CTX):
         cfg, sched = self.cfg, self.sched

@@ -1,0 +1,280 @@
+"""Pipelined HostStore (DESIGN.md §12): bit-identical to the plain store.
+
+Contracts:
+
+* **Bit-identity** — ``HostStore(prefetch=True)`` (write-behind scatters,
+  plan-driven cohort prefetch) produces byte-for-byte the trajectories of
+  the plain ``HostStore`` for all five algorithms, fused AND stepped,
+  with and without a cohort plan (gumbel schedules get no plan — pure
+  write-behind; tree/neutral schedules get planned prefetch).  Unlike the
+  host-vs-memory comparison (allclose on loss/params — different XLA
+  fusion), plain-vs-pipelined runs the SAME graph, so everything
+  including ``train_loss`` and params must be exactly equal;
+* **The plan is a hint** — prefetch hits on a correct plan, falls back
+  (miss/flush-stall) on a wrong one, invalidates staged rows a scatter
+  overlaps (RAW hazard) — never a wrong row;
+* **Checkpoint-resume mid-pipeline** — ``state_dict`` flushes the
+  write-behind queue, so save-at-r + fresh-store resume is bit-identical;
+* edge cases: all-dropped cohorts (thin population), memmap spooling,
+  worker-error surfacing.
+"""
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.core.client_store import HostStore
+
+from tests.test_client_store import (
+    ALGORITHMS, P0, ROUNDS, STATEFUL, build, churny_schedule, run_fused,
+    run_stepped)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tree_schedule():
+    return dataclasses.replace(churny_schedule(), sampler="tree")
+
+
+def assert_bit_identical(ref, got, label):
+    st_ref, m_ref = ref
+    st_got, m_got = got
+    for a, b in zip(jax.tree_util.tree_leaves(st_ref),
+                    jax.tree_util.tree_leaves(st_got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{label} state leaf")
+    assert set(m_ref) == set(m_got)
+    for k in m_ref:
+        np.testing.assert_array_equal(np.asarray(m_ref[k]),
+                                      np.asarray(m_got[k]),
+                                      err_msg=f"{label} metric {k}")
+
+
+# --------------------------------------------------------------------------- #
+# 1. pipelined == plain, all five algorithms, fused + stepped
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", ALGORITHMS)
+@pytest.mark.parametrize("schedule", ["gumbel", "tree"])
+def test_pipelined_matches_plain_fused(name, schedule):
+    sched_fn = churny_schedule if schedule == "gumbel" else tree_schedule
+    ref = run_fused(build(name, HostStore(), sched_fn()))
+    alg = build(name, HostStore(prefetch=True), sched_fn())
+    got = run_fused(alg)
+    alg.store.flush()
+    assert_bit_identical(ref, got, f"{name}/{schedule} fused")
+    tel = alg.store.telemetry()
+    if schedule == "tree" and name != "fedavg":
+        # planned prefetch actually engaged (fedavg has no store slots)
+        assert tel["prefetch_hits"] > 0
+    if schedule == "gumbel":
+        # no plan for in-graph gumbel sampling: write-behind only
+        assert tel["prefetch_hits"] == 0
+
+
+@pytest.mark.parametrize("name", ALGORITHMS)
+def test_pipelined_matches_plain_stepped(name):
+    sched = tree_schedule()
+    st_ref, ms_ref = run_stepped(build(name, HostStore(), sched))
+    alg = build(name, HostStore(prefetch=True), sched)
+    st_got, ms_got = run_stepped(alg)
+    alg.store.flush()
+    for a, b in zip(jax.tree_util.tree_leaves(st_ref),
+                    jax.tree_util.tree_leaves(st_got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{name} stepped state")
+    for r, (ma, mb) in enumerate(zip(ms_ref, ms_got)):
+        for k in ma:
+            np.testing.assert_array_equal(
+                np.asarray(ma[k]), np.asarray(mb[k]),
+                err_msg=f"{name} stepped r{r} {k}")
+
+
+def test_pipelined_matches_plain_with_mmap(tmp_path):
+    sched = tree_schedule()
+    ref = run_fused(build(
+        "locodl", HostStore(mmap_dir=tmp_path / "plain"), sched))
+    alg = build("locodl",
+                HostStore(mmap_dir=tmp_path / "pipe", prefetch=True), sched)
+    got = run_fused(alg)
+    alg.store.flush()
+    assert_bit_identical(ref, got, "locodl mmap pipelined")
+    assert list((tmp_path / "pipe").glob("*.mm")), "no memmap files spooled"
+
+
+def test_all_dropped_cohort_edge():
+    """Rounds where every sampled client is offline (near-empty churny
+    population) still pipeline bit-identically — gathers/scatters of
+    fully-dropped cohorts move rows for clients that then contribute
+    nothing."""
+    from repro.core.clients import (
+        ClientAvailability, ClientProfile, ClientSchedule)
+    n = 6
+    avail = ClientAvailability.diurnal(
+        n, period=5.0, amp=1.0, churn_rate=0.41, online_frac=0.08, seed=4)
+    sched = ClientSchedule(profile=ClientProfile.homogeneous(n),
+                           availability=avail, sampler="tree")
+    ref = run_fused(build("fedcomloc_ef", HostStore(), sched), rounds=8)
+    got = run_fused(build("fedcomloc_ef", HostStore(prefetch=True), sched),
+                    rounds=8)
+    agg = np.asarray(ref[1]["clients_aggregated"])
+    assert (agg == 0).any(), "schedule no longer produces an empty cohort"
+    assert_bit_identical(ref, got, "all-dropped cohort")
+    assert np.isfinite(np.asarray(got[1]["train_loss"])).all()
+
+
+# --------------------------------------------------------------------------- #
+# 2. plan-as-hint semantics: hits, misses, hazards
+# --------------------------------------------------------------------------- #
+
+def _token_plus_rows(store, name, tok, idx):
+    return store.gather(name, tok, jnp.asarray(idx))
+
+
+def test_correct_plan_hits_and_wrong_plan_falls_back():
+    store = HostStore(prefetch=True)
+    tok = store.init_slot("e", {"w": jnp.zeros((3,), jnp.float32)}, 50)
+    store.submit_cohort_plan([np.asarray([4, 9])])
+    store.flush()
+    assert store._staged        # plan[0] staged for the registered slot
+
+    rows = jax.jit(lambda t: store.gather("e", t, jnp.asarray([4, 9])))(tok)
+    np.testing.assert_array_equal(np.asarray(rows["w"]), np.zeros((2, 3)))
+    assert store.telemetry()["prefetch_hits"] == 1
+
+    # wrong plan: staged indices don't match the gather — sync fallback
+    store.submit_cohort_plan([np.asarray([1, 2])])
+    store.flush()
+    rows = jax.jit(lambda t: store.gather("e", t, jnp.asarray([7, 8])))(tok)
+    np.testing.assert_array_equal(np.asarray(rows["w"]), np.zeros((2, 3)))
+    tel = store.telemetry()
+    assert tel["prefetch_misses"] == 1
+    assert tel["rows_gathered"] == 4
+
+
+def test_raw_hazard_invalidates_staged_rows():
+    """A write-behind scatter overlapping the staged cohort must kill the
+    stale staging entry; the next gather re-reads post-write rows."""
+    store = HostStore(prefetch=True)
+    tok = store.init_slot("e", {"w": jnp.zeros((3,), jnp.float32)}, 50)
+    store.submit_cohort_plan([np.asarray([4, 9])])
+    store.flush()                              # rows 4, 9 staged (zeros)
+
+    @jax.jit
+    def write_then_read(tok):
+        tok = store.scatter("e", tok, jnp.asarray([9, 30]),
+                            {"w": jnp.ones((2, 3), jnp.float32)}, None)
+        return store.gather("e", tok, jnp.asarray([4, 9]))
+
+    rows = write_then_read(tok)
+    store.flush()
+    # row 9 reflects the scatter, NOT the stale staged zeros
+    np.testing.assert_array_equal(
+        np.asarray(rows["w"]), np.stack([np.zeros(3), np.ones(3)]))
+    tel = store.telemetry()
+    assert tel["raw_hazards"] == 1
+    assert tel["prefetch_hits"] == 0
+
+
+def test_disjoint_scatter_keeps_staged_rows():
+    store = HostStore(prefetch=True)
+    tok = store.init_slot("e", {"w": jnp.zeros((3,), jnp.float32)}, 50)
+    store.submit_cohort_plan([np.asarray([4, 9])])
+    store.flush()
+
+    @jax.jit
+    def write_then_read(tok):
+        tok = store.scatter("e", tok, jnp.asarray([30, 31]),
+                            {"w": jnp.ones((2, 3), jnp.float32)}, None)
+        return store.gather("e", tok, jnp.asarray([4, 9]))
+
+    rows = write_then_read(tok)
+    store.flush()
+    np.testing.assert_array_equal(np.asarray(rows["w"]), np.zeros((2, 3)))
+    tel = store.telemetry()
+    assert tel["raw_hazards"] == 0
+    assert tel["prefetch_hits"] == 1
+
+
+def test_replan_flushes_and_replaces_stale_staging():
+    store = HostStore(prefetch=True)
+    tok = store.init_slot("e", {"w": jnp.zeros((3,), jnp.float32)}, 50)
+    store.submit_cohort_plan([np.asarray([1, 2]), np.asarray([3, 4])])
+    store.flush()
+    store.submit_cohort_plan([np.asarray([5, 6])])
+    store.flush()
+    rows = jax.jit(lambda t: store.gather("e", t, jnp.asarray([5, 6])))(tok)
+    np.testing.assert_array_equal(np.asarray(rows["w"]), np.zeros((2, 3)))
+    assert store.telemetry()["prefetch_hits"] == 1
+
+
+def test_worker_error_surfaces():
+    store = HostStore(prefetch=True)
+    store.init_slot("e", {"w": jnp.zeros((3,), jnp.float32)}, 50)
+    with store._cond:
+        store._queue.append(("apply", "ghost", np.asarray([0]),
+                             [np.zeros((1, 3), np.float32)]))
+        store._pending += 1
+        store._cond.notify_all()
+    store._ensure_worker()
+    with pytest.raises(RuntimeError, match="pipeline worker failed"):
+        store.flush()
+
+
+# --------------------------------------------------------------------------- #
+# 3. checkpoint-resume mid-pipeline
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", STATEFUL)
+def test_resume_mid_pipeline_matches_uninterrupted(name, tmp_path):
+    """``state_dict`` is a flush barrier: checkpointing right after a
+    fused chunk (write-behind scatters possibly still queued) captures
+    every committed row, and a fresh pipelined store resumes
+    bit-identically."""
+    sched = tree_schedule()
+    R, r_save = ROUNDS, 2
+    key0 = jax.random.PRNGKey(11)
+    ref = run_fused(build(name, HostStore(prefetch=True), sched))
+
+    a = build(name, HostStore(prefetch=True), sched)
+    state, _ = a.run_rounds(a.init(P0), key0, r_save)
+    key = key0
+    for _ in range(r_save):
+        key, _ = jax.random.split(key)
+    path = tmp_path / "mid.npz"
+    checkpoint.save(path, {"state": state, "key": key,
+                           "store": a.store.state_dict()},
+                    meta={"rounds_done": r_save})
+
+    b = build(name, HostStore(prefetch=True), sched)
+    like = {"state": b.init(P0), "key": key0,
+            "store": b.store.state_dict()}
+    restored, _ = checkpoint.load(path, like=like)
+    b.store.load_state_dict(restored["store"])
+    st_b, m_b = b.run_rounds(restored["state"], restored["key"], R - r_save)
+    b.store.flush()
+
+    st_ref, m_ref = ref
+    np.testing.assert_array_equal(np.asarray(st_ref.x["w"]),
+                                  np.asarray(st_b.x["w"]),
+                                  err_msg=f"{name} resume params")
+    for k in m_ref:
+        np.testing.assert_array_equal(
+            np.asarray(m_ref[k])[r_save:], np.asarray(m_b[k]),
+            err_msg=f"{name} metric {k} after resume")
+
+
+# --------------------------------------------------------------------------- #
+# 4. engine guards
+# --------------------------------------------------------------------------- #
+
+def test_tree_sampler_rejects_mesh():
+    from repro.launch.mesh import make_client_mesh
+    alg = build("fedavg", None, tree_schedule())
+    with pytest.raises(ValueError, match="host-side cohort sampling"):
+        alg.use_mesh(make_client_mesh(1))

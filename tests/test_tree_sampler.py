@@ -1,0 +1,275 @@
+"""TreeSampler (DESIGN.md §12): O(s log n) host-side cohort sampling.
+
+Contracts:
+
+* **Neutral path untouched** — ``sampler="tree"`` without an availability
+  process is byte-identical to ``jax.random.choice`` (the tree only
+  engages on weighted draws);
+* **Distribution equivalence** — the tree draw is weighted sampling
+  without replacement proportional to ``availability.weights(t)``:
+  chi-square on the first-pick marginal at small n, and inclusion
+  frequencies matching the Gumbel-top-k sampler's;
+* **Cohort validity** — no duplicates, ``online`` mask mirrors positive
+  weights at the picks, offline padding takes the lowest-indexed
+  unselected clients (the Gumbel path's ``lax.top_k`` tie-break);
+* **Incremental gate maintenance** — arc-search updates equal a full
+  rebuild at every round, including multi-step advances and the
+  rebuild-threshold jump;
+* **Determinism** — draws are pure functions of ``(key, t, s)``, memoised
+  so planner and in-graph callback share one cohort; fused and stepped
+  engine runs agree.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.clients import (
+    ClientAvailability, ClientProfile, ClientSchedule)
+from repro.core.sampling import TreeSampler
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_avail(n, *, period=7.0, amp=0.6, churn_rate=0.0, online_frac=1.0,
+               seed=0):
+    return ClientAvailability.diurnal(
+        n, period=period, amp=amp, churn_rate=churn_rate,
+        online_frac=online_frac, seed=seed)
+
+
+def make_sched(avail, sampler="tree"):
+    return ClientSchedule(
+        profile=ClientProfile.homogeneous(avail.n_clients),
+        availability=avail, sampler=sampler)
+
+
+def key_data(i):
+    return np.asarray(jax.random.key_data(jax.random.PRNGKey(i)))
+
+
+# --------------------------------------------------------------------------- #
+# 1. neutral path: byte-identical to jax.random.choice
+# --------------------------------------------------------------------------- #
+
+def test_neutral_path_byte_identical_to_choice():
+    n, s = 40, 8
+    sched = ClientSchedule(profile=ClientProfile.homogeneous(n),
+                           sampler="tree")
+    for i in range(20):
+        key = jax.random.PRNGKey(i)
+        got, online = sched.sample_cohort(key, s, round_idx=i)
+        ref = jax.random.choice(key, n, (s,), replace=False)
+        assert online is None
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_unknown_sampler_rejected():
+    with pytest.raises(ValueError, match="unknown sampler"):
+        ClientSchedule(profile=ClientProfile.homogeneous(4),
+                       sampler="reservoir")
+
+
+# --------------------------------------------------------------------------- #
+# 2. distribution equivalence
+# --------------------------------------------------------------------------- #
+
+def test_first_pick_marginal_chi_square():
+    """s=1 draws hit client i with probability w_i / sum(w): chi-square
+    over n=8 bins, ~20k draws, threshold far above the df=7 0.999
+    quantile (24.3) so the test only fires on a real distribution bug."""
+    n, trials = 8, 20000
+    avail = make_avail(n, amp=0.6, seed=3)
+    sampler = TreeSampler(avail)
+    t = 2
+    w = np.asarray(avail.weights(t), np.float64)
+    p = w / w.sum()
+    counts = np.zeros(n)
+    for i in range(trials):
+        clients, online = sampler.draw(key_data(i), t, 1)
+        assert online[0]
+        counts[clients[0]] += 1
+    expected = trials * p
+    chi2 = ((counts - expected) ** 2 / expected).sum()
+    assert chi2 < 35.0, f"chi2={chi2:.1f}, counts={counts}, exp={expected}"
+
+
+def test_inclusion_frequency_matches_gumbel():
+    """Without-replacement cohorts: per-client inclusion frequencies of
+    the tree sampler match the Gumbel-top-k reference within sampling
+    noise (5000 trials, tolerance 0.04)."""
+    n, s, trials = 10, 3, 5000
+    avail = make_avail(n, amp=0.7, seed=5)
+    t = 4
+
+    tree = TreeSampler(avail)
+    inc_tree = np.zeros(n)
+    for i in range(trials):
+        clients, _ = tree.draw(key_data(i), t, s)
+        inc_tree[clients] += 1
+
+    sched = make_sched(avail, sampler="gumbel")
+
+    @jax.jit
+    def gumbel_draw(key):
+        clients, online = sched.sample_cohort(key, s, round_idx=t)
+        return clients
+
+    inc_g = np.zeros(n)
+    for i in range(trials):
+        inc_g[np.asarray(gumbel_draw(jax.random.PRNGKey(i)))] += 1
+
+    np.testing.assert_allclose(inc_tree / trials, inc_g / trials,
+                               atol=0.04)
+
+
+# --------------------------------------------------------------------------- #
+# 3. cohort validity
+# --------------------------------------------------------------------------- #
+
+def test_no_duplicates_and_online_mask():
+    n, s = 64, 12
+    avail = make_avail(n, amp=0.9, churn_rate=0.23, online_frac=0.5,
+                       seed=7)
+    sampler = TreeSampler(avail)
+    for t in range(30):
+        clients, online = sampler.draw(key_data(t), t, s)
+        assert clients.shape == (s,) and online.shape == (s,)
+        assert len(np.unique(clients)) == s, "duplicate client in cohort"
+        w = np.asarray(avail.weights(t))
+        # every client flagged online has positive weight
+        assert (w[clients[online]] > 0).all()
+
+
+def test_offline_padding_is_lowest_index_unselected():
+    """When fewer than s clients are online, the cohort is padded with
+    the lowest-indexed unselected clients — matching lax.top_k's
+    tie-break on the Gumbel path's -inf scores."""
+    n, s = 12, 6
+    avail = make_avail(n, amp=0.5, churn_rate=0.31, online_frac=0.2,
+                       seed=11)
+    sampler = TreeSampler(avail)
+    saw_pad = False
+    for t in range(40):
+        clients, online = sampler.draw(key_data(t), t, s)
+        k = int(online.sum())
+        if k == s:
+            continue
+        saw_pad = True
+        # online picks first, then offline pads
+        assert online[:k].all() and not online[k:].any()
+        pads = clients[k:]
+        unselected = np.setdiff1d(np.arange(n), clients[:k])
+        np.testing.assert_array_equal(np.sort(pads), unselected[:s - k])
+    assert saw_pad, "thin schedule never padded — tighten online_frac"
+
+
+def test_rejection_cap_falls_back_to_exact(monkeypatch):
+    """A zeroed proposal budget forces the exact Gumbel fallback — the
+    draw must still be a valid, duplicate-free weighted cohort."""
+    import repro.core.sampling as sampling
+    monkeypatch.setattr(sampling, "_REJECTION_CAP_PER_PICK", 0)
+    n, s = 32, 5
+    avail = make_avail(n, amp=0.8, seed=2)
+    sampler = TreeSampler(avail)
+    clients, online = sampler.draw(key_data(0), 3, s)
+    assert sampler.fallback_draws > 0
+    assert len(np.unique(clients)) == s
+    assert online.all()
+    w = np.asarray(avail.weights(3))
+    assert (w[clients] > 0).all()
+
+
+# --------------------------------------------------------------------------- #
+# 4. incremental gate maintenance == full rebuild
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("churn_rate,online_frac", [
+    (0.37, 0.34), (0.05, 0.8), (0.49, 0.1)])
+def test_incremental_gate_equals_rebuild(churn_rate, online_frac):
+    n = 257                       # off power-of-two: exercises tree padding
+    avail = make_avail(n, churn_rate=churn_rate, online_frac=online_frac,
+                       seed=13)
+    inc = TreeSampler(avail)
+    ref = TreeSampler(avail)
+    inc._rebuild(0)
+    for t in range(1, 120):
+        inc._advance_to(t)        # arc-search incremental path
+        ref._rebuild(t)           # exact recompute
+        np.testing.assert_array_equal(inc._gate, ref._gate,
+                                      err_msg=f"gate diverged at t={t}")
+        np.testing.assert_array_equal(inc._tree, ref._tree,
+                                      err_msg=f"tree diverged at t={t}")
+    assert inc.incremental_updates > 0
+
+
+def test_jumps_and_backward_rebuild():
+    n = 64
+    avail = make_avail(n, churn_rate=0.37, online_frac=0.34, seed=17)
+    s = TreeSampler(avail)
+    ref = TreeSampler(avail)
+    # forward jump past the rebuild threshold (dt * churn > 0.5) and a
+    # backward jump both trigger a rebuild; small jumps stay incremental
+    for t in [0, 1, 3, 500, 501, 2, 50]:
+        s._advance_to(t)
+        ref._rebuild(t)
+        np.testing.assert_array_equal(s._gate, ref._gate,
+                                      err_msg=f"gate diverged at t={t}")
+    assert s.full_rebuilds >= 3   # t=0, t=500 (jump), t=2 (backward)
+    assert s.incremental_updates > 0
+
+
+def test_gate_matches_weights_support():
+    """The tree's churn gate equals the support of ``weights(t)``'s gate
+    factor (same f32 formula) round for round."""
+    n = 128
+    avail = make_avail(n, amp=0.0, churn_rate=0.29, online_frac=0.4,
+                       seed=23)
+    sampler = TreeSampler(avail)
+    for t in range(60):
+        sampler._advance_to(t)
+        w = np.asarray(avail.weights(t))
+        np.testing.assert_array_equal(sampler._gate, w > 0.0,
+                                      err_msg=f"gate != weights support "
+                                              f"at t={t}")
+
+
+# --------------------------------------------------------------------------- #
+# 5. determinism & memoisation
+# --------------------------------------------------------------------------- #
+
+def test_draw_is_memoised_and_deterministic():
+    n, s = 50, 8
+    avail = make_avail(n, amp=0.6, churn_rate=0.2, online_frac=0.6,
+                       seed=29)
+    a = TreeSampler(avail)
+    kd = key_data(9)
+    c1, o1 = a.draw(kd, 5, s)
+    c2, o2 = a.draw(kd, 5, s)      # memo hit: identical objects
+    assert c1 is c2 and o1 is o2
+    b = TreeSampler(avail)         # fresh instance: same result
+    b._advance_to(3)               # ...even from a different gate state
+    c3, o3 = b.draw(kd, 5, s)
+    np.testing.assert_array_equal(c1, c3)
+    np.testing.assert_array_equal(o1, o3)
+
+
+def test_engine_fused_equals_stepped_with_tree_sampler():
+    """The in-graph tree callback and the host planner agree: a fused
+    multi-round scan and the same rounds stepped one by one produce the
+    same trajectory (InMemoryStore — the sampler is store-independent)."""
+    from tests.test_client_store import build, run_fused, run_stepped
+    import dataclasses as dc
+    from tests.test_client_store import churny_schedule
+    sched = dc.replace(churny_schedule(), sampler="tree")
+    st_f, m_f = run_fused(build("fedcomloc_ef", None, sched))
+    st_s, m_s = run_stepped(build("fedcomloc_ef", None, sched))
+    np.testing.assert_allclose(np.asarray(st_f.x["w"]),
+                               np.asarray(st_s.x["w"]), rtol=1e-6)
+    for r, ms in enumerate(m_s):
+        np.testing.assert_allclose(
+            np.asarray(m_f["clients_aggregated"])[r],
+            np.asarray(ms["clients_aggregated"]),
+            err_msg=f"round {r} cohort size diverged")
